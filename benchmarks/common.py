@@ -1,0 +1,28 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.sim.engine import geomean, simulate, speedup_table  # noqa: E402
+from repro.sim.policies import (ALL_POLICIES, IC_MALLOC, IC_PLUS_SIGNALS,  # noqa: E402
+                                JEMALLOC, MALLACC, MEMENTO, MIMALLOC,
+                                SPEEDMALLOC, SPEEDMALLOC_FULL, TCMALLOC)
+from repro.sim.workloads import (ALL_WORKLOADS, MULTI_THREADED,  # noqa: E402
+                                 PAPER_GEOMEAN, PAPER_TABLE3, SINGLE_THREADED)
+
+SEVEN_POLICIES = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO,
+                  IC_MALLOC, SPEEDMALLOC]
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

@@ -1,0 +1,16 @@
+"""Fig. 8: single-threaded speedups (Espresso, Cfrac, Redis x6)."""
+from .common import (SEVEN_POLICIES, SINGLE_THREADED, csv_row, geomean,
+                     speedup_table, timed)
+
+
+def run() -> list[str]:
+    table, us = timed(speedup_table, list(SINGLE_THREADED.values()),
+                      SEVEN_POLICIES, threads=1)
+    rows = []
+    for wl, r in table.items():
+        rows.append(csv_row(f"fig08/{wl}/speedmalloc_vs_jemalloc", us / len(table),
+                            f"{r['speedmalloc']:.3f}x"))
+    gm = geomean(r["speedmalloc"] for r in table.values())
+    rows.append(csv_row("fig08/geomean/speedmalloc_vs_jemalloc", us,
+                        f"{gm:.3f}x (paper ~1.09x)"))
+    return rows

@@ -1,0 +1,18 @@
+"""Fig. 9: multi-threaded speedups over Jemalloc for 1..16 threads."""
+from .common import (MULTI_THREADED, SEVEN_POLICIES, csv_row, geomean,
+                     speedup_table, timed)
+
+PAPER_SPEED_VS_JE = {1: 1.39, 2: 1.40, 4: 1.58, 8: 1.73, 16: 1.75}
+
+
+def run() -> list[str]:
+    rows = []
+    for T in (1, 2, 4, 8, 16):
+        table, us = timed(speedup_table, list(MULTI_THREADED.values()),
+                          SEVEN_POLICIES, threads=T)
+        for pol in ("tcmalloc", "mimalloc", "speedmalloc"):
+            gm = geomean(r[pol] for r in table.values())
+            note = (f"{gm:.3f}x" + (f" (paper {PAPER_SPEED_VS_JE[T]:.2f}x)"
+                                    if pol == "speedmalloc" else ""))
+            rows.append(csv_row(f"fig09/{T}threads/{pol}_vs_jemalloc", us, note))
+    return rows

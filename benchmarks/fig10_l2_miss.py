@@ -1,0 +1,20 @@
+"""Fig. 10: L2 miss cycles @16T — SpeedMalloc's pollution elimination."""
+from .common import MULTI_THREADED, SEVEN_POLICIES, csv_row, geomean, timed
+from repro.sim.engine import simulate
+
+
+def run() -> list[str]:
+    rows = []
+    reductions = {}
+    for base in ("jemalloc", "tcmalloc", "mimalloc"):
+        vals = []
+        for wl in MULTI_THREADED.values():
+            b = simulate(wl, next(p for p in SEVEN_POLICIES if p.name == base), 16)
+            s = simulate(wl, next(p for p in SEVEN_POLICIES if p.name == "speedmalloc"), 16)
+            vals.append(1.0 - s["l2_miss_cycles"] / max(b["l2_miss_cycles"], 1e-9))
+        reductions[base] = sum(vals) / len(vals)
+    paper = {"jemalloc": 0.4236, "tcmalloc": 0.1876, "mimalloc": 0.2280}
+    for base, red in reductions.items():
+        rows.append(csv_row(f"fig10/l2_miss_reduction_vs_{base}", 0,
+                            f"{red:.1%} (paper {paper[base]:.1%})"))
+    return rows

@@ -1,0 +1,16 @@
+"""Fig. 11: atomic-instruction cycles / jemalloc total @16T."""
+from .common import MULTI_THREADED, SEVEN_POLICIES, csv_row, timed
+from repro.sim.engine import simulate
+
+
+def run() -> list[str]:
+    rows = []
+    for wl in MULTI_THREADED.values():
+        je = simulate(wl, SEVEN_POLICIES[0], 16)
+        frac = {p.name: simulate(wl, p, 16)["atomic_cycles"] / je["cycles_per_1k"]
+                for p in SEVEN_POLICIES}
+        rows.append(csv_row(
+            f"fig11/{wl.name}", 0,
+            f"je {frac['jemalloc']:.1%} tc {frac['tcmalloc']:.1%} "
+            f"mi {frac['mimalloc']:.1%} speed {frac['speedmalloc']:.1%} (of je cycles)"))
+    return rows

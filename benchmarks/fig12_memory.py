@@ -1,0 +1,18 @@
+"""Fig. 12: peak memory consumption @16T (SpeedMalloc ~= TC/Mi +-few %)."""
+from .common import MULTI_THREADED, SEVEN_POLICIES, csv_row, geomean
+from repro.sim.engine import simulate
+
+
+def run() -> list[str]:
+    rows = []
+    ratios_tc, ratios_mi = [], []
+    for wl in MULTI_THREADED.values():
+        cells = {p.name: simulate(wl, p, 16)["peak_bytes"] for p in SEVEN_POLICIES}
+        ratios_tc.append(cells["speedmalloc"] / max(cells["tcmalloc"], 1.0))
+        ratios_mi.append(cells["speedmalloc"] / max(cells["mimalloc"], 1.0))
+        rows.append(csv_row(f"fig12/{wl.name}", 0,
+                            f"speed/tc {ratios_tc[-1]:.3f} speed/mi {ratios_mi[-1]:.3f}"))
+    rows.append(csv_row("fig12/geomean", 0,
+                        f"speed/tc {geomean(ratios_tc):.3f} (paper ~1.01) "
+                        f"speed/mi {geomean(ratios_mi):.3f} (paper ~1.01)"))
+    return rows

@@ -1,0 +1,23 @@
+"""Fig. 13: relative energy savings for 2..16 cores."""
+from .common import MULTI_THREADED, SEVEN_POLICIES, csv_row, geomean
+from repro.sim.engine import simulate
+
+PAPER = {("jemalloc", 16): 1.69, ("tcmalloc", 16): 1.15, ("mimalloc", 16): 1.12}
+
+
+def run() -> list[str]:
+    rows = []
+    for T in (2, 4, 8, 16):
+        savings = {}
+        for base in ("jemalloc", "tcmalloc", "mimalloc", "mallacc", "memento"):
+            vals = []
+            for wl in MULTI_THREADED.values():
+                b = simulate(wl, next(p for p in SEVEN_POLICIES if p.name == base), T)
+                s = simulate(wl, next(p for p in SEVEN_POLICIES if p.name == "speedmalloc"), T)
+                vals.append(b["energy"] / max(s["energy"], 1e-9))
+            savings[base] = geomean(vals)
+        note = " ".join(f"{k} {v:.2f}x" for k, v in savings.items())
+        if T == 16:
+            note += " (paper je 1.69 tc 1.15 mi 1.12 mall 1.26 mem 1.22)"
+        rows.append(csv_row(f"fig13/{T}cores/energy_savings", 0, note))
+    return rows

@@ -1,0 +1,44 @@
+"""Fig. 15: static L2 way-partitioning for allocator metadata vs SpeedMalloc.
+
+Dedicating w of 8 ways to metadata removes pollution but shrinks user
+capacity: user miss cycles scale by ((8-w)/8)^-0.5 under the power-law miss
+curve.  The paper finds 7-12% slowdowns on several workloads — partitioning
+is not a general substitute (§6.4.1).
+"""
+import dataclasses
+
+from repro.sim.engine import simulate
+from repro.sim.workloads import MULTI_THREADED
+
+from .common import SEVEN_POLICIES, csv_row, geomean
+
+TC = next(p for p in SEVEN_POLICIES if p.name == "tcmalloc")
+SPEED = next(p for p in SEVEN_POLICIES if p.name == "speedmalloc")
+
+
+def run() -> list[str]:
+    rows = []
+    for ways_md in (1, 2):
+        ratios = []
+        for wl in MULTI_THREADED.values():
+            base = simulate(wl, TC, 16)
+            # partitioned: no pollution, smaller user cache
+            u_scale = ((8 - ways_md) / 8.0) ** -0.5
+            wl2 = dataclasses.replace(
+                wl, user_miss_cycles=max(wl.user_miss_cycles, 1.0) * u_scale)
+            part = simulate(wl2, TC._replace(md_ws_lines_per_thread=0.0,
+                                             md_lines_per_op=0.0), 16)
+            ratios.append(base["cycles_per_1k"] / part["cycles_per_1k"])
+            rows.append(csv_row(
+                f"fig15/{wl.name}/partition_{8 - ways_md}-{ways_md}", 0,
+                f"{ratios[-1]:.3f}x vs unpartitioned tcmalloc"))
+        rows.append(csv_row(f"fig15/geomean/partition_{8 - ways_md}-{ways_md}", 0,
+                            f"{geomean(ratios):.3f}x (paper: mixed, some -7..12%)"))
+    # SpeedMalloc reference: beats every partitioning configuration
+    sp = []
+    for wl in MULTI_THREADED.values():
+        sp.append(simulate(wl, TC, 16)["cycles_per_1k"]
+                  / simulate(wl, SPEED, 16)["cycles_per_1k"])
+    rows.append(csv_row("fig15/geomean/speedmalloc", 0,
+                        f"{geomean(sp):.3f}x vs tcmalloc (general win)"))
+    return rows

@@ -1,0 +1,31 @@
+"""Fig. 16: growing main-core L2 capacity is not a one-fit-all alternative.
+
+Under the power-law miss curve, user miss cycles scale by ratio^-0.5; the
+atomic-synchronization term is untouched — so capacity helps miss-bound
+workloads only (paper: 2x -> 1.04x, 8x -> 1.17x geomean for mimalloc).
+"""
+import dataclasses
+
+from repro.sim.engine import geomean, simulate
+from repro.sim.workloads import MULTI_THREADED
+
+from .common import SEVEN_POLICIES, csv_row
+
+MI = next(p for p in SEVEN_POLICIES if p.name == "mimalloc")
+
+
+def run() -> list[str]:
+    rows = []
+    for ratio, paper in ((2, 1.04), (4, None), (8, 1.17)):
+        speeds = []
+        for wl in MULTI_THREADED.values():
+            base = simulate(wl, MI, 16)
+            wl2 = dataclasses.replace(
+                wl, user_miss_cycles=max(wl.user_miss_cycles, 1.0) * ratio ** -0.5)
+            big = simulate(wl2, MI, 16)
+            speeds.append(base["cycles_per_1k"] / big["cycles_per_1k"])
+        note = f"{geomean(speeds):.3f}x"
+        if paper:
+            note += f" (paper {paper:.2f}x)"
+        rows.append(csv_row(f"fig16/mimalloc_l2_x{ratio}", 0, note))
+    return rows

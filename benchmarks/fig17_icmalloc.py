@@ -1,0 +1,22 @@
+"""Fig. 17: IC-Malloc ablation — decoupling alone loses; signals and HMQ
+recover and surpass TCMalloc (the paper's core architectural argument)."""
+from repro.sim.engine import geomean, speedup_table
+from repro.sim.policies import (IC_MALLOC, IC_PLUS_SIGNALS, JEMALLOC,
+                                SPEEDMALLOC_FULL, TCMALLOC)
+from repro.sim.workloads import MULTI_THREADED
+
+from .common import csv_row, timed
+
+
+def run() -> list[str]:
+    table, us = timed(speedup_table, list(MULTI_THREADED.values()),
+                      [JEMALLOC, TCMALLOC, IC_MALLOC, IC_PLUS_SIGNALS,
+                       SPEEDMALLOC_FULL], threads=16)
+    tc = geomean(r["tcmalloc"] for r in table.values())
+    rows = []
+    for name, paper in [("ic-malloc", "<1 vs tc"), ("ic+signals", "~1.09x vs tc"),
+                        ("ic+signals+hmq", "~1.18x vs tc")]:
+        gm = geomean(r[name] for r in table.values())
+        rows.append(csv_row(f"fig17/{name}", us / 3,
+                            f"{gm / tc:.3f}x vs tcmalloc (paper {paper})"))
+    return rows

@@ -1,0 +1,19 @@
+"""Deliverable (g): roofline terms per (arch x shape) from the dry-run."""
+from repro.launch.roofline import full_table
+
+from .common import csv_row
+
+
+def run() -> list[str]:
+    rows = []
+    for r in full_table():
+        if r.get("status") == "ok":
+            rows.append(csv_row(
+                f"roofline/{r['arch']}/{r['shape']}", 0,
+                f"comp {r['compute_s']:.3f}s mem {r['memory_s']:.3f}s "
+                f"coll {r['collective_s']:.3f}s dom={r['dominant']} "
+                f"frac={r['roofline_fraction']:.3f}"))
+        else:
+            rows.append(csv_row(f"roofline/{r['arch']}/{r['shape']}", 0,
+                                r.get("status", "?")))
+    return rows

@@ -1,0 +1,23 @@
+"""Table 3: per-workload speedups over Jemalloc @ 16 threads vs paper."""
+from .common import (MULTI_THREADED, PAPER_TABLE3, SEVEN_POLICIES, csv_row,
+                     geomean, speedup_table, timed)
+
+
+def run() -> list[str]:
+    table, us = timed(speedup_table, list(MULTI_THREADED.values()),
+                      SEVEN_POLICIES, threads=16)
+    rows = []
+    per = us / max(len(table), 1)
+    for wl, r in table.items():
+        tc_p, mi_p, sp_p = PAPER_TABLE3[wl]
+        rows.append(csv_row(
+            f"table3/{wl}", per,
+            f"tc {r['tcmalloc']:.2f}/{tc_p:.2f} mi {r['mimalloc']:.2f}/{mi_p:.2f} "
+            f"sp {r['speedmalloc']:.2f}/{sp_p:.2f} (sim/paper)"))
+    for pol, paper in [("tcmalloc", 1.48), ("mimalloc", 1.52),
+                       ("speedmalloc", 1.75), ("mallacc", 1.75 / 1.23),
+                       ("memento", 1.75 / 1.18)]:
+        gm = geomean(r[pol] for r in table.values())
+        rows.append(csv_row(f"table3/geomean/{pol}", per,
+                            f"{gm:.3f}x (paper {paper:.2f}x)"))
+    return rows

@@ -1,0 +1,39 @@
+"""Paper-claims reproduction in one command: Table 3 + the Fig. 17 ablation.
+
+Run:  PYTHONPATH=src python examples/allocator_sim.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.sim.engine import geomean, speedup_table
+from repro.sim.policies import (IC_MALLOC, IC_PLUS_SIGNALS, JEMALLOC, MALLACC,
+                                MEMENTO, MIMALLOC, SPEEDMALLOC,
+                                SPEEDMALLOC_FULL, TCMALLOC)
+from repro.sim.workloads import MULTI_THREADED, PAPER_TABLE3
+
+pols = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO, IC_MALLOC, SPEEDMALLOC]
+table = speedup_table(list(MULTI_THREADED.values()), pols, threads=16)
+
+print(f"{'workload':11s} {'tcmalloc':>14s} {'mimalloc':>14s} {'speedmalloc':>14s}")
+print(f"{'':11s} {'sim / paper':>14s} {'sim / paper':>14s} {'sim / paper':>14s}")
+for wl, r in table.items():
+    tc, mi, sp = PAPER_TABLE3[wl]
+    print(f"{wl:11s} {r['tcmalloc']:6.2f} / {tc:4.2f} "
+          f"{r['mimalloc']:6.2f} / {mi:4.2f} {r['speedmalloc']:6.2f} / {sp:4.2f}")
+gm = {p.name: geomean(r[p.name] for r in table.values()) for p in pols}
+print("\ngeomean speedup over jemalloc @ 16 threads:")
+for name, paper in [("tcmalloc", 1.48), ("mimalloc", 1.52), ("speedmalloc", 1.75),
+                    ("mallacc", 1.42), ("memento", 1.48)]:
+    tag = " (calibrated)" if name in ("tcmalloc", "mimalloc") else " (PREDICTED)"
+    tag = "" if name == "speedmalloc" else tag
+    print(f"  {name:12s} sim {gm[name]:.2f}x   paper {paper:.2f}x{tag}")
+
+abl = speedup_table(list(MULTI_THREADED.values()),
+                    [JEMALLOC, TCMALLOC, IC_MALLOC, IC_PLUS_SIGNALS,
+                     SPEEDMALLOC_FULL], threads=16)
+tc = geomean(r["tcmalloc"] for r in abl.values())
+print("\nFig. 17 ablation (vs tcmalloc):")
+for n in ("ic-malloc", "ic+signals", "ic+signals+hmq"):
+    print(f"  {n:16s} {geomean(r[n] for r in abl.values()) / tc:.2f}x")

@@ -1,0 +1,16 @@
+"""Serving example: continuous batching over the SpeedMalloc paged KV cache
+with Poisson-ish arrivals and Pareto lengths (Larson-style server pattern).
+
+Run:  PYTHONPATH=src python examples/serve_paged.py [--arch mixtral-8x7b]
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+if __name__ == "__main__":
+    if "--arch" not in sys.argv:
+        sys.argv += ["--arch", "mixtral-8x7b"]
+    sys.argv += ["--requests", "8", "--lanes", "4", "--max-new-tokens", "16"]
+    from repro.launch.serve import main
+    main()

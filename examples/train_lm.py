@@ -1,0 +1,48 @@
+"""End-to-end training driver: a ~100M-param LM for a few hundred steps on
+the full substrate (data pipeline, AdamW, grad accumulation, async
+checkpointing, watchdog, restart-safety).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 200] [--small]
+"""
+import argparse
+import dataclasses
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--small", action="store_true",
+                    help="~10M params (fast CPU demo) instead of ~100M")
+    ap.add_argument("--checkpoint-dir", default="checkpoints/train_lm")
+    args = ap.parse_args()
+
+    if args.small:
+        cfg = ArchConfig(name="lm-10m", family="dense", num_layers=4,
+                         d_model=256, num_heads=4, num_kv_heads=4, d_ff=1024,
+                         vocab_size=8192, head_dim=64)
+    else:
+        # ~104M params (llama-style): 12L x d768 x ff3072, 32k vocab
+        cfg = ArchConfig(name="lm-100m", family="dense", num_layers=12,
+                         d_model=768, num_heads=12, num_kv_heads=12,
+                         d_ff=3072, vocab_size=32000, head_dim=64)
+    print(f"model: {cfg.name}, {cfg.param_count() / 1e6:.1f}M params")
+
+    tcfg = TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                         checkpoint_dir=args.checkpoint_dir,
+                         batch_size=8, seq_len=256, grad_accum=2, log_every=10)
+    report = Trainer(cfg, tcfg, dtype=jnp.float32).run()
+    print(f"finished: steps={report.steps_run} final_loss={report.final_loss:.4f} "
+          f"stragglers={report.straggler_steps}")
+
+
+if __name__ == "__main__":
+    main()

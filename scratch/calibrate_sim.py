@@ -1,0 +1,25 @@
+import sys; sys.path.insert(0, "/root/repo/src")
+import numpy as np
+from repro.sim.workloads import MULTI_THREADED, PAPER_TABLE3, PAPER_GEOMEAN
+from repro.sim.policies import ALL_POLICIES, JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO, SPEEDMALLOC, IC_MALLOC
+from repro.sim.engine import speedup_table, geomean
+
+pols = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO, IC_MALLOC, SPEEDMALLOC]
+rows = speedup_table(list(MULTI_THREADED.values()), pols, threads=16)
+print(f"{'workload':11s} {'tc_sim':6s} {'tc_pap':6s} {'mi_sim':6s} {'mi_pap':6s} {'sp_sim':6s} {'sp_pap':6s}")
+sims = {"tcmalloc": [], "mimalloc": [], "speedmalloc": [], "mallacc": [], "memento": [], "ic-malloc": []}
+for name, r in rows.items():
+    tc_p, mi_p, sp_p = PAPER_TABLE3[name]
+    print(f"{name:11s} {r['tcmalloc']:6.2f} {tc_p:6.2f} {r['mimalloc']:6.2f} {mi_p:6.2f} {r['speedmalloc']:6.2f} {sp_p:6.2f}")
+    for k in sims: sims[k].append(r[k])
+print()
+gm = {k: geomean(v) for k, v in sims.items()}
+print("geomean speedup over jemalloc @16T:")
+print(f"  tcmalloc  sim {gm['tcmalloc']:.2f}  paper 1.48")
+print(f"  mimalloc  sim {gm['mimalloc']:.2f}  paper 1.52")
+print(f"  speed     sim {gm['speedmalloc']:.2f}  paper 1.75")
+print(f"  mallacc   sim {gm['mallacc']:.2f}  paper {1.75/1.23:.2f} (=1.75/1.23)")
+print(f"  memento   sim {gm['memento']:.2f}  paper {1.75/1.18:.2f} (=1.75/1.18)")
+print(f"  ic-malloc sim {gm['ic-malloc']:.2f}  paper <{gm['tcmalloc']:.2f} (must lose to tcmalloc)")
+print(f"  speed/tc  sim {gm['speedmalloc']/gm['tcmalloc']:.2f} paper 1.18")
+print(f"  speed/mi  sim {gm['speedmalloc']/gm['mimalloc']:.2f} paper 1.15")

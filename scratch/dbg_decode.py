@@ -1,0 +1,41 @@
+import sys; sys.path.insert(0, "/root/repo/src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import smoke_config
+from repro.models import init_params, make_paged_config
+from repro.models.transformer import forward
+from repro.models.layers import embed, apply_norm
+from repro.core.paged_kv import gather_kv
+from repro.serve.engine import ServingEngine
+
+cfg = smoke_config("deepseek-7b")
+import dataclasses
+cfg = dataclasses.replace(cfg, num_layers=1)
+params = init_params(cfg, dtype=jnp.float32)
+rng = np.random.RandomState(0)
+toks = rng.randint(0, cfg.vocab_size, size=(9,)).astype(np.int32)
+kvcfg = make_paged_config(cfg, seq_len=64, lanes=2, page_size=4, dtype=jnp.float32)
+eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
+eng.admit(0, toks[:7])
+
+# compare cached K (layer 0) vs forward K
+logits, kv = forward(params, cfg, jnp.asarray(toks[:7])[None], return_kv=True, remat=False)
+ks, vs = kv  # [L, B, T, kvh, hd]
+kg, vg, valid = gather_kv(kvcfg, eng.state.paged, 0)
+print("cache vs fwd K err:", np.abs(np.asarray(kg[0, :7]) - np.asarray(ks[0, 0])).max())
+print("cache vs fwd V err:", np.abs(np.asarray(vg[0, :7]) - np.asarray(vs[0, 0])).max())
+print("valid[0,:9]:", np.asarray(valid[0, :9]))
+
+# now decode token 7 and compare against forward over toks[:8]
+eng.state = eng.state._replace(tokens=eng.state.tokens.at[0].set(int(toks[7])))
+st2, logits_d, _ = eng._decode(eng.params, eng.state)
+ref = forward(params, cfg, jnp.asarray(toks[:8])[None], remat=False)
+print("logits err:", np.abs(np.asarray(logits_d[0]) - np.asarray(ref[0, -1])).max(),
+      "scale:", np.abs(np.asarray(ref[0,-1])).max())
+
+# is the problem in the attention? compute decode hidden manually with full-seq path:
+# forward with 8 tokens, take last hidden pre-norm? do via forward of return_kv to get k/v of pos 7
+logits8, kv8 = forward(params, cfg, jnp.asarray(toks[:8])[None], return_kv=True, remat=False)
+k8, v8 = kv8
+kg2, vg2, _ = gather_kv(kvcfg, st2.paged, 0)
+print("appended K err at pos7:", np.abs(np.asarray(kg2[0, 7]) - np.asarray(k8[0, 0, 7])).max())

@@ -1,0 +1,60 @@
+"""Hillclimb runner: lower+compile one cell under a flag set, print terms."""
+import os, sys, json, argparse, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+sys.path.insert(0, "/root/repo/src")
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", required=True)
+ap.add_argument("--shape", required=True)
+ap.add_argument("--tag", default="exp")
+ap.add_argument("--nl", type=int, nargs=2, default=None,
+                help="unrolled variant layer counts (default: period, 2*period)")
+ap.add_argument("--no-ext", action="store_true", help="scanned module only")
+args = ap.parse_args()
+
+from repro.launch.dryrun import build_lowering, analyze_compiled, _layer_period, extrapolate
+from repro.launch.mesh import make_production_mesh
+from repro.configs.base import get_config
+
+mesh = make_production_mesh()
+t0 = time.time()
+lowered, cfg = build_lowering(args.arch, args.shape, mesh)
+compiled = lowered.compile()
+res = analyze_compiled(lowered, compiled)
+del lowered, compiled
+period = _layer_period(get_config(args.arch))
+nls = tuple(args.nl) if args.nl else (period, 2 * period)
+costs = {}
+if not args.no_ext:
+    for nl in nls:
+        lo, _ = build_lowering(args.arch, args.shape, mesh, n_layers=nl, scanned=False)
+        co = lo.compile()
+        costs[nl] = analyze_compiled(lo, co)
+        del lo, co
+    ext = extrapolate(get_config(args.arch), costs, nls[0], nls[1])
+else:
+    costs[nls[1]] = {"collective_bytes": {}}
+    ext = {"flops": 0.0, "bytes_accessed": 0.0, "collective_wire_total": 0.0}
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+flops = max(ext["flops"], res["flops"])
+byts = max(ext["bytes_accessed"], res["bytes_accessed"])
+wire = max(ext["collective_wire_total"], res.get("collective_wire_total", 0))
+mem = res["memory"]
+out = {
+    "tag": args.tag, "arch": args.arch, "shape": args.shape,
+    "compute_s": flops / PEAK, "memory_s": byts / HBM, "collective_s": wire / ICI,
+    "scanned_coll_s": res.get("collective_wire_total", 0) / ICI,
+    "ext_coll_s": ext["collective_wire_total"] / ICI,
+    "hbm_gb": (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9,
+    "arg_gb": mem["argument_bytes"] / 1e9,
+    "temp_gb": mem["temp_bytes"] / 1e9,
+    "scanned_collectives": res["collective_bytes"],
+    "unrolled_l2_collectives": costs[nls[1]]["collective_bytes"],
+    "flags": {k: v for k, v in os.environ.items() if k.startswith("REPRO_")},
+    "wall_s": round(time.time() - t0, 1),
+}
+print(json.dumps(out))
+path = f"results/hillclimb/{args.arch}__{args.shape}__{args.tag}.json"
+os.makedirs("results/hillclimb", exist_ok=True)
+open(path, "w").write(json.dumps(out, indent=1))

@@ -1,0 +1,16 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, re
+from jax.sharding import NamedSharding, PartitionSpec as P
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+def f(w, x):
+    h = jnp.tanh(x @ w)
+    return jnp.sum(h)
+W = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+X = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+compiled = jax.jit(f, in_shardings=(NamedSharding(mesh, P("model", None)),
+                                    NamedSharding(mesh, P("data", None)))).lower(W, X).compile()
+txt = compiled.as_text()
+for line in txt.splitlines():
+    if any(op in line for op in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")):
+        print(line.strip()[:220])

@@ -1,0 +1,32 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+import re
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+def f(w, x):
+    def body(h, wi):
+        return jnp.tanh(h @ wi), None
+    h, _ = jax.lax.scan(body, x, w)
+    return jnp.sum(h)
+
+W = jax.ShapeDtypeStruct((6, 256, 256), jnp.float32)
+X = jax.ShapeDtypeStruct((8, 256), jnp.float32)
+wsh = NamedSharding(mesh, P(None, None, "model"))
+xsh = NamedSharding(mesh, P("data", None))
+lowered = jax.jit(f, in_shardings=(wsh, xsh)).lower(W, X)
+compiled = lowered.compile()
+ca = compiled.cost_analysis()
+print("cost_analysis type:", type(ca))
+d = ca[0] if isinstance(ca, (list, tuple)) else ca
+print("flops:", d.get("flops"), " (analytic per-device: 6*2*8*256*256/4 =", 6*2*8*256*256/4, ", whole:", 6*2*8*256*256, ")")
+print("bytes accessed:", d.get("bytes accessed"))
+ma = compiled.memory_analysis()
+print("memory_analysis:", ma)
+txt = compiled.as_text()
+colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)[^(]*\(", txt)
+print("collectives found:", len(colls), set(colls[:10]))
+# count scan: does while loop appear?
+print("while in hlo:", txt.count("while("), "| fusion count:", txt.count(" fusion("))

@@ -1,0 +1,63 @@
+import sys
+sys.path.insert(0, "/root/repo/src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core.freelist import init_freelist, validate_freelist
+from repro.core.packets import make_queue, OP_MALLOC, OP_FREE, FREE_ALL, NO_BLOCK
+from repro.core.support_core import support_core_step
+from repro.core.hmq import schedule, round_robin_rank
+
+# --- negative-index drop check ---
+a = jnp.zeros((3,), jnp.int32).at[jnp.array([-1, 1])].set(jnp.array([7, 8]), mode="drop")
+print("drop check (expect [0 8 0]):", a)
+
+# --- RR rank ---
+lane = jnp.array([0, 1, 0, 2, 1, 0], jnp.int32)
+valid = jnp.ones(6, bool)
+print("rr rank (expect [0 0 1 0 1 2]):", round_robin_rank(lane, valid))
+
+# --- basic alloc ---
+st = init_freelist([4, 8])
+q = make_queue(
+    ops=[OP_MALLOC, OP_MALLOC, OP_MALLOC],
+    lanes=[0, 1, 0],
+    size_classes=[0, 0, 1],
+    args=[2, 2, 3],
+)
+st2, resp, stats = support_core_step(st, q, max_blocks_per_req=4)
+print("resp blocks:\n", resp.blocks, "\nstatus:", resp.status)
+print("free_top:", st2.free_top, "used:", st2.used, "peak:", st2.peak_used)
+validate_freelist(st2)
+
+# --- scarcity + fairness: class0 has 0 left; more allocs fail ---
+q2 = make_queue(ops=[OP_MALLOC, OP_MALLOC], lanes=[2, 3], size_classes=[0, 0], args=[1, 1])
+st3, resp2, stats2 = support_core_step(st2, q2)
+print("scarcity status (expect [0 0]):", resp2.status, "fails:", st3.fail_count)
+validate_freelist(st3)
+
+# --- free all of lane 0 class 0, then realloc next step ---
+q3 = make_queue(ops=[OP_FREE], lanes=[0], size_classes=[0], args=[FREE_ALL])
+st4, resp3, _ = support_core_step(st3, q3)
+print("after free-all lane0: free_top:", st4.free_top, "used:", st4.used)
+validate_freelist(st4)
+
+# --- same-step malloc+free deferred semantics: malloc should NOT see this step's frees ---
+st5 = init_freelist([2])
+qq = make_queue(
+    ops=[OP_MALLOC, OP_MALLOC, OP_FREE, OP_MALLOC],
+    lanes=[0, 1, 0, 2],
+    size_classes=[0, 0, 0], args=[1, 1, FREE_ALL, 1])
+# only 2 free; 3 mallocs: third (lane2... by RR order lane0,1,2 round0) fails even though lane0 frees
+qq = make_queue(ops=[OP_MALLOC, OP_MALLOC, OP_FREE, OP_MALLOC],
+                lanes=[0, 1, 0, 2], size_classes=[0, 0, 0, 0], args=[1, 1, FREE_ALL, 1])
+st6, resp4, stats4 = support_core_step(st5, qq)
+print("deferred-free: status (expect [1 1 1 0]):", resp4.status)
+print("post-step free_top (expect 1: lane0's block recycled):", st6.free_top)
+validate_freelist(st6)
+
+# jit compile check
+jitted = jax.jit(lambda s, q: support_core_step(s, q, 4))
+st7, r7, _ = jitted(st, q)
+np.testing.assert_array_equal(np.asarray(r7.blocks), np.asarray(resp.blocks))
+print("jit OK")
+print("ALL CORE SMOKE OK")

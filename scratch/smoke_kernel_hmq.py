@@ -1,0 +1,21 @@
+import sys; sys.path.insert(0, "/root/repo/src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.kernels.hmq_alloc.ops import hmq_alloc_op
+from repro.core.packets import OP_MALLOC, OP_NOP
+
+rng = np.random.RandomState(2)
+for (Q, C, N, R, scarcity) in [(16, 2, 32, 4, False), (64, 4, 128, 8, False),
+                               (32, 3, 16, 4, True), (128, 8, 1024, 8, False)]:
+    op = jnp.asarray(np.where(rng.rand(Q) < 0.7, OP_MALLOC, OP_NOP), jnp.int32)
+    cls = jnp.asarray(rng.randint(0, C, Q), jnp.int32)
+    want = jnp.asarray(rng.randint(1, R + 1, Q), jnp.int32)
+    stack = jnp.asarray(np.stack([rng.permutation(N) for _ in range(C)]), jnp.int32)
+    top = jnp.asarray(rng.randint(2 if scarcity else N // 2, N // 4 if scarcity else N, C), jnp.int32)
+    bk, tk, gk = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R, impl="kernel")
+    br, tr, gr = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R, impl="ref")
+    np.testing.assert_array_equal(np.asarray(bk), np.asarray(br))
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(tr))
+    np.testing.assert_array_equal(np.asarray(gk), np.asarray(gr))
+    print(f"Q={Q} C={C} N={N} R={R} scarcity={scarcity}: kernel==ref OK")
+print("HMQ ALLOC KERNEL OK")

@@ -1,0 +1,16 @@
+import sys; sys.path.insert(0, "/root/repo/src")
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import ARCH_IDS, smoke_config
+from repro.models import init_params, loss_fn, synth_batch
+
+for arch in ARCH_IDS:
+    cfg = smoke_config(arch)
+    params = init_params(cfg, dtype=jnp.float32)
+    batch = synth_batch(cfg, batch=2, seq=16)
+    loss, metrics = jax.jit(lambda p, b: loss_fn(p, cfg, b))(params, batch)
+    ok = bool(jnp.isfinite(loss))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{arch:26s} loss={float(loss):8.4f} finite={ok} params={n_params}")
+    assert ok, arch
+print("ALL MODEL SMOKE OK")

@@ -1,0 +1,6 @@
+"""Per-architecture configs (one module per assigned arch) + registry."""
+from .base import (ARCH_IDS, SHAPES, ArchConfig, all_configs, get_config,
+                   register, smoke_config)
+
+__all__ = ["ARCH_IDS", "SHAPES", "ArchConfig", "all_configs", "get_config",
+           "register", "smoke_config"]

@@ -1,0 +1,27 @@
+"""SpeedMalloc core: the paper's contribution as composable JAX modules.
+
+- :mod:`repro.core.packets`      -- request/response packet formats (§4.1)
+- :mod:`repro.core.hmq`          -- hardware message queues & scheduler (§5.2)
+- :mod:`repro.core.freelist`     -- segregated free-list metadata (§5.1, Fig. 6)
+- :mod:`repro.core.support_core` -- centralized batched allocator step (§3-5)
+- :mod:`repro.core.paged_kv`     -- paged KV cache on the support-core (DESIGN §2)
+"""
+from .freelist import FreeListState, init_freelist, num_free, validate_freelist
+from .hmq import queue_occupancy, round_robin_rank, schedule
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
+                      RequestQueue, ResponseQueue, empty_queue, make_queue)
+from .paged_kv import (KV_CLASS, STATE_CLASS, PagedKVConfig, PagedKVState,
+                       admit_prefill, decode_append, gather_kv, init_paged_kv,
+                       live_pages, release_lanes)
+from .support_core import StepStats, support_core_step
+
+__all__ = [
+    "FreeListState", "init_freelist", "num_free", "validate_freelist",
+    "queue_occupancy", "round_robin_rank", "schedule",
+    "FREE_ALL", "NO_BLOCK", "OP_FREE", "OP_MALLOC", "OP_NOP",
+    "RequestQueue", "ResponseQueue", "empty_queue", "make_queue",
+    "KV_CLASS", "STATE_CLASS", "PagedKVConfig", "PagedKVState",
+    "admit_prefill", "decode_append", "gather_kv", "init_paged_kv",
+    "live_pages", "release_lanes",
+    "StepStats", "support_core_step",
+]

@@ -1,0 +1,116 @@
+"""Segregated free-list metadata (paper §5.1, Fig. 6).
+
+The paper's support-core keeps *all* allocator metadata — per-size-class free
+lists — in its own L1, physically segregated from user data.  Main cores only
+ever see allocated block addresses.  We reproduce that layout literally:
+
+* metadata = this module's small dense ``int32`` arrays (free stacks, owner
+  maps, counters).  In the serving integration these live in the carried
+  allocator state and are the only thing the allocator step touches.
+* user data = the big payload arrays (e.g. KV pages).  Nothing in this module
+  ever reads or writes them.
+
+Each size class ``c`` owns ``capacity[c]`` blocks with ids ``0..capacity[c]-1``
+(ids are *per class*; callers map ``(class, id)`` to storage).  Free blocks
+are held in a stack — the TPU-native replacement for the paper's linked
+lists: a linked-list pop is a pointer chase (serial, cache-line sized), while
+a stack of indices supports *batched* pop/push via prefix sums, which is how
+the support-core step vectorizes an entire HMQ batch in O(1) passes instead
+of the paper's serial per-request loop.  This is a deliberate hardware
+adaptation (DESIGN.md §2): the MXU-free, VPU-friendly structure plays the
+role of the paper's pointer-chasing microcontroller loop.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class FreeListState(NamedTuple):
+    """Per-size-class segregated allocator metadata.
+
+    Shapes use ``C`` = number of size classes and ``N`` = max capacity over
+    classes (classes with fewer blocks are padded; padded ids are never
+    enqueued).
+    """
+
+    free_stack: jnp.ndarray   # [C, N] int32 — stack of free block ids; valid in [0, free_top)
+    free_top: jnp.ndarray     # [C]    int32 — stack pointer (== number of free blocks)
+    owner: jnp.ndarray        # [C, N] int32 — owning lane per block, -1 if free
+    capacity: jnp.ndarray     # [C]    int32 — true capacity per class (static content)
+    # --- statistics (cheap, segregated with the metadata) ---
+    alloc_count: jnp.ndarray  # [C] int32 — total blocks handed out
+    free_count: jnp.ndarray   # [C] int32 — total blocks returned
+    fail_count: jnp.ndarray   # [C] int32 — malloc requests that could not be fully served
+    used: jnp.ndarray         # [C] int32 — currently allocated blocks
+    peak_used: jnp.ndarray    # [C] int32 — high-water mark (paper Fig. 12: deferred
+    #                                        free slightly raises this — measured post-alloc)
+
+    @property
+    def num_classes(self) -> int:
+        return self.free_stack.shape[0]
+
+    @property
+    def max_capacity(self) -> int:
+        return self.free_stack.shape[1]
+
+
+def init_freelist(capacities: Sequence[int]) -> FreeListState:
+    """Create a fresh free list with the given per-class block capacities.
+
+    The stack initially holds ``0..cap-1`` in order, so the first pops return
+    the highest ids (LIFO) — matching hot-block reuse behaviour of software
+    allocators (recently freed blocks are reallocated first).
+    """
+    caps = np.asarray(capacities, np.int32)
+    c, n = len(caps), int(caps.max())
+    stack = np.tile(np.arange(n, dtype=np.int32), (c, 1))
+    # Mark padded tail entries as invalid (-1); free_top stops before them.
+    for i, cap in enumerate(caps):
+        stack[i, cap:] = -1
+    zeros = jnp.zeros((c,), jnp.int32)
+    return FreeListState(
+        free_stack=jnp.asarray(stack),
+        free_top=jnp.asarray(caps),
+        owner=jnp.full((c, n), -1, jnp.int32),
+        capacity=jnp.asarray(caps),
+        alloc_count=zeros,
+        free_count=zeros,
+        fail_count=zeros,
+        used=zeros,
+        peak_used=zeros,
+    )
+
+
+def num_free(state: FreeListState) -> jnp.ndarray:
+    """Free blocks per class, shape [C]."""
+    return state.free_top
+
+
+def validate_freelist(state: FreeListState) -> None:
+    """Host-side invariant check (tests / debugging only; not jittable).
+
+    Invariants:
+      I1. free_top in [0, capacity]
+      I2. stack entries below free_top are unique, valid ids, and unowned
+      I3. used == capacity - free_top
+      I4. every block is either on the stack or owned (exactly once)
+    """
+    fs = np.asarray(state.free_stack)
+    ft = np.asarray(state.free_top)
+    owner = np.asarray(state.owner)
+    caps = np.asarray(state.capacity)
+    used = np.asarray(state.used)
+    for c in range(fs.shape[0]):
+        top, cap = int(ft[c]), int(caps[c])
+        assert 0 <= top <= cap, f"I1 violated: class {c} top={top} cap={cap}"
+        live = fs[c, :top]
+        assert len(np.unique(live)) == top, f"I2 dup in free stack class {c}"
+        assert live.min(initial=0) >= 0 and live.max(initial=0) < cap, f"I2 range class {c}"
+        assert (owner[c, live] == -1).all(), f"I2 free block owned, class {c}"
+        assert used[c] == cap - top, f"I3 used mismatch class {c}: {used[c]} != {cap - top}"
+        owned = np.where(owner[c, :cap] >= 0)[0]
+        assert len(owned) + top == cap, f"I4 accounting, class {c}"
+        assert not np.intersect1d(owned, live).size, f"I4 overlap, class {c}"

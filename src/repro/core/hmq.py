@@ -1,0 +1,92 @@
+"""Hardware message queues (paper §5.2, Fig. 7) — batched scheduler.
+
+The paper adds dispatch/response queues in the support-core.  The scheduler
+
+  1. *prioritizes* ``malloc()`` over ``free()`` — allocation is on the
+     application's critical path, deallocation is not, so frees are deferred;
+  2. serves requests from different main cores in *round-robin* order so every
+     core gets fair access to the single support-core.
+
+On TPU we receive a whole step's requests at once, so scheduling becomes a
+permutation of the request queue rather than a hardware arbiter.  The
+permutation is computed with one sort — O(Q log Q) integer work on the VPU:
+
+  key(i) = priority(op_i) * (L * Q)  +  rr_rank(i) * L  +  lane_i
+
+where ``rr_rank(i)`` is how many earlier requests the same lane already has in
+the queue (its "round").  Sorting by this key lists: all mallocs round 0 in
+lane order, all mallocs round 1, ..., then frees in the same fashion — exactly
+the paper's arbiter ordering.  Under scarcity, failures then land on the
+*latest rounds* rather than on the highest lane ids: fairness.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+from .packets import OP_FREE, OP_MALLOC, OP_NOP, RequestQueue
+
+
+def round_robin_rank(lane: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """For each slot, the number of earlier valid slots with the same lane.
+
+    Equivalent to a per-lane arrival counter in the hardware dispatcher.
+    O(Q log Q) via double argsort over (lane, position).
+    """
+    q = lane.shape[0]
+    pos = jnp.arange(q, dtype=jnp.int32)
+    # Push invalid slots to a fake lane so they don't perturb real ranks.
+    big = jnp.int32(q + 1)
+    eff_lane = jnp.where(valid, lane, big)
+    # Sort by (lane, position): within a lane group, order of arrival.
+    order = jnp.lexsort((pos, eff_lane))
+    sorted_lane = eff_lane[order]
+    # rank within group = index - index_of_group_start
+    idx = jnp.arange(q, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.array([True]), sorted_lane[1:] != sorted_lane[:-1]])
+    group_start = lax.cummax(jnp.where(is_start, idx, 0))
+    rank_sorted = idx - group_start
+    rank = jnp.zeros((q,), jnp.int32).at[order].set(rank_sorted)
+    return jnp.where(valid, rank, 0)
+
+
+def schedule(queue: RequestQueue) -> tuple[RequestQueue, jnp.ndarray]:
+    """Reorder a request queue per the HMQ policy.
+
+    Returns ``(scheduled_queue, unperm)`` where ``unperm`` maps scheduled
+    positions back to original slots, so responses can be returned in the
+    caller's layout (the "response queue" routing of Fig. 7).
+    """
+    q = queue.capacity
+    valid = queue.op != OP_NOP
+    is_free = queue.op == OP_FREE
+    # priority: malloc(0) < free(1) < nop(2)  — lower key served first
+    prio = jnp.where(valid, jnp.where(is_free, 1, 0), 2).astype(jnp.int32)
+    # Fig. 7: malloc and free land in SEPARATE queues, so the round-robin
+    # arrival round is counted per queue (a lane's earlier free does not
+    # delay its first malloc).
+    rr_m = round_robin_rank(queue.lane, valid & ~is_free)
+    rr_f = round_robin_rank(queue.lane, valid & is_free)
+    rr = jnp.where(is_free, rr_f, rr_m)
+    lanes = jnp.maximum(jnp.max(queue.lane), 0) + 1
+    # int32 key; safe while Q * (lanes+1) * 3 < 2**31 (Q, lanes <= ~16k).
+    key = (prio * (q + 1) + rr) * (lanes + 1) + queue.lane
+    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+    sched = RequestQueue(
+        op=queue.op[perm],
+        lane=queue.lane[perm],
+        size_class=queue.size_class[perm],
+        arg=queue.arg[perm],
+    )
+    unperm = jnp.zeros((q,), jnp.int32).at[perm].set(jnp.arange(q, dtype=jnp.int32))
+    return sched, unperm
+
+
+def queue_occupancy(queue: RequestQueue) -> dict[str, jnp.ndarray]:
+    """Occupancy statistics (exported to the serving engine's telemetry)."""
+    valid = queue.op != OP_NOP
+    return {
+        "total": jnp.sum(valid).astype(jnp.int32),
+        "malloc": jnp.sum(queue.op == OP_MALLOC).astype(jnp.int32),
+        "free": jnp.sum(queue.op == OP_FREE).astype(jnp.int32),
+    }

@@ -1,0 +1,93 @@
+"""Request/response packet formats for the SpeedMalloc support-core.
+
+The paper (§4.1, Fig. 4) transfers fixed-format *data packets* alongside
+"start"/"end" signals: ``{opcode, core id, size argument}`` in, ``{status,
+address}`` out.  On TPU there is no cross-core signal wire; the packets become
+small dense int32 arrays that flow through the jitted program as ordinary
+values.  A whole step's worth of requests is batched into one
+:class:`RequestQueue` (the HMQ ingress, §5.2) and answered by one
+:class:`ResponseQueue`.
+
+Opcodes
+-------
+``OP_NOP``    empty slot (queues are fixed capacity; unused slots are nops)
+``OP_MALLOC`` allocate ``count`` blocks of ``size_class`` for ``lane``
+``OP_FREE``   free blocks: ``arg >= 0`` frees the single block id ``arg``;
+              ``arg == FREE_ALL`` frees every block owned by ``lane`` in
+              ``size_class`` (sequence-completion path in paged KV)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+OP_NOP = 0
+OP_MALLOC = 1
+OP_FREE = 2
+
+#: ``arg`` sentinel for OP_FREE meaning "free all blocks owned by lane".
+FREE_ALL = -1
+
+#: Response sentinel for "no block allocated" (failed or nop slot).
+NO_BLOCK = -1
+
+
+class RequestQueue(NamedTuple):
+    """Fixed-capacity batch of allocation requests (HMQ ingress).
+
+    All fields have shape ``[capacity]`` (int32).  Slots with ``op == OP_NOP``
+    are ignored.  ``lane`` is the paper's "main core ID" field — it drives the
+    round-robin fairness in the scheduler and names the owner recorded in the
+    segregated metadata.
+    """
+
+    op: jnp.ndarray          # [Q] int32, one of OP_*
+    lane: jnp.ndarray        # [Q] int32, requesting lane (main-core id)
+    size_class: jnp.ndarray  # [Q] int32, size class index
+    arg: jnp.ndarray         # [Q] int32, malloc: block count; free: block id / FREE_ALL
+
+    @property
+    def capacity(self) -> int:
+        return self.op.shape[0]
+
+
+class ResponseQueue(NamedTuple):
+    """Fixed-capacity batch of responses (HMQ egress).
+
+    ``blocks[i, j]`` is the j-th block id allocated to request ``i`` (or
+    ``NO_BLOCK``).  ``status`` is 1 on full success, 0 on failure/partial.
+    """
+
+    blocks: jnp.ndarray  # [Q, R] int32
+    status: jnp.ndarray  # [Q]    int32
+
+    @property
+    def capacity(self) -> int:
+        return self.status.shape[0]
+
+
+def empty_queue(capacity: int) -> RequestQueue:
+    """An all-nop request queue of the given capacity."""
+    z = jnp.zeros((capacity,), jnp.int32)
+    return RequestQueue(op=z, lane=z, size_class=z, arg=z)
+
+
+def make_queue(ops, lanes, size_classes, args, capacity: int | None = None) -> RequestQueue:
+    """Build a queue from python/array slot lists, padding with nops."""
+    ops = jnp.asarray(ops, jnp.int32)
+    lanes = jnp.asarray(lanes, jnp.int32)
+    size_classes = jnp.asarray(size_classes, jnp.int32)
+    args = jnp.asarray(args, jnp.int32)
+    n = ops.shape[0]
+    cap = capacity if capacity is not None else n
+    if cap < n:
+        raise ValueError(f"capacity {cap} < number of requests {n}")
+    pad = cap - n
+    if pad:
+        zeros = jnp.zeros((pad,), jnp.int32)
+        ops = jnp.concatenate([ops, zeros])
+        lanes = jnp.concatenate([lanes, zeros])
+        size_classes = jnp.concatenate([size_classes, zeros])
+        args = jnp.concatenate([args, zeros])
+    return RequestQueue(op=ops, lane=lanes, size_class=size_classes, arg=args)

@@ -1,0 +1,324 @@
+"""Paged KV cache managed by the SpeedMalloc support-core.
+
+This is the production integration of the paper's technique (DESIGN.md §2):
+KV pages are the "user data"; the block tables / free lists are the
+segregated metadata owned exclusively by the support-core step.  The serving
+engine issues fixed-format request packets each decode step — exactly the
+paper's main-core → support-core signal protocol, realized as dataflow.
+
+Storage layout
+--------------
+One *page* holds ``page_size`` tokens of K and V for **all** KV layers
+(a single allocation per page covers every layer — one HMQ request per
+sequence per ``page_size`` tokens, keeping allocator traffic tiny relative
+to compute):
+
+    k_pages, v_pages : [num_pages, num_kv_layers, page_size, kv_heads, head_dim]
+    block_tables     : [max_lanes, max_pages_per_lane] int32 (metadata)
+    seq_lens         : [max_lanes] int32                      (metadata)
+
+Size classes: class 0 = KV pages; class 1 (optional) = recurrent-state slots
+for SSM/hybrid archs (zamba2, rwkv6) — constant-size per-lane state managed
+through the same centralized allocator.
+
+Beyond-paper feature: **sliding-window page recycling** — for SWA archs
+(mixtral, gemma3 local layers) pages that fall fully behind the attention
+window are freed with single-block OP_FREE packets, bounding pages/lane to
+``window/page_size + 1``.  This makes steady-state decode issue both mallocs
+and frees every step: the workload the HMQ (malloc-priority + deferred free)
+is designed for.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .freelist import FreeListState, init_freelist
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
+                      RequestQueue, ResponseQueue)
+from .support_core import StepStats, support_core_step
+
+KV_CLASS = 0
+STATE_CLASS = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedKVConfig:
+    num_kv_layers: int
+    kv_heads: int
+    head_dim: int
+    page_size: int
+    num_pages: int
+    max_lanes: int
+    max_pages_per_lane: int
+    dtype: jnp.dtype = jnp.bfloat16
+    # SSM/hybrid lane-state slots (0 disables the extra size class)
+    state_slots: int = 0
+    state_dim: int = 0
+
+    @property
+    def tokens_capacity(self) -> int:
+        return self.num_pages * self.page_size
+
+
+class PagedKVState(NamedTuple):
+    alloc: FreeListState          # segregated metadata (support-core owned)
+    block_tables: jnp.ndarray     # [max_lanes, max_pages_per_lane] int32
+    seq_lens: jnp.ndarray         # [max_lanes] int32
+    active: jnp.ndarray           # [max_lanes] bool
+    k_pages: jnp.ndarray          # [num_pages, L, page_size, kv_heads, head_dim]
+    v_pages: jnp.ndarray          # same
+    state_slot: jnp.ndarray       # [max_lanes] int32 (NO_BLOCK if none)
+    lane_state: jnp.ndarray       # [state_slots, state_dim] recurrent state storage
+
+
+def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
+    caps = [cfg.num_pages] + ([cfg.state_slots] if cfg.state_slots else [])
+    shape = (cfg.num_pages, cfg.num_kv_layers, cfg.page_size, cfg.kv_heads, cfg.head_dim)
+    return PagedKVState(
+        alloc=init_freelist(caps),
+        block_tables=jnp.full((cfg.max_lanes, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32),
+        seq_lens=jnp.zeros((cfg.max_lanes,), jnp.int32),
+        active=jnp.zeros((cfg.max_lanes,), bool),
+        k_pages=jnp.zeros(shape, cfg.dtype),
+        v_pages=jnp.zeros(shape, cfg.dtype),
+        state_slot=jnp.full((cfg.max_lanes,), NO_BLOCK, jnp.int32),
+        lane_state=jnp.zeros((max(cfg.state_slots, 1), max(cfg.state_dim, 1)), jnp.float32),
+    )
+
+
+# --------------------------------------------------------------------------
+# Admission (prefill): one lane, T tokens -> ceil(T / page_size) pages.
+# --------------------------------------------------------------------------
+
+def admit_prefill(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    lane: jnp.ndarray,            # scalar int32
+    k: jnp.ndarray,               # [L, T, kv_heads, head_dim]
+    v: jnp.ndarray,
+    length: jnp.ndarray,          # scalar int32, <= T
+) -> tuple[PagedKVState, StepStats]:
+    """Admit a prefilled sequence into the cache (continuous-batching insert)."""
+    T = k.shape[1]
+    ps = cfg.page_size
+    max_pages = (T + ps - 1) // ps
+    n_pages = (length + ps - 1) // ps
+
+    ops = jnp.array([OP_MALLOC, OP_MALLOC if cfg.state_slots else OP_NOP], jnp.int32)
+    lanes = jnp.stack([lane, lane]).astype(jnp.int32)
+    classes = jnp.array([KV_CLASS, STATE_CLASS], jnp.int32)
+    args = jnp.stack([n_pages.astype(jnp.int32), jnp.int32(1)])
+    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
+    alloc, resp, stats = support_core_step(state.alloc, queue, max_blocks_per_req=max_pages)
+
+    pages = resp.blocks[0]                                   # [max_pages]
+    got = resp.status[0] == 1
+    # Block table row for this lane.
+    row = jnp.full((cfg.max_pages_per_lane,), NO_BLOCK, jnp.int32)
+    row = row.at[:max_pages].set(jnp.where(got, pages, NO_BLOCK))
+    block_tables = state.block_tables.at[lane].set(row)
+
+    # Scatter KV into the allocated pages: [L, T, kv, hd] -> [max_pages, L, ps, kv, hd]
+    pad = max_pages * ps - T
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(k.shape[0], max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(0, 1)
+    vp = vp.reshape(v.shape[0], max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(0, 1)
+    valid = (jnp.arange(max_pages, dtype=jnp.int32) < n_pages) & got
+    dst = jnp.where(valid, pages, cfg.num_pages)             # OOB sentinel -> dropped
+    k_pages = state.k_pages.at[dst].set(kp.astype(cfg.dtype), mode="drop")
+    v_pages = state.v_pages.at[dst].set(vp.astype(cfg.dtype), mode="drop")
+
+    slot = jnp.where(cfg.state_slots and True, resp.blocks[1, 0], NO_BLOCK)
+    new = state._replace(
+        alloc=alloc,
+        block_tables=block_tables,
+        seq_lens=state.seq_lens.at[lane].set(jnp.where(got, length, 0)),
+        active=state.active.at[lane].set(got),
+        k_pages=k_pages,
+        v_pages=v_pages,
+        state_slot=state.state_slot.at[lane].set(slot if cfg.state_slots else NO_BLOCK),
+    )
+    return new, stats
+
+
+# --------------------------------------------------------------------------
+# Decode: append one token per active lane; allocate pages at boundaries.
+# --------------------------------------------------------------------------
+
+def decode_append(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    new_k: jnp.ndarray,           # [max_lanes, L, kv_heads, head_dim]
+    new_v: jnp.ndarray,
+    window: Optional[int] = None,  # SWA window (tokens); enables page recycling
+) -> tuple[PagedKVState, StepStats]:
+    ps = cfg.page_size
+    L = cfg.max_lanes
+    pos = state.seq_lens                                     # [lanes]
+    needs_page = state.active & (pos % ps == 0) \
+        & (pos // ps < cfg.max_pages_per_lane)   # table range guard
+
+    # --- build the HMQ batch: mallocs for page-boundary lanes, frees for
+    # pages that slid out of the window (if SWA).  One queue, one step.
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
+    m_ops = jnp.where(needs_page, OP_MALLOC, OP_NOP).astype(jnp.int32)
+    m_args = jnp.ones((L,), jnp.int32)
+
+    if window is not None:
+        # After appending at `pos`, tokens < pos+1-window are dead.  A page p
+        # (covering [p*ps, (p+1)*ps)) is dead when (p+1)*ps <= pos+1-window.
+        dead_page_idx = (pos + 1 - window) // ps - 1         # highest fully-dead page
+        has_dead = state.active & (dead_page_idx >= 0) & ((dead_page_idx + 1) * ps <= pos + 1 - window)
+        # Free exactly the newest dead page each step (at most one page can
+        # newly die per appended token), read from the block table.
+        safe_idx = jnp.clip(dead_page_idx, 0, cfg.max_pages_per_lane - 1)
+        dead_block = state.block_tables[lane_ids, safe_idx]
+        already = dead_block == NO_BLOCK                     # freed in a previous step
+        f_ops = jnp.where(has_dead & ~already, OP_FREE, OP_NOP).astype(jnp.int32)
+        f_args = jnp.where(has_dead & ~already, dead_block, 0)
+        ops = jnp.concatenate([m_ops, f_ops])
+        lanes = jnp.concatenate([lane_ids, lane_ids])
+        args = jnp.concatenate([m_args, f_args])
+        block_tables = state.block_tables.at[
+            jnp.where(f_ops == OP_FREE, lane_ids, L), safe_idx
+        ].set(NO_BLOCK, mode="drop")
+    else:
+        ops, lanes, args = m_ops, lane_ids, m_args
+        block_tables = state.block_tables
+
+    classes = jnp.zeros_like(ops)
+    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
+    alloc, resp, stats = support_core_step(state.alloc, queue, max_blocks_per_req=1)
+
+    # --- install newly allocated pages into block tables
+    new_blocks = resp.blocks[:L, 0]                          # [lanes]
+    got = (resp.status[:L] == 1) & needs_page
+    tbl_idx = jnp.clip(pos // ps, 0, cfg.max_pages_per_lane - 1)
+    block_tables = block_tables.at[
+        jnp.where(got, lane_ids, L), tbl_idx
+    ].set(jnp.where(got, new_blocks, NO_BLOCK), mode="drop")
+
+    # --- write the new token's K/V into each lane's current page
+    writable = state.active & (got | ~needs_page)
+    cur_block = block_tables[lane_ids, tbl_idx]              # [lanes]
+    offset = pos % ps
+    dst_page = jnp.where(writable & (cur_block != NO_BLOCK), cur_block, cfg.num_pages)
+    # scatter: k_pages[dst_page, :, offset] = new_k[lane]
+    k_pages = state.k_pages.at[dst_page, :, offset].set(
+        new_k.astype(cfg.dtype), mode="drop")
+    v_pages = state.v_pages.at[dst_page, :, offset].set(
+        new_v.astype(cfg.dtype), mode="drop")
+
+    new = state._replace(
+        alloc=alloc,
+        block_tables=block_tables,
+        seq_lens=jnp.where(writable, pos + 1, pos),
+        k_pages=k_pages,
+        v_pages=v_pages,
+    )
+    return new, stats
+
+
+# --------------------------------------------------------------------------
+# Completion: free everything a set of lanes owns.
+# --------------------------------------------------------------------------
+
+def release_lanes(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    release_mask: jnp.ndarray,    # [max_lanes] bool
+) -> tuple[PagedKVState, StepStats]:
+    L = cfg.max_lanes
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
+    ops = jnp.where(release_mask, OP_FREE, OP_NOP).astype(jnp.int32)
+    args = jnp.full((L,), FREE_ALL, jnp.int32)
+    if cfg.state_slots:
+        ops = jnp.concatenate([ops, ops])
+        lanes = jnp.concatenate([lane_ids, lane_ids])
+        classes = jnp.concatenate([jnp.zeros((L,), jnp.int32), jnp.ones((L,), jnp.int32)])
+        args = jnp.concatenate([args, args])
+    else:
+        lanes, classes = lane_ids, jnp.zeros((L,), jnp.int32)
+    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
+    alloc, _, stats = support_core_step(state.alloc, queue, max_blocks_per_req=1)
+    keep = ~release_mask
+    new = state._replace(
+        alloc=alloc,
+        block_tables=jnp.where(release_mask[:, None], NO_BLOCK, state.block_tables),
+        seq_lens=jnp.where(keep, state.seq_lens, 0),
+        active=state.active & keep,
+        state_slot=jnp.where(keep, state.state_slot, NO_BLOCK),
+    )
+    return new, stats
+
+
+# --------------------------------------------------------------------------
+# Reference gather (testing + XLA serve path): materialize per-layer KV.
+# --------------------------------------------------------------------------
+
+def gather_kv(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    layer: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Return (k, v, valid_mask) for one layer.
+
+    k, v: [max_lanes, max_pages_per_lane * page_size, kv_heads, head_dim]
+    valid: [max_lanes, max_pages_per_lane * page_size] bool
+    """
+    tbl = state.block_tables                                  # [lanes, P]
+    safe = jnp.where(tbl == NO_BLOCK, 0, tbl)
+    k = state.k_pages[safe, layer]                            # [lanes, P, ps, kv, hd]
+    v = state.v_pages[safe, layer]
+    lanes, P = tbl.shape
+    ps = cfg.page_size
+    k = k.reshape(lanes, P * ps, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(lanes, P * ps, cfg.kv_heads, cfg.head_dim)
+    tok = jnp.arange(P * ps, dtype=jnp.int32)[None, :]
+    valid = (tok < state.seq_lens[:, None]) & (tbl != NO_BLOCK).repeat(ps, axis=1)
+    valid = valid & state.active[:, None]
+    return k, v, valid
+
+
+def gather_kv_window(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    layer: int,
+    window: int,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Windowed gather: only the page slots that can still be live under a
+    sliding window of `window` tokens (exploits support-core page recycling —
+    dead slots were freed and would gather garbage anyway).
+
+    Returns (k, v, pos, valid):
+      k, v  [lanes, W_slots * page_size, kv_heads, head_dim]
+      pos   [lanes, W_slots * page_size] absolute token positions
+      valid [lanes, W_slots * page_size]
+    """
+    ps = cfg.page_size
+    w_slots = min(-(-window // ps) + 1, cfg.max_pages_per_lane)
+    lanes = cfg.max_lanes
+    # first potentially-live slot per lane (clamped so the slice stays in range)
+    first = jnp.clip((state.seq_lens - window) // ps, 0,
+                     cfg.max_pages_per_lane - w_slots)
+    slot = first[:, None] + jnp.arange(w_slots, dtype=jnp.int32)[None, :]
+    tbl = jnp.take_along_axis(state.block_tables, slot, axis=1)  # [lanes, W]
+    safe = jnp.where(tbl == NO_BLOCK, 0, tbl)
+    k = state.k_pages[safe, layer]                    # [lanes, W, ps, kv, hd]
+    v = state.v_pages[safe, layer]
+    k = k.reshape(lanes, w_slots * ps, cfg.kv_heads, cfg.head_dim)
+    v = v.reshape(lanes, w_slots * ps, cfg.kv_heads, cfg.head_dim)
+    pos = (slot[:, :, None] * ps
+           + jnp.arange(ps, dtype=jnp.int32)[None, None, :]).reshape(lanes, -1)
+    valid = (pos < state.seq_lens[:, None]) \
+        & (tbl != NO_BLOCK).repeat(ps, axis=1) & state.active[:, None]
+    return k, v, pos, valid
+
+
+def live_pages(state: PagedKVState) -> jnp.ndarray:
+    """Currently allocated KV pages (telemetry / blowup tracking)."""
+    return state.alloc.used[KV_CLASS]

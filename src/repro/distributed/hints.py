@@ -1,0 +1,126 @@
+"""Activation-sharding hints threaded through the model code.
+
+GSPMD propagates parameter shardings, but at 70B scale the *activation*
+layout between layers decides whether the step fits: we constrain the
+residual stream to Megatron-style sequence sharding over the ``model`` axis
+(saved scan carries shrink by |model|; GSPMD inserts the all-gather before
+attention where full sequence is needed) and the logits to vocab sharding.
+
+``ShardingHints(mesh)`` is passed down ``forward``/``loss_fn``; ``None``
+means "no constraints" (smoke tests, single device).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .sharding import dp_axes
+
+
+class ShardingHints:
+    def __init__(self, mesh: Optional[Mesh], seq_shard: bool = True):
+        self.mesh = mesh
+        self.seq_shard = seq_shard
+        self._dp = dp_axes(mesh) if mesh is not None else None
+
+    def _apply(self, x, spec: P):
+        if self.mesh is None:
+            return x
+        for dim, want in zip(x.shape, spec):
+            if want is None:
+                continue
+            size = 1
+            for a in (want if isinstance(want, tuple) else (want,)):
+                size *= self.mesh.shape[a]
+            if dim % size:
+                return x   # non-divisible: skip constraint entirely
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, spec))
+
+    def residual(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[B, S, d] residual stream: batch over dp, seq over model."""
+        if x.ndim != 3:
+            return x
+        seq = "model" if self.seq_shard else None
+        return self._apply(x, P(self._dp, seq, None))
+
+    def logits(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[B, S, V]: batch over dp, vocab over model."""
+        if x.ndim != 3:
+            return x
+        return self._apply(x, P(self._dp, None, "model"))
+
+    def lanes(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[lanes, ...] decode activations: lanes over dp."""
+        return self._apply(x, P(*([self._dp] + [None] * (x.ndim - 1))))
+
+    def microbatches(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[accum, B/accum, ...]: keep the scan dim unsharded, batch over dp."""
+        if x.ndim < 2:
+            return x
+        return self._apply(x, P(None, self._dp, *([None] * (x.ndim - 2))))
+
+    def gathered_kv(self, x: jnp.ndarray, kv_heads: int) -> jnp.ndarray:
+        """[lanes, S, KV, hd] gathered cache — sharding policy by perf flag.
+
+        'lanes' (baseline): lanes over dp only.
+        'auto': additionally shard over `model` — KV heads when divisible
+        (embarrassingly parallel across heads), else the position dim
+        (GSPMD then emits flash-decoding-style partial-softmax merges
+        instead of materializing/all-reducing the full gather).
+        """
+        from ..perf_flags import current_flags
+        if x.ndim != 4 or self.mesh is None:
+            return x
+        mode = current_flags().kv_gather_shard
+        if mode == "lanes":
+            return self._apply(x, P(self._dp, None, None, None))
+        if kv_heads % self.mesh.shape.get("model", 1) == 0:
+            return self._apply(x, P(self._dp, None, "model", None))
+        return self._apply(x, P(self._dp, "model", None, None))
+
+    def moe_groups(self) -> int:
+        """Number of dispatch groups for MoE (== |dp| so dispatch is local)."""
+        if self.mesh is None or self._dp is None:
+            return 1
+        n = 1
+        for a in self._dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    def expert_buffer(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[G, E, C, d] grouped dispatch buffer: groups over dp, experts over
+        model when divisible (EP), else replicated E with ff-TP downstream."""
+        if x.ndim != 4:
+            return x
+        return self._apply(x, P(self._dp, "model", None, None))
+
+    def expert_buffer_local(self, x: jnp.ndarray) -> jnp.ndarray:
+        """[G, E, C, d] pinned dp-local (E unsharded): scatter/combine side."""
+        if x.ndim != 4:
+            return x
+        return self._apply(x, P(self._dp, None, None, None))
+
+
+NO_HINTS = ShardingHints(None)
+
+_CURRENT: contextvars.ContextVar[ShardingHints] = contextvars.ContextVar(
+    "sharding_hints", default=NO_HINTS)
+
+
+def current_hints() -> ShardingHints:
+    """Trace-time ambient hints (set by the step factories)."""
+    return _CURRENT.get()
+
+
+@contextlib.contextmanager
+def use_hints(h: Optional["ShardingHints"]):
+    token = _CURRENT.set(h if h is not None else NO_HINTS)
+    try:
+        yield
+    finally:
+        _CURRENT.reset(token)

@@ -1,0 +1,194 @@
+"""Sharding rules: map every parameter / batch / serving-state tensor to a
+PartitionSpec for the production mesh.
+
+Strategy (DESIGN.md §5):
+  * TP over ``model``: attention heads, MLP hidden, vocab, MoE experts
+    (true EP when num_experts divides |model|, otherwise expert-ff TP).
+  * FSDP over ``data`` (+``pod``): the contracting/input dim of each large
+    matrix is additionally sharded over the data axes — GSPMD all-gathers one
+    layer at a time inside the layer scan (overlappable), and gradients
+    reduce-scatter back.  Optimizer state inherits param sharding (ZeRO-1).
+  * Batch over (``pod``, ``data``).
+  * Serving: lanes over data axes, paged KV pool pages over data axes,
+    attention heads over ``model``; the SpeedMalloc allocator metadata
+    (int32 free lists / block tables) is tiny and *replicated* — every shard
+    runs the same deterministic support-core step, which is the TPU analogue
+    of "one owner, zero synchronization" (no collective ever touches it).
+
+Divisibility-aware: any rule that does not divide evenly degrades to
+replication for that dim (never fails to compile).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return axes is not None and dim % _axis_size(mesh, axes) == 0
+
+
+def _spec(mesh: Mesh, shape: tuple[int, ...], wants: list[Any]) -> P:
+    """Build a PartitionSpec, dropping axes that don't divide."""
+    out = []
+    for dim, want in zip(shape, wants):
+        out.append(want if _fits(dim, mesh, want) else None)
+    return P(*out)
+
+
+def dp_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+# --------------------------------------------------------------------------
+# Parameter sharding
+# --------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig, mesh: Mesh, params_tree) -> Any:
+    """PartitionSpec tree matching ``params_tree`` (works on abstract trees)."""
+    dp = dp_axes(mesh)
+
+    def rule(path: tuple, leaf) -> P:
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        nd = len(shape)
+        stacked = "layers" in names or "enc_layers" in names or "cross_layers" in names
+        off = 1 if stacked else 0   # leading L dim of scanned stacks: replicate
+
+        def w(*wants):
+            return _spec(mesh, shape, [None] * off + list(wants))
+
+        if name == "embed":
+            return _spec(mesh, shape, ["model", dp])
+        if name == "unembed":
+            return _spec(mesh, shape, [dp, "model"])
+        if name in ("wq", "wk", "wv", "wg", "decay_lora_a"):
+            return w(dp, "model") if nd - off == 2 else w("model")
+        if name in ("bq", "bk", "bv"):
+            return w("model")
+        if name in ("wo", "decay_lora_b"):
+            return w("model", dp)
+        if name == "w_in":
+            if nd - off == 3:   # MoE [E, d, ff*]
+                if _fits(shape[off], mesh, "model"):
+                    return w("model", dp, None)       # EP
+                return w(None, dp, "model")           # TP-MoE
+            return w(dp, "model")
+        if name == "w_out":
+            if nd - off == 3:   # MoE [E, ff, d]
+                if _fits(shape[off], mesh, "model"):
+                    return w("model", None, dp)
+                return w(None, "model", dp)
+            return w("model", dp)
+        if name == "router":
+            return w(dp, None)
+        if name == "in_proj":    # mamba: mixed-segment projection -> fsdp only
+            return w(dp, None)
+        if name == "out_proj":
+            return w(None, dp)
+        if name in ("enc_pos", "dec_pos"):
+            return _spec(mesh, shape, [None, dp])
+        # norms, biases, conv weights, decay bases, mixing params: replicate
+        return P(*([None] * nd))
+
+    return jax.tree_util.tree_map_with_path(rule, params_tree)
+
+
+def batch_specs(cfg: ArchConfig, mesh: Mesh, batch_tree) -> Any:
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        nd = len(leaf.shape)
+        return _spec(mesh, leaf.shape, [dp] + [None] * (nd - 1))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_tree)
+
+
+# --------------------------------------------------------------------------
+# Serving-state sharding
+# --------------------------------------------------------------------------
+
+def serve_state_specs(cfg: ArchConfig, mesh: Mesh, state_tree) -> Any:
+    """Lanes & pages over data axes; KV heads over model when divisible;
+    allocator metadata replicated (support-core principle)."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", str(p))) for p in path]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k_pages", "v_pages"):
+            # [num_pages, L, ps, kv_heads, head_dim]
+            from ..perf_flags import current_flags
+            layout = current_flags().pool_layout
+            if layout == "pages_hd":
+                # pages over dp only; head_dim over model: scatter mask
+                # groups shrink to |dp| and no sharded-layer dynamic slicing
+                return _spec(mesh, shape, [dp, None, None, None, "model"])
+            if layout == "layers" \
+                    and _fits(shape[1], mesh, dp):
+                # layer dim over dp + head_dim (or kv heads) over model: the
+                # decode append scatter's indexed dims (pages, ps) are then
+                # unsharded -> fully local scatter, no pool-sized collectives
+                if _fits(shape[3], mesh, "model"):
+                    return _spec(mesh, shape, [None, dp, None, "model", None])
+                return _spec(mesh, shape, [None, dp, None, None, "model"])
+            # baseline: pages over dp; KV heads over model when divisible,
+            # otherwise pages take model too.
+            if _fits(shape[3], mesh, "model"):
+                return _spec(mesh, shape, [dp, None, None, "model", None])
+            pages_axes = tuple(dp) + ("model",) if dp else "model"
+            return _spec(mesh, shape, [pages_axes, None, None, None, None])
+        if name in ("block_tables", "seq_lens", "active", "state_slot"):
+            return P(*([None] * len(shape)))   # metadata: replicated, tiny
+        if name in ("free_stack", "free_top", "owner", "capacity", "alloc_count",
+                    "free_count", "fail_count", "used", "peak_used"):
+            return P(*([None] * len(shape)))   # support-core metadata
+        if name == "ssm":      # [L, B, h, dk, dv]
+            return _spec(mesh, shape, [None, dp, "model", None, None])
+        if name == "conv":     # [L, B, K-1, conv_dim]
+            return _spec(mesh, shape, [None, dp, None, None])
+        if name in ("tm_prev", "cm_prev"):
+            return _spec(mesh, shape, [None, dp, None, None])
+        if name == "lane_state":
+            return P(*([None] * len(shape)))
+        if name == "enc_out":  # [B, F, d]
+            return _spec(mesh, shape, [dp, None, None])
+        if name == "tokens":
+            return _spec(mesh, shape, [dp])
+        # scalars / counters
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, state_tree)
+
+
+def to_shardings(mesh: Mesh, spec_tree) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, spec: P):
+    """with_sharding_constraint that degrades gracefully off-mesh."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    except Exception:
+        return x

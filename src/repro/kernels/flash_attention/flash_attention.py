@@ -1,0 +1,123 @@
+"""FlashAttention (prefill/train) — Pallas TPU kernel.
+
+Tiled causal attention with optional sliding window and GQA: grid
+(batch, q_heads, q_blocks, kv_blocks), online-softmax accumulation in VMEM
+scratch across the innermost kv-block axis.  Causal + window structure is
+exploited at the *grid* level cheaply by masking; fully-masked kv blocks
+early-out through `pl.when` (no MXU work issued).
+
+Block shapes (block_q x head_dim, block_k x head_dim) are the VMEM tiling
+knobs; defaults 128/128 align with the MXU's 128x128 systolic tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref,    # [1, bq, 1, hd]
+    k_ref,    # [1, bk, 1, hd]
+    v_ref,    # [1, bk, 1, hd]
+    o_ref,    # [1, bq, 1, hd]
+    m_ref,    # [bq, 1] f32 scratch
+    l_ref,    # [bq, 1] f32 scratch
+    acc_ref,  # [bq, hd] f32 scratch
+    *,
+    block_q: int,
+    block_k: int,
+    num_k_blocks: int,
+    causal: bool,
+    window: int,
+):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = iq * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = ik * block_k + jax.lax.iota(jnp.int32, block_k)
+    # block-level reachability: any (q, k) pair in range?
+    q_max, q_min = (iq + 1) * block_q - 1, iq * block_q
+    k_max, k_min = (ik + 1) * block_k - 1, ik * block_k
+    reachable = True
+    if causal:
+        reachable = k_min <= q_max
+    reachable = jnp.logical_and(reachable, k_max > q_min - window)
+
+    @pl.when(reachable)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+        s = jnp.dot(q * scale, k.T)                       # [bq, bk]
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        l_ref[...] = (l_ref[:, 0] * alpha + jnp.sum(p, axis=1))[:, None]
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)
+        m_ref[...] = m_new[:, None]
+
+    @pl.when(ik == num_k_blocks - 1)
+    def _emit():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jnp.ndarray,    # [B, Tq, H, hd]
+    k: jnp.ndarray,    # [B, Tk, KV, hd]
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 1 << 30,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Tq)
+    block_k = min(block_k, Tk)
+    assert Tq % block_q == 0 and Tk % block_k == 0, "pad sequence to block size"
+    grid = (B, H, Tq // block_q, Tk // block_k)
+
+    kernel = functools.partial(
+        _kernel, block_q=block_q, block_k=block_k,
+        num_k_blocks=Tk // block_k, causal=causal, window=window)
+
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, iq, ik: (b, ik, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, iq, ik: (b, iq, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct((B, Tq, H, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the flash-attention kernel (delegates to the
+framework's naive attention, which is itself oracle-tested)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...models.attention import naive_attention
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None):
+    win = None if (window is None or window >= (1 << 29)) else window
+    return naive_attention(q, k, v, causal=causal, window=win)

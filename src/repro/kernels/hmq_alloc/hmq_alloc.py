@@ -1,0 +1,126 @@
+"""HMQ malloc burst — the support-core's allocation phase as a Pallas kernel.
+
+The paper's support-core is a deliberately *lightweight* core: integer-only,
+no FP/vector units (§2.4).  The TPU-native analogue is a kernel that uses
+only VPU integer lanes — zero MXU work — with the entire segregated metadata
+(free stacks + tops) resident in VMEM, playing the role of the support-core's
+L1: one grid step services a whole HMQ batch.
+
+Scope: the latency-critical malloc phase of `support_core_step` for an
+already-scheduled queue (malloc-priority + round-robin ordering happens in
+the scheduler; frees are deferred and folded in afterwards — §5.2 semantics).
+Implements the same prefix-sum batch assignment:
+
+  request i (class c, want n_i) takes stack[c, top_c - cum_c(i) - j], j<n_i
+  (fully-servable requests only; failures propagate NO_BLOCK)
+
+Shapes: Q requests, C size classes, N stack capacity, R max blocks/request.
+VMEM: free_stack [C, N] int32 dominates (C=8, N=64k -> 2 MB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NO_BLOCK = -1
+OP_MALLOC = 1
+
+
+def _kernel(
+    op_ref,        # [Q] int32 (scheduled order)
+    cls_ref,       # [Q] int32
+    want_ref,      # [Q] int32
+    stack_ref,     # [C, N] int32
+    top_ref,       # [C, 1] int32
+    blocks_ref,    # [Q, R] int32 out
+    new_top_ref,   # [C, 1] int32 out
+    granted_ref,   # [Q] int32 out (0 on failure)
+    *,
+    num_classes: int,
+    max_per_req: int,
+):
+    Q = op_ref.shape[0]
+    C = num_classes
+    R = max_per_req
+
+    op = op_ref[...]
+    cls = jnp.clip(cls_ref[...], 0, C - 1)
+    want = jnp.where(op == OP_MALLOC, jnp.maximum(want_ref[...], 0), 0)
+    want = jnp.where(want <= R, want, 0)
+
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (Q, C), 1)
+              == cls[:, None]).astype(jnp.int32)               # [Q, C]
+    tops = top_ref[:, 0]                                       # [C]
+
+    # sequential-skip grants (the serial HMQ semantics): failed requests
+    # consume nothing for their successors — a scan over the queue, exactly
+    # the support-core's serial pop loop, with [C]-vector state.
+    def grant_body(consumed, xs):
+        want_i, onehot_i = xs
+        my = jnp.sum(onehot_i * consumed)
+        av = jnp.sum(onehot_i * tops)
+        ok_i = (want_i > 0) & (my + want_i <= av)
+        consumed = consumed + jnp.where(ok_i, want_i, 0) * onehot_i
+        return consumed, (ok_i, my)
+
+    _, (ok, my_goff) = jax.lax.scan(grant_body, jnp.zeros((C,), jnp.int32),
+                                    (want, onehot))
+    granted = jnp.where(ok, want, 0)
+    granted_c = granted[:, None] * onehot
+
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, R), 1)
+    top_i = jnp.sum(onehot * tops[None, :], axis=1)
+    pos = top_i[:, None] - 1 - my_goff[:, None] - j            # [Q, R]
+    take = ok[:, None] & (j < granted[:, None])
+    safe_pos = jnp.where(take, pos, 0)
+    # gather per request from its class's stack row
+    rows = jnp.sum(onehot * jax.lax.broadcasted_iota(jnp.int32, (Q, C), 1),
+                   axis=1)                                     # [Q] == cls
+    got = stack_ref[rows[:, None], safe_pos]                   # [Q, R]
+    blocks_ref[...] = jnp.where(take, got, NO_BLOCK)
+
+    taken_per_class = jnp.sum(granted_c, axis=0)               # [C]
+    new_top_ref[...] = (tops - taken_per_class)[:, None]
+    granted_ref[...] = granted
+
+
+def hmq_alloc_kernel(
+    op: jnp.ndarray,       # [Q] int32 — scheduled queue
+    size_class: jnp.ndarray,
+    want: jnp.ndarray,
+    free_stack: jnp.ndarray,  # [C, N] int32
+    free_top: jnp.ndarray,    # [C] int32
+    *,
+    max_per_req: int = 8,
+    interpret: bool = False,
+):
+    """Returns (blocks [Q, R], new_top [C], granted [Q])."""
+    Q = op.shape[0]
+    C, N = free_stack.shape
+    kernel = functools.partial(_kernel, num_classes=C, max_per_req=max_per_req)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((Q,), lambda i: (0,)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+            pl.BlockSpec((C, N), lambda i: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, max_per_req), lambda i: (0, 0)),
+            pl.BlockSpec((C, 1), lambda i: (0, 0)),
+            pl.BlockSpec((Q,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, max_per_req), jnp.int32),
+            jax.ShapeDtypeStruct((C, 1), jnp.int32),
+            jax.ShapeDtypeStruct((Q,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(op, size_class, want, free_stack, free_top[:, None])

@@ -1,0 +1,24 @@
+"""Jitted public wrapper for the HMQ malloc-burst kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hmq_alloc import hmq_alloc_kernel
+from .ref import hmq_alloc_ref
+
+
+@partial(jax.jit, static_argnames=("max_per_req", "impl", "interpret"))
+def hmq_alloc_op(op, size_class, want, free_stack, free_top,
+                 max_per_req: int = 8, impl: str = "kernel",
+                 interpret: bool = True):
+    """(blocks [Q, R], new_top [C], granted [Q]) for a scheduled HMQ batch."""
+    if impl == "ref":
+        return hmq_alloc_ref(op, size_class, want, free_stack, free_top,
+                             max_per_req=max_per_req)
+    blocks, new_top, granted = hmq_alloc_kernel(
+        op, size_class, want, free_stack, free_top,
+        max_per_req=max_per_req, interpret=interpret)
+    return blocks, new_top[:, 0], granted

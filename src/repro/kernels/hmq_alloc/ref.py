@@ -1,0 +1,31 @@
+"""Oracle for the HMQ malloc-burst kernel: the malloc phase of the (already
+oracle-tested) support-core step, restricted to a pre-scheduled queue."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.freelist import FreeListState
+from ...core.packets import RequestQueue
+from ...core.support_core import support_core_step
+
+
+def hmq_alloc_ref(op, size_class, want, free_stack, free_top, *,
+                  max_per_req: int = 8):
+    C, N = free_stack.shape
+    state = FreeListState(
+        free_stack=free_stack,
+        free_top=free_top,
+        owner=jnp.full((C, N), -1, jnp.int32),
+        capacity=jnp.full((C,), N, jnp.int32),
+        alloc_count=jnp.zeros((C,), jnp.int32),
+        free_count=jnp.zeros((C,), jnp.int32),
+        fail_count=jnp.zeros((C,), jnp.int32),
+        used=N - free_top,
+        peak_used=N - free_top,
+    )
+    queue = RequestQueue(op=op, lane=jnp.zeros_like(op),
+                         size_class=size_class, arg=want)
+    new_state, resp, _ = support_core_step(state, queue,
+                                           max_blocks_per_req=max_per_req)
+    granted = jnp.sum(resp.blocks != -1, axis=1).astype(jnp.int32)
+    return resp.blocks, new_state.free_top, granted

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the paged decode-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,             # [B, KV, G, hd]
+    k_pages: jnp.ndarray,       # [num_pages, ps, KV, hd]
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # [B, P] int32 (invalid slots clamped to 0)
+    seq_lens: jnp.ndarray,      # [B] int32 (self token already in cache)
+    window: jnp.ndarray,        # [1] int32
+) -> jnp.ndarray:
+    B, KV, G, hd = q.shape
+    ps = k_pages.shape[1]
+    P = block_tables.shape[1]
+    k = k_pages[block_tables]                            # [B, P, ps, KV, hd]
+    v = v_pages[block_tables]
+    k = k.transpose(0, 3, 1, 2, 4).reshape(B, KV, P * ps, hd)
+    v = v.transpose(0, 3, 1, 2, 4).reshape(B, KV, P * ps, hd)
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    s = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    pos = jnp.arange(P * ps, dtype=jnp.int32)[None, :]
+    valid = (pos <= seq_lens[:, None]) & (pos > seq_lens[:, None] - window[0])
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) combination lowers,
+partitions, and compiles on the production meshes, and extract the roofline
+raw terms from the compiled artifacts.
+
+MUST be run as its own process (`python -m repro.launch.dryrun ...`): the two
+lines above run before ANY other import (jax locks device count on first
+init).  Never import this module from tests/benches.
+
+Per cell this produces (cached under results/dryrun/):
+  * scanned step, single-pod 16x16 — memory_analysis (fits?), compile proof
+  * scanned step, multi-pod 2x16x16 — proves the "pod" axis shards
+  * two small-unrolled variants (L1, L2 layers) — XLA cost extrapolation:
+      per_layer = (cost(L2) - cost(L1)) / (L2 - L1)
+      total     = cost(L1) - L1*per_layer + num_layers*per_layer
+    (needed because XLA's HloCostAnalysis counts a while-loop body ONCE —
+    verified empirically on this backend; see EXPERIMENTS.md §Dry-run.)
+"""
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, SHAPES, get_config
+from ..distributed.hints import ShardingHints
+from ..distributed.sharding import (batch_specs, param_specs,
+                                    serve_state_specs, to_shardings)
+from ..models.model_zoo import (abstract_params, input_specs,
+                                make_paged_config)
+from ..serve.serve_step import (abstract_serve_state, make_decode_step,
+                                make_prefill_step)
+from ..train.optimizer import AdamW
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+#: grad-accum per arch for train_4k (memory-driven; see EXPERIMENTS.md §Perf)
+GRAD_ACCUM = {
+    "qwen2-72b": 8, "phi3-medium-14b": 4, "deepseek-7b": 4,
+    "mixtral-8x7b": 8, "phi3.5-moe-42b-a6.6b": 8, "rwkv6-7b": 8,
+    "phi-3-vision-4.2b": 4, "zamba2-1.2b": 4, "gemma3-1b": 2,
+    "whisper-medium": 4,
+}
+
+#: decode shapes skipped for pure full-attention archs (DESIGN.md §4)
+LONG_SKIP = {
+    "deepseek-7b": "pure full attention (O(S) KV at 500k infeasible by design)",
+    "phi3-medium-14b": "pure full attention",
+    "qwen2-72b": "pure full attention",
+    "phi-3-vision-4.2b": "pure full attention backbone",
+    "phi3.5-moe-42b-a6.6b": "pure full attention",
+    "whisper-medium": "decoder ctx 448 << 500k (enc-dec)",
+}
+
+SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+               "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "pred": 1}
+# `%op.N = <result types> op-name(...), ... replica_groups=...`
+COLLECTIVE_LINE_RE = re.compile(
+    r"=\s*(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_text: str) -> float:
+    total = 0.0
+    for sm in SHAPE_RE.finditer(type_text):
+        dt, dims = sm.group(1), sm.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        key = dt if not dt.startswith("f8") else "s8"
+        total += n * DTYPE_BYTES.get(key, 4)
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 1
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, dict[str, float]]:
+    """Per-collective-op byte totals from the per-device optimized HLO.
+
+    Optimized HLO omits operand types, so sizes come from the *result* type
+    plus the replica group size:
+      operand_bytes — the spec's "sum of operand sizes":
+        all-gather: result/G; reduce-scatter: result*G; others: result.
+      wire_bytes — ring-estimate of per-device link traffic:
+        all-reduce 2*(G-1)/G*N; gather/scatter/all-to-all (G-1)/G*N_big;
+        permute N.
+    """
+    ops: dict[str, dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_LINE_RE.search(line)
+        if not m:
+            continue
+        result_t, op = m.group(1), m.group(2)
+        res = _shape_bytes(result_t)
+        g = max(_group_size(line), 1)
+        if op == "all-gather":
+            operand = res / g
+            wire = res * (g - 1) / g
+        elif op == "reduce-scatter":
+            operand = res * g
+            wire = operand * (g - 1) / g
+        elif op == "all-reduce":
+            operand = res
+            wire = 2 * res * (g - 1) / g
+        elif op == "all-to-all":
+            operand = res
+            wire = res * (g - 1) / g
+        else:  # collective-permute
+            operand = res
+            wire = res
+        d = ops.setdefault(op, {"count": 0, "operand_bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += operand
+        d["wire_bytes"] += wire
+    return ops
+
+
+def _variant_cfg(cfg, n_layers: int):
+    """Reduce layer count, preserving the layer-pattern period."""
+    repl = dict(num_layers=n_layers)
+    if cfg.encoder_layers:
+        repl["encoder_layers"] = n_layers
+    return dataclasses.replace(cfg, **repl)
+
+
+def _layer_period(cfg) -> int:
+    if cfg.family == "hybrid":
+        return max(cfg.attn_every, 1)
+    if cfg.attn_pattern == "local_global":
+        return cfg.local_per_global + 1
+    return 1
+
+
+def build_lowering(arch: str, shape_name: str, mesh, *, n_layers=None,
+                   scanned=True, dtype=jnp.bfloat16):
+    """Build and lower one cell's step on the given mesh.
+
+    scanned=False unrolls every layer scan (and disables grad accum) so XLA
+    cost analysis sees each layer — used for the cost extrapolation variants.
+    """
+    cfg = get_config(arch)
+    unroll = not scanned
+    if n_layers is not None:
+        cfg = _variant_cfg(cfg, n_layers)
+    shp = SHAPES[shape_name]
+    kind = shp["kind"]
+    hints = ShardingHints(mesh)
+    params_abs = abstract_params(cfg, dtype)
+    psh = to_shardings(mesh, param_specs(cfg, mesh, params_abs))
+
+    if kind == "train":
+        from jax.sharding import NamedSharding, PartitionSpec
+        opt = AdamW()
+        opt_abs = opt.abstract_init(params_abs)
+        osh = type(opt_abs)(
+            step=NamedSharding(mesh, PartitionSpec()),
+            m=to_shardings(mesh, param_specs(cfg, mesh, opt_abs.m)),
+            v=to_shardings(mesh, param_specs(cfg, mesh, opt_abs.v)))
+        batch = input_specs(cfg, shape_name, act_dtype=dtype)
+        bsh = to_shardings(mesh, batch_specs(cfg, mesh, batch))
+        accum = GRAD_ACCUM.get(arch, 2) if scanned else 1
+        accum = int(os.environ.get("REPRO_GRAD_ACCUM", accum))
+        step = make_train_step(cfg, opt, grad_accum=accum, remat=True,
+                               hints=hints, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(psh, osh, bsh))
+        return jitted.lower(params_abs, opt_abs, batch), cfg
+
+    if kind == "prefill":
+        batch = input_specs(cfg, shape_name, act_dtype=dtype)
+        bsh = to_shardings(mesh, batch_specs(cfg, mesh, batch))
+        step = make_prefill_step(cfg, hints=hints, unroll=unroll)
+        jitted = jax.jit(step, in_shardings=(psh, bsh))
+        return jitted.lower(params_abs, batch), cfg
+
+    # decode
+    lanes, seq = shp["global_batch"], shp["seq_len"]
+    kvcfg = make_paged_config(cfg, seq_len=seq, lanes=lanes, dtype=dtype)
+    state_abs = abstract_serve_state(cfg, kvcfg, lanes, prefilled_len=seq, dtype=dtype)
+    ssh = to_shardings(mesh, serve_state_specs(cfg, mesh, state_abs))
+    step = make_decode_step(cfg, kvcfg, hints=hints, unroll=unroll)
+    jitted = jax.jit(step, in_shardings=(psh, ssh))
+    return jitted.lower(params_abs, state_abs), cfg
+
+
+def analyze_compiled(lowered, compiled) -> dict:
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = parse_collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "collective_bytes": coll,
+        "collective_bytes_total": float(sum(d["operand_bytes"] for d in coll.values())),
+        "collective_wire_total": float(sum(d["wire_bytes"] for d in coll.values())),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "code_bytes": int(mem.generated_code_size_in_bytes),
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             cost_extrapolate: bool = True, force: bool = False) -> dict:
+    """Dry-run one (arch x shape) on one mesh; returns the result record."""
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    out_path = RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    cfg = get_config(arch)
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "when": time.strftime("%Y-%m-%d %H:%M:%S")}
+    if shape_name == "long_500k" and arch in LONG_SKIP:
+        record["status"] = "skipped"
+        record["reason"] = LONG_SKIP[arch]
+        out_path.write_text(json.dumps(record, indent=2))
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    try:
+        t0 = time.time()
+        lowered, _ = build_lowering(arch, shape_name, mesh)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        record["status"] = "ok"
+        record["lower_s"] = round(t1 - t0, 1)
+        record["compile_s"] = round(t2 - t1, 1)
+        record["scanned"] = analyze_compiled(lowered, compiled)
+        print(f"[{arch} | {shape_name} | {mesh_name}] compiled "
+              f"(lower {record['lower_s']}s, compile {record['compile_s']}s) "
+              f"mem={record['scanned']['memory']}", flush=True)
+        del compiled, lowered
+
+        if cost_extrapolate and not multi_pod:
+            period = _layer_period(cfg)
+            l1, l2 = period, 2 * period
+            costs = {}
+            for nl in (l1, l2):
+                lo, vcfg = build_lowering(arch, shape_name, mesh,
+                                          n_layers=nl, scanned=False)
+                co = lo.compile()
+                costs[nl] = analyze_compiled(lo, co)
+                del lo, co
+            record["unrolled"] = {str(k): v for k, v in costs.items()}
+            record["extrapolated"] = extrapolate(cfg, costs, l1, l2)
+            print(f"  extrapolated: {record['extrapolated']}", flush=True)
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} | {shape_name} | {mesh_name}] FAILED: {record['error']}",
+              flush=True)
+    out_path.write_text(json.dumps(record, indent=2))
+    return record
+
+
+def extrapolate(cfg, costs: dict, l1: int, l2: int) -> dict:
+    """Linear-in-layers extrapolation of XLA cost terms to the full depth."""
+    L = cfg.num_layers
+    out = {}
+    for key in ("flops", "bytes_accessed", "collective_bytes_total",
+                "collective_wire_total"):
+        c1, c2 = costs[l1][key], costs[l2][key]
+        per_layer = (c2 - c1) / (l2 - l1)
+        fixed = c1 - l1 * per_layer
+        out[key] = fixed + L * per_layer
+        out[key + "_per_layer"] = per_layer
+        out[key + "_fixed"] = fixed
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", choices=["all", *SHAPES])
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape, multi_pod=mp,
+                               cost_extrapolate=not args.no_extrapolate,
+                               force=args.force)
+                failures += rec.get("status") == "error"
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; tests and benches see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (data, model) single-pod or 2x16x16 (pod, data, model) multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_elastic_mesh(model_parallelism: int = 16):
+    """Derive a mesh from however many devices are currently alive.
+
+    Elastic-scaling support: after losing a pod/host, re-derive (data, model)
+    from the surviving device count; checkpoint restore reshards onto it
+    (see repro.distributed.checkpoint).
+    """
+    n = jax.device_count()
+    model = min(model_parallelism, n)
+    while n % model:
+        model //= 2
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_host_smoke_mesh():
+    """1x1 mesh on the single CPU device (smoke tests of sharded code paths)."""
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The axes a data-parallel batch shards over (includes 'pod' if present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

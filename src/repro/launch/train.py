@@ -1,0 +1,49 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real (small-scale, CPU-friendly) training loop with the full
+substrate: deterministic sharded data pipeline, AdamW, grad accumulation,
+async checkpointing, watchdog, restart-on-failure.  On a TPU pod the same
+driver runs under the production mesh (``--mesh pod``) with the sharding
+rules from ``repro.distributed.sharding``.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ARCH_IDS, get_config, smoke_config
+from ..train.trainer import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="checkpoints")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-scale)")
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainerConfig(
+        total_steps=args.steps,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_dir=args.checkpoint_dir,
+        grad_accum=args.grad_accum,
+        batch_size=args.batch_size,
+        seq_len=args.seq_len,
+    )
+    dtype = jnp.float32 if args.smoke else jnp.bfloat16
+    report = Trainer(cfg, tcfg, dtype=dtype).run()
+    print(f"done: steps={report.steps_run} final_loss={report.final_loss:.4f} "
+          f"stragglers={report.straggler_steps} restarts={report.restarts}")
+
+
+if __name__ == "__main__":
+    main()

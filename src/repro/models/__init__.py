@@ -1,0 +1,6 @@
+"""Model zoo: unified LM backbone covering all 10 assigned architectures."""
+from .model_zoo import (abstract_params, forward_train, init_params,
+                        input_specs, loss_fn, make_paged_config, synth_batch)
+
+__all__ = ["abstract_params", "forward_train", "init_params", "input_specs",
+           "loss_fn", "make_paged_config", "synth_batch"]

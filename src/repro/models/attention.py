@@ -1,0 +1,149 @@
+"""Attention: memory-efficient (chunked online-softmax) XLA implementation.
+
+``mea_attention`` is the workhorse for train/prefill: it never materializes
+the [Tq, Tk] score matrix for the whole sequence — it scans KV in chunks with
+a running (max, denom, accum) carry, i.e. FlashAttention expressed in XLA ops
+(the Pallas kernel in ``repro.kernels.flash_attention`` is the TPU-tiled
+version of the same math; this function doubles as its oracle path for long
+sequences).  Differentiable (pure lax), remat-friendly.
+
+``decode_attention`` handles Tq == 1 against a gathered (paged) KV cache with
+per-lane validity masks and optional sliding windows.
+
+GQA is computed grouped (no KV head repetition is materialized).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask_chunk(
+    q_pos: jnp.ndarray,       # [Tq] int32 — absolute positions of queries
+    k_pos: jnp.ndarray,       # [ck] int32 — absolute positions of keys in chunk
+    causal: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """Boolean [Tq, ck] mask: True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > q_pos[:, None] - window
+    return m
+
+
+def mea_attention(
+    q: jnp.ndarray,            # [B, Tq, H, hd]
+    k: jnp.ndarray,            # [B, Tk, KV, hd]
+    v: jnp.ndarray,            # [B, Tk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int | jnp.ndarray = 0,   # absolute position of q[0]
+    kv_valid: Optional[jnp.ndarray] = None,  # [B, Tk] bool
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Memory-efficient attention; returns [B, Tq, H, hd]."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV                                     # query heads per KV head
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    chunk = min(chunk, Tk)
+    n_chunks = (Tk + chunk - 1) // chunk
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid_pad = jnp.arange(n_chunks * chunk) < Tk
+        kv_valid = (kv_valid if kv_valid is not None
+                    else jnp.ones((B, Tk), bool))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    elif kv_valid is None:
+        kv_valid = jnp.ones((B, Tk), bool)
+
+    qg = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32) * scale
+    kc = k.reshape(B, n_chunks, chunk, KV, hd)
+    vc = v.reshape(B, n_chunks, chunk, KV, hd)
+    validc = kv_valid.reshape(B, n_chunks, chunk)
+    q_pos = q_offset + jnp.arange(Tq, dtype=jnp.int32)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kch, vch, vld, cidx = xs
+        k_pos = cidx * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        s = jnp.einsum("btkgd,bckd->btkgc", qg, kch.astype(jnp.float32))
+        mask = _mask_chunk(q_pos, k_pos, causal, window)      # [Tq, ck]
+        mask = mask[None, :, None, None, :] & vld[:, None, None, None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "btkgc,bckd->btkgd", p, vch.astype(jnp.float32))
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, Tq, KV, G), NEG_INF, jnp.float32),
+        jnp.zeros((B, Tq, KV, G), jnp.float32),
+        jnp.zeros((B, Tq, KV, G, hd), jnp.float32),
+    )
+    xs = (
+        jnp.moveaxis(kc, 1, 0),
+        jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(validc, 1, 0),
+        jnp.arange(n_chunks, dtype=jnp.int32),
+    )
+    (m_f, l_f, acc), _ = jax.lax.scan(body, init, xs)
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def naive_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0, kv_valid=None,
+) -> jnp.ndarray:
+    """O(Tq·Tk) oracle for tests."""
+    B, Tq, H, hd = q.shape
+    Tk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / jnp.sqrt(jnp.float32(hd))
+    qg = q.reshape(B, Tq, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("btkgd,bskd->btkgs", qg, k.astype(jnp.float32)) * scale
+    q_pos = q_offset + jnp.arange(Tq, dtype=jnp.int32)
+    k_pos = jnp.arange(Tk, dtype=jnp.int32)
+    mask = _mask_chunk(q_pos, k_pos, causal, window)[None, :, None, None, :]
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)  # rows with no valid keys -> 0
+    out = jnp.einsum("btkgs,bskd->btkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def decode_attention(
+    q: jnp.ndarray,            # [B, H, hd] — one new token per lane
+    k: jnp.ndarray,            # [B, S, KV, hd] — gathered (paged) cache
+    v: jnp.ndarray,            # [B, S, KV, hd]
+    kv_valid: jnp.ndarray,     # [B, S] bool
+    *,
+    window: Optional[int] = None,
+    seq_lens: Optional[jnp.ndarray] = None,  # [B] — needed for window masking
+    chunk: int = 2048,
+) -> jnp.ndarray:
+    """Single-token attention over a masked cache; returns [B, H, hd]."""
+    if window is not None and seq_lens is not None:
+        pos = jnp.arange(k.shape[1], dtype=jnp.int32)[None, :]
+        kv_valid = kv_valid & (pos > seq_lens[:, None] - 1 - window)
+    out = mea_attention(
+        q[:, None], k, v, causal=False, window=None,
+        kv_valid=kv_valid, chunk=chunk,
+    )
+    return out[:, 0]

@@ -1,0 +1,166 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings, initialization.
+
+All models are functional: params are nested dicts of jnp arrays; every layer
+is a pure function ``f(params, x, ...) -> y``.  Initializers are pure
+``jax.random`` functions so the whole param tree can be built either for real
+(smoke tests) or as ``ShapeDtypeStruct``s via ``jax.eval_shape`` (dry-run).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm(scale: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(params: dict, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, params, x: jnp.ndarray) -> jnp.ndarray:
+    if kind == "rmsnorm":
+        return rmsnorm(params, x)
+    return layernorm(params, x)
+
+
+def init_norm(kind: str, d: int, dtype) -> dict | jnp.ndarray:
+    if kind == "rmsnorm":
+        return jnp.zeros((d,), dtype)  # stored as (scale - 1)
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    """Inverse frequencies, shape [head_dim // 2] (fp32)."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotate-half RoPE.
+
+    x: [..., T, H, head_dim]; positions: broadcastable to [..., T] (int32).
+    """
+    hd = x.shape[-1]
+    inv = rope_frequencies(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * inv  # [..., T, hd/2]
+    sin = jnp.sin(angles)[..., None, :]                      # [..., T, 1, hd/2]
+    cos = jnp.cos(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_apply(params: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    """Gated (swiglu/geglu) or plain (gelu) MLP."""
+    if act in ("swiglu", "geglu"):
+        gate_up = x @ params["w_in"]                         # [.., 2*ff]
+        gate, up = jnp.split(gate_up, 2, axis=-1)
+        g = jax.nn.silu(gate) if act == "swiglu" else jax.nn.gelu(gate)
+        return (g * up) @ params["w_out"]
+    h = jax.nn.gelu(x @ params["w_in"] + params.get("b_in", 0.0))
+    return h @ params["w_out"] + params.get("b_out", 0.0)
+
+
+def init_mlp(key, d: int, ff: int, act: str, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_in": _dense_init(k1, (d, 2 * ff), dtype),
+            "w_out": _dense_init(k2, (ff, d), dtype),
+        }
+    return {
+        "w_in": _dense_init(k1, (d, ff), dtype),
+        "b_in": jnp.zeros((ff,), dtype),
+        "w_out": _dense_init(k2, (ff, d), dtype),
+        "b_out": jnp.zeros((d,), dtype),
+    }
+
+
+def _dense_init(key, shape, dtype) -> jnp.ndarray:
+    fan_in = shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+dense_init = _dense_init
+
+
+# --------------------------------------------------------------------------
+# Embeddings
+# --------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(table_or_head: jnp.ndarray, x: jnp.ndarray, tied: bool) -> jnp.ndarray:
+    if tied:
+        return x @ table_or_head.T
+    return x @ table_or_head
+
+
+# --------------------------------------------------------------------------
+# Attention projections (GQA, optional bias)
+# --------------------------------------------------------------------------
+
+def init_attention_proj(key, d: int, num_heads: int, num_kv_heads: int,
+                        head_dim: int, qkv_bias: bool, dtype) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(kq, (d, num_heads * head_dim), dtype),
+        "wk": _dense_init(kk, (d, num_kv_heads * head_dim), dtype),
+        "wv": _dense_init(kv, (d, num_kv_heads * head_dim), dtype),
+        "wo": _dense_init(ko, (num_heads * head_dim, d), dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((num_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((num_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(params: dict, x: jnp.ndarray, num_heads: int, num_kv_heads: int,
+                head_dim: int):
+    """x: [..., T, d] -> q [..., T, H, hd], k/v [..., T, KV, hd]."""
+    q = x @ params["wq"] + params.get("bq", 0.0)
+    k = x @ params["wk"] + params.get("bk", 0.0)
+    v = x @ params["wv"] + params.get("bv", 0.0)
+    q = q.reshape(*x.shape[:-1], num_heads, head_dim)
+    k = k.reshape(*x.shape[:-1], num_kv_heads, head_dim)
+    v = v.reshape(*x.shape[:-1], num_kv_heads, head_dim)
+    return q, k, v
+
+
+def out_project(params: dict, attn: jnp.ndarray) -> jnp.ndarray:
+    """attn: [..., T, H, hd] -> [..., T, d]."""
+    flat = attn.reshape(*attn.shape[:-2], -1)
+    return flat @ params["wo"]

@@ -1,0 +1,168 @@
+"""Chunked linear attention with data-dependent decay — the shared engine
+behind Mamba2 (SSD) and RWKV6 (Finch).
+
+Both architectures are linear recurrences over an outer-product state
+``S_t = diag(w_t) S_{t-1} + k_t v_t^T`` read out by a query:
+
+  Mamba2 : y_t = q_t · S_t              (decay per head, scalar; q=C, k=B, v=x)
+  RWKV6  : y_t = q_t · (S_{t-1} + diag(u) k_t v_t^T)   (decay per channel)
+
+TPU adaptation (DESIGN.md §2): a per-token scan wastes the MXU, so we use the
+chunked dual form (SSD / flash-linear-attention): split T into chunks of C
+tokens; within a chunk compute the quadratic term with masked matmuls, across
+chunks carry only the [dk, dv] state.  All decay ratios are formed as
+``exp(lp_i - lp_j)`` of *within-chunk* log-decay cumsums in fp32, so the
+exponent magnitude is bounded by ``C * |log w|_max``; we clamp log-decay to
+``LOG_DECAY_MIN`` and keep C small enough that exponents stay in fp32 range.
+
+The two conventions are expressed by two flags:
+  strict   — mask j < i (RWKV6: current token excluded from state readout)
+  shifted  — query-side decay uses lp_{i-1} (RWKV6) instead of lp_i (Mamba2)
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_MIN = -8.0   # w >= e^-8 ~= 3.4e-4 per step
+DEFAULT_CHUNK = 16     # exponent bound: 16 * 8 = 128 < log(fp32_max) when centered
+
+
+def chunked_linear_attention(
+    q: jnp.ndarray,            # [B, T, H, dk]
+    k: jnp.ndarray,            # [B, T, H, dk]
+    v: jnp.ndarray,            # [B, T, H, dv]
+    log_decay: jnp.ndarray,    # [B, T, H, dk] or [B, T, H, 1] (<= 0)
+    *,
+    strict: bool = False,
+    shifted: bool = False,
+    bonus: Optional[jnp.ndarray] = None,   # [H, dk] RWKV6 "u" (adds diag term)
+    initial_state: Optional[jnp.ndarray] = None,  # [B, H, dk, dv]
+    chunk: int = DEFAULT_CHUNK,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y [B, T, H, dv], final_state [B, H, dk, dv])."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    orig_T = T
+    C = min(chunk, T)
+    n = (T + C - 1) // C
+    pad = n * C - T
+    if pad:
+        zf = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        T = n * C
+
+    f32 = jnp.float32
+    q = q.astype(f32)
+    k = k.astype(f32)
+    v = v.astype(f32)
+    lw = jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, 0.0)
+    lw = jnp.broadcast_to(lw, (B, T, H, dk))
+
+    # reshape to chunks: [B, n, C, H, *]
+    qc = q.reshape(B, n, C, H, dk)
+    kc = k.reshape(B, n, C, H, dk)
+    vc = v.reshape(B, n, C, H, dv)
+    lwc = lw.reshape(B, n, C, H, dk)
+
+    lp = jnp.cumsum(lwc, axis=2)                   # inclusive within-chunk cumsum
+    lp_total = lp[:, :, -1]                        # [B, n, H, dk]
+    lq = lp - lwc if shifted else lp               # query-side exponent
+    # center exponents per (chunk, head, channel) for fp32 safety
+    mid = 0.5 * (jnp.max(lq, axis=2, keepdims=True) + jnp.min(lp, axis=2, keepdims=True))
+    qd = qc * jnp.exp(lq - mid)                    # [B, n, C, H, dk]
+    kd_in = kc * jnp.exp(mid - lp)                 # key decayed *relative* to mid
+    kd_out = kc * jnp.exp(lp_total[:, :, None] - lp)  # for state update (<= 1 exponent)
+
+    # intra-chunk quadratic term: scores[i, j] = qd_i . kd_j, masked
+    i = jnp.arange(C)[:, None]
+    j = jnp.arange(C)[None, :]
+    mask = (j < i) if strict else (j <= i)         # [C, C]
+    scores = jnp.einsum("bnihd,bnjhd->bnhij", qd, kd_in)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhij,bnjhd->bnihd", scores, vc)
+
+    if bonus is not None:                          # RWKV6 diag(u) k_t v_t^T readout
+        diag = jnp.einsum("bnihd,hd,bnihd->bnih", qc, bonus.astype(f32), kc)
+        y_intra = y_intra + diag[..., None] * vc
+
+    # inter-chunk: scan the [dk, dv] state across chunks
+    kv_per_chunk = jnp.einsum("bnihk,bnihv->bnhkv", kd_out, vc)   # [B, n, H, dk, dv]
+
+    def body(state, xs):
+        kv_c, lp_tot = xs                           # [B,H,dk,dv], [B,H,dk]
+        new_state = state * jnp.exp(lp_tot)[..., None] + kv_c
+        return new_state, state                     # emit state *entering* the chunk
+
+    s0 = (initial_state.astype(f32) if initial_state is not None
+          else jnp.zeros((B, H, dk, dv), f32))
+    final_state, entry_states = jax.lax.scan(
+        body, s0,
+        (jnp.moveaxis(kv_per_chunk, 1, 0), jnp.moveaxis(lp_total, 1, 0)))
+    entry_states = jnp.moveaxis(entry_states, 0, 1)  # [B, n, H, dk, dv]
+
+    y_inter = jnp.einsum("bnihk,bnhkv->bnihv", qd * jnp.exp(mid), entry_states)
+    y = (y_intra + y_inter).reshape(B, T, H, dv)
+    return y[:, :orig_T].astype(jnp.float32), final_state
+
+
+def linear_attention_ref(
+    q, k, v, log_decay, *, strict=False, shifted=False, bonus=None,
+    initial_state=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-token scan oracle (slow, exact semantics)."""
+    B, T, H, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    lw = jnp.clip(log_decay.astype(f32), LOG_DECAY_MIN, 0.0)
+    lw = jnp.broadcast_to(lw, (B, T, H, dk))
+    w = jnp.exp(lw)
+    s = (initial_state.astype(f32) if initial_state is not None
+         else jnp.zeros((B, H, dk, dv), f32))
+
+    def body(state, xs):
+        qt, kt, vt, wt = (x.astype(f32) for x in xs)   # [B,H,dk],[B,H,dk],[B,H,dv],[B,H,dk]
+        if strict:   # RWKV6: read S_{t-1} (+ bonus), then update
+            read = state
+            if bonus is not None:
+                read = read + (bonus.astype(f32) * kt)[..., None] * vt[..., None, :]
+            y = jnp.einsum("bhk,bhkv->bhv", qt, read)
+            state = state * wt[..., None] + kt[..., None] * vt[..., None, :]
+        else:        # Mamba2: update then read S_t
+            state = state * wt[..., None] + kt[..., None] * vt[..., None, :]
+            y = jnp.einsum("bhk,bhkv->bhv", qt, state)
+        return state, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (q, k, v, w))
+    final, ys = jax.lax.scan(body, s, xs)
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+def linear_attention_decode_step(
+    state: jnp.ndarray,        # [B, H, dk, dv]
+    q: jnp.ndarray,            # [B, H, dk]
+    k: jnp.ndarray,
+    v: jnp.ndarray,            # [B, H, dv]
+    log_decay: jnp.ndarray,    # [B, H, dk] or [B, H, 1]
+    *,
+    strict: bool = False,
+    bonus: Optional[jnp.ndarray] = None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence (serving path). Returns (new_state, y [B, H, dv])."""
+    f32 = jnp.float32
+    q, k, v = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.clip(jnp.broadcast_to(log_decay.astype(f32), k.shape),
+                         LOG_DECAY_MIN, 0.0))
+    if strict:
+        read = state
+        if bonus is not None:
+            read = read + (bonus.astype(f32) * k)[..., None] * v[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", q, read)
+        state = state * w[..., None] + k[..., None] * v[..., None, :]
+    else:
+        state = state * w[..., None] + k[..., None] * v[..., None, :]
+        y = jnp.einsum("bhk,bhkv->bhv", q, state)
+    return state, y

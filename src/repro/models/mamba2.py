@@ -1,0 +1,165 @@
+"""Mamba2 (SSD) block — used by zamba2's backbone layers.
+
+Follows Dao & Gu (2024): input projection produces (z, x, B, C, dt); a short
+causal depthwise conv over (x, B, C); per-head scalar decay a_t = exp(dt·A);
+the SSD recurrence is evaluated with the shared chunked linear-attention
+engine (q=C, k=B, v=x, decay per head); D-skip and gated RMSNorm close the
+block.  Decode carries (conv_state [B, K-1, conv_dim], ssm_state
+[B, heads, head_dim, n]).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, rmsnorm
+from .linear_attention import (chunked_linear_attention,
+                               linear_attention_decode_step)
+
+CONV_K = 4
+
+
+class Mamba2Spec(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_state: int
+    head_dim: int
+
+    @property
+    def heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_state
+
+
+def make_spec(d_model: int, n_state: int, head_dim: int) -> Mamba2Spec:
+    return Mamba2Spec(d_model=d_model, d_inner=2 * d_model, n_state=n_state,
+                      head_dim=head_dim)
+
+
+def init_mamba2(key, spec: Mamba2Spec, dtype) -> dict:
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * spec.d_inner + 2 * spec.n_state + spec.heads  # z,x,B,C,dt
+    return {
+        "in_proj": _dense_init(ks[0], (spec.d_model, proj_out), dtype),
+        "out_proj": _dense_init(ks[1], (spec.d_inner, spec.d_model), dtype),
+        "conv_w": (jax.random.normal(ks[2], (CONV_K, spec.conv_dim), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), dtype),
+        "A_log": jnp.zeros((spec.heads,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((spec.heads,), jnp.float32),
+        "dt_bias": jnp.zeros((spec.heads,), jnp.float32),
+        "norm_scale": jnp.zeros((spec.d_inner,), dtype),
+    }
+
+
+def _split_proj(spec: Mamba2Spec, proj: jnp.ndarray):
+    di, n, h = spec.d_inner, spec.n_state, spec.heads
+    z = proj[..., :di]
+    xBC = proj[..., di:di + spec.conv_dim]
+    dt = proj[..., di + spec.conv_dim:]
+    assert dt.shape[-1] == h
+    return z, xBC, dt
+
+
+def _causal_conv(params: dict, xBC: jnp.ndarray, conv_state=None):
+    """Depthwise causal conv (K=4) via shifts. xBC: [B, T, conv_dim]."""
+    w = params["conv_w"].astype(jnp.float32)        # [K, conv_dim]
+    x = xBC.astype(jnp.float32)
+    if conv_state is not None:                       # decode: prepend carried K-1 tokens
+        x = jnp.concatenate([conv_state.astype(jnp.float32), x], axis=1)
+    else:
+        x = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    T_out = xBC.shape[1]
+    y = sum(x[:, i:i + T_out] * w[i] for i in range(CONV_K))
+    y = jax.nn.silu(y + params["conv_b"].astype(jnp.float32))
+    new_state = x[:, -(CONV_K - 1):]                 # last K-1 inputs (pre-activation)
+    return y.astype(xBC.dtype), new_state.astype(xBC.dtype)
+
+
+def mamba2_forward(
+    params: dict,
+    spec: Mamba2Spec,
+    x: jnp.ndarray,                 # [B, T, d_model]
+    initial_state=None,             # [B, heads, n, head_dim] or None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD. Returns (y [B, T, d_model], final_ssm_state)."""
+    y, final_state, _ = mamba2_forward_with_state(params, spec, x, initial_state)
+    return y, final_state
+
+
+def mamba2_forward_with_state(
+    params: dict,
+    spec: Mamba2Spec,
+    x: jnp.ndarray,
+    initial_state=None,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """As `mamba2_forward` but also returns the conv tail (decode handoff):
+    (y, final_ssm_state [B, h, n, hd], conv_tail [B, K-1, conv_dim])."""
+    B, T, _ = x.shape
+    h, hd, n = spec.heads, spec.head_dim, spec.n_state
+    z, xBC_raw, dt = _split_proj(spec, x @ params["in_proj"])
+    conv_tail = (jnp.pad(xBC_raw, ((0, 0), (CONV_K - 1 - min(T, CONV_K - 1), 0), (0, 0)))
+                 [:, -(CONV_K - 1):])
+    xBC, _ = _causal_conv(params, xBC_raw)
+    xs = xBC[..., :spec.d_inner].reshape(B, T, h, hd)
+    Bmat = xBC[..., spec.d_inner:spec.d_inner + n]                    # [B, T, n]
+    Cmat = xBC[..., spec.d_inner + n:]                                # [B, T, n]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))                 # [h]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B, T, h]
+    log_decay = (dt * A)[..., None]                                   # [B, T, h, 1]
+
+    # SSD via chunked linear attention: q=C, k=B (shared across heads), v=dt*x
+    q = jnp.broadcast_to(Cmat[:, :, None], (B, T, h, n))
+    k = jnp.broadcast_to(Bmat[:, :, None], (B, T, h, n))
+    v = xs.astype(jnp.float32) * dt[..., None]                        # ZOH input scaling
+    y, final_state = chunked_linear_attention(
+        q, k, v, log_decay, strict=False, shifted=False,
+        initial_state=initial_state)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, T, spec.d_inner)
+    y = rmsnorm(params["norm_scale"], y.astype(x.dtype)) * jax.nn.silu(z)
+    return y @ params["out_proj"], final_state, conv_tail
+
+
+class Mamba2DecodeState(NamedTuple):
+    conv: jnp.ndarray   # [B, K-1, conv_dim]
+    ssm: jnp.ndarray    # [B, heads, n, head_dim]  (engine layout [B, h, dk, dv])
+
+
+def init_decode_state(spec: Mamba2Spec, batch: int, dtype) -> Mamba2DecodeState:
+    return Mamba2DecodeState(
+        conv=jnp.zeros((batch, CONV_K - 1, spec.conv_dim), dtype),
+        ssm=jnp.zeros((batch, spec.heads, spec.n_state, spec.head_dim), jnp.float32),
+    )
+
+
+def mamba2_decode_step(
+    params: dict,
+    spec: Mamba2Spec,
+    x: jnp.ndarray,                 # [B, d_model] — one token
+    state: Mamba2DecodeState,
+) -> tuple[jnp.ndarray, Mamba2DecodeState]:
+    B = x.shape[0]
+    h, hd, n = spec.heads, spec.head_dim, spec.n_state
+    z, xBC, dt = _split_proj(spec, x[:, None] @ params["in_proj"])
+    xBC, new_conv = _causal_conv(params, xBC, conv_state=state.conv)
+    xs = xBC[:, 0, :spec.d_inner].reshape(B, h, hd)
+    Bmat = xBC[:, 0, spec.d_inner:spec.d_inner + n]
+    Cmat = xBC[:, 0, spec.d_inner + n:]
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # [B, h]
+    log_decay = (dtv * A)[..., None]                                  # [B, h, 1]
+    q = jnp.broadcast_to(Cmat[:, None], (B, h, n))
+    k = jnp.broadcast_to(Bmat[:, None], (B, h, n))
+    v = (xs.astype(jnp.float32) * dtv[..., None]).reshape(B, h, hd)
+    new_ssm, y = linear_attention_decode_step(
+        state.ssm, q, k, v, log_decay, strict=False)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, spec.d_inner)
+    y = rmsnorm(params["norm_scale"], y.astype(x.dtype)) * jax.nn.silu(z[:, 0])
+    return y @ params["out_proj"], Mamba2DecodeState(conv=new_conv, ssm=new_ssm)

@@ -1,0 +1,167 @@
+"""Public model API: build / run any assigned architecture from its config.
+
+  init_params(cfg, seed, dtype)          — real parameter tree
+  abstract_params(cfg, dtype)            — ShapeDtypeStruct tree (dry-run; no allocation)
+  forward_train(params, cfg, batch)      — logits
+  loss_fn(params, cfg, batch)            — (loss, metrics)
+  input_specs(cfg, shape_name)           — ShapeDtypeStruct batch stand-ins
+  make_paged_config(cfg, seq, lanes)     — PagedKVConfig sized for a decode shape
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig
+from ..core.paged_kv import PagedKVConfig
+from .losses import softmax_cross_entropy
+from .transformer import forward, init_lm_params
+
+IGNORE_LABEL = -1
+DEFAULT_PAGE_SIZE = 64
+
+
+def init_params(cfg: ArchConfig, seed: int = 0, dtype=jnp.bfloat16) -> dict:
+    return init_lm_params(cfg, jax.random.PRNGKey(seed), dtype)
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    """Parameter tree as ShapeDtypeStructs — zero allocation (dry-run)."""
+    return jax.eval_shape(lambda k: init_lm_params(cfg, k, dtype),
+                          jax.random.PRNGKey(0))
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict,
+                  remat: bool = True, hints=None, unroll=False) -> jnp.ndarray:
+    return forward(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("patches"),
+        encoder_frames=batch.get("frames"),
+        remat=remat,
+        hints=hints,
+        unroll=unroll,
+    )
+
+
+def loss_fn(params: dict, cfg: ArchConfig, batch: dict,
+            remat: bool = True, hints=None, unroll=False) -> tuple[jnp.ndarray, dict]:
+    """Next-token cross entropy; labels == IGNORE_LABEL are masked."""
+    logits = forward_train(params, cfg, batch, remat=remat, hints=hints,
+                           unroll=unroll)
+    if hints is not None:
+        logits = hints.logits(logits)
+    labels = batch["labels"]
+    if cfg.family == "vlm":  # logits cover [prefix + tokens]; labels cover tokens
+        logits = logits[:, -labels.shape[1]:]
+    mask = labels != IGNORE_LABEL
+    safe = jnp.where(mask, labels, 0)
+    nll = softmax_cross_entropy(logits, safe)      # memory-efficient custom VJP
+    denom = jnp.maximum(jnp.sum(mask), 1)
+    loss = jnp.sum(nll * mask) / denom
+    metrics = {"loss": loss, "tokens": denom}
+    return loss, metrics
+
+
+# --------------------------------------------------------------------------
+# Input stand-ins per assigned shape (ShapeDtypeStruct; never allocated)
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape_name: str,
+                act_dtype=jnp.bfloat16) -> dict[str, jax.ShapeDtypeStruct]:
+    """Batch inputs for ``train_step`` / ``prefill_step`` for a named shape.
+
+    decode shapes are handled by :func:`repro.serve.serve_state_specs` (the
+    input there is the serving state, not a token batch).
+    """
+    shp = SHAPES[shape_name]
+    B, S = shp["global_batch"], shp["seq_len"]
+    i32 = jnp.int32
+    specs: dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+        specs["patches"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), act_dtype)
+        if shp["kind"] == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S - P), i32)
+        return specs
+    if cfg.family == "audio":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq_len, cfg.d_model),
+                                               act_dtype)
+        if shp["kind"] == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return specs
+    specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    if shp["kind"] == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    return specs
+
+
+def synth_batch(cfg: ArchConfig, batch: int, seq: int, seed: int = 0,
+                act_dtype=jnp.float32) -> dict:
+    """Small real batch for smoke tests (CPU)."""
+    key = jax.random.PRNGKey(seed)
+    kt, kp = jax.random.split(key)
+    out: dict[str, Any] = {}
+    if cfg.family == "vlm":
+        P = min(cfg.frontend_tokens, max(seq // 2, 1))
+        out["tokens"] = jax.random.randint(kt, (batch, seq - P), 0, cfg.vocab_size, jnp.int32)
+        out["patches"] = jax.random.normal(kp, (batch, P, cfg.d_model), act_dtype)
+        out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    elif cfg.family == "audio":
+        out["tokens"] = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+        out["frames"] = jax.random.normal(kp, (batch, cfg.encoder_seq_len, cfg.d_model),
+                                          act_dtype)
+        out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    else:
+        out["tokens"] = jax.random.randint(kt, (batch, seq), 0, cfg.vocab_size, jnp.int32)
+        out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Paged-KV sizing for decode shapes
+# --------------------------------------------------------------------------
+
+def make_paged_config(
+    cfg: ArchConfig,
+    seq_len: int,
+    lanes: int,
+    page_size: int = DEFAULT_PAGE_SIZE,
+    dtype=jnp.bfloat16,
+    slack_pages: int = 8,
+) -> PagedKVConfig:
+    """Size the page pool for `lanes` sequences of up to `seq_len` tokens.
+
+    For bounded-window archs the pool only needs ``window``-worth of live
+    pages per lane (the support-core recycles dead pages — DESIGN.md §2), but
+    the block table still addresses the full sequence range.
+    """
+    pages_per_lane_addr = math.ceil((seq_len + 1) / page_size)
+    if cfg.attn_pattern in ("swa", "local_global") and cfg.window:
+        # local layers bound liveness; global layers (gemma3) keep all pages.
+        has_global = cfg.attn_pattern == "local_global"
+        live_pages = pages_per_lane_addr if has_global else (
+            math.ceil(cfg.window / page_size) + 2)
+    else:
+        live_pages = pages_per_lane_addr
+    n_kv_layers = max(cfg.num_attn_layers, 1)
+    # Round the pool up to a multiple of 512 so the page dim shards evenly
+    # over any (pod x data) combination of the production meshes.
+    num_pages = lanes * live_pages + slack_pages
+    num_pages = -(-num_pages // 512) * 512
+    return PagedKVConfig(
+        num_kv_layers=n_kv_layers,
+        kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim,
+        page_size=page_size,
+        num_pages=num_pages,
+        max_lanes=lanes,
+        max_pages_per_lane=pages_per_lane_addr,
+        dtype=dtype,
+        state_slots=lanes if cfg.family in ("ssm", "hybrid") else 0,
+        state_dim=1,
+    )

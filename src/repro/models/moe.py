@@ -1,0 +1,139 @@
+"""Mixture-of-Experts layer with capacity-based scatter dispatch.
+
+Top-k routing with a *static-capacity* buffer (megablocks/t5x style): tokens
+are ranked within their chosen expert by a cumulative-sum position (the exact
+prefix-sum trick the SpeedMalloc support-core uses for batched allocation —
+see ``repro.core.support_core``), scattered to an ``[E, C, d]`` buffer
+(overflow tokens drop to the residual path), processed by per-expert MLPs as
+one batched einsum, and combined back with router weights.
+
+Sharding (see ``repro.distributed.sharding``): expert dim E over the
+``model`` mesh axis when divisible (true EP — dispatch induces all-to-all),
+otherwise the expert ff dim is sharded over ``model`` (TP-MoE) and dispatch
+stays shard-local.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init
+
+
+class MoESpec(NamedTuple):
+    d_model: int
+    d_ff: int
+    num_experts: int
+    experts_per_token: int
+    capacity_factor: float = 1.25
+    act: str = "swiglu"
+
+
+def init_moe(key, spec: MoESpec, dtype) -> dict:
+    kr, ki, ko = jax.random.split(key, 3)
+    E, d, ff = spec.num_experts, spec.d_model, spec.d_ff
+    gated = spec.act in ("swiglu", "geglu")
+    return {
+        "router": _dense_init(kr, (d, E), jnp.float32),
+        "w_in": _dense_init(ki, (E, d, (2 if gated else 1) * ff), dtype),
+        "w_out": _dense_init(ko, (E, ff, d), dtype),
+    }
+
+
+def expert_capacity(spec: MoESpec, num_tokens: int) -> int:
+    c = int(math.ceil(num_tokens * spec.experts_per_token
+                      * spec.capacity_factor / spec.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for layout friendliness
+
+
+def moe_apply(params: dict, spec: MoESpec, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, d] -> [B, S, d] (top-k routed, capacity-dropped).
+
+    Dispatch is *grouped* (t5x/MaxText style): tokens are split into G groups
+    (G = |dp| from the ambient sharding hints) and each group scatters only
+    into its own [E, C_g] buffer slice, so dispatch stays shard-local; the
+    expert dim then shards over ``model`` (EP) when divisible.  Capacity
+    dropping is per group.
+    """
+    from ..distributed.hints import current_hints
+    hints = current_hints()
+    B, S, d = x.shape
+    N = B * S
+    E, K = spec.num_experts, spec.experts_per_token
+    G = hints.moe_groups()
+    if N % G:
+        G = 1
+    n = N // G                                                 # tokens per group
+    C = expert_capacity(spec, n)
+    xf = x.reshape(G, n, d)
+
+    logits = xf.astype(jnp.float32) @ params["router"]         # [G, n, E]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(gates, K)                     # [G, n, K]
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Rank each (token, k) within its (group, expert) by arrival order — the
+    # same batched assignment idiom as the support-core allocator (argsort
+    # based: O(nK log nK) and O(nK) memory; a one-hot cumsum would cost an
+    # [G, nK, E] buffer, prohibitive at 1M tokens).
+    from ..core.hmq import round_robin_rank
+    choice_e = top_e.reshape(G, n * K)                         # [G, nK]
+    valid = jnp.ones_like(choice_e, dtype=bool)
+    my_rank = jax.vmap(round_robin_rank)(choice_e, valid)      # [G, nK]
+    keep = my_rank < C                                         # [G, nK]
+
+    # Scatter tokens into the grouped buffer [G, E, C, d]; drops -> OOB.
+    g_idx = jnp.broadcast_to(jnp.arange(G, dtype=jnp.int32)[:, None], (G, n * K))
+    tok_idx = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(n, dtype=jnp.int32), K)[None], (G, n * K))
+    e_idx = jnp.where(keep, choice_e, E)
+    c_idx = jnp.where(keep, my_rank, C)
+    buf = jnp.zeros((G, E, C, d), x.dtype).at[
+        g_idx.reshape(-1), e_idx.reshape(-1), c_idx.reshape(-1)
+    ].set(xf[g_idx.reshape(-1), tok_idx.reshape(-1)], mode="drop")
+    from ..perf_flags import current_flags
+    local_dispatch = current_flags().moe_local_dispatch
+    if local_dispatch:
+        # keep the data-dependent scatter entirely dp-local, THEN reshard the
+        # dense buffer to EP — a pure layout change GSPMD lowers to
+        # all-to-all instead of the masked all-reduce a cross-shard scatter
+        # would produce.
+        buf = hints.expert_buffer_local(buf)
+    buf = hints.expert_buffer(buf)
+
+    # Per-expert MLP as batched einsums (EP over `model` when divisible).
+    h = jnp.einsum("gecd,edf->gecf", buf, params["w_in"])
+    if spec.act in ("swiglu", "geglu"):
+        gate, up = jnp.split(h, 2, axis=-1)
+        g = jax.nn.silu(gate) if spec.act == "swiglu" else jax.nn.gelu(gate)
+        h = g * up
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, params["w_out"])  # [G, E, C, d]
+    out_buf = hints.expert_buffer(out_buf)
+    if local_dispatch:
+        out_buf = hints.expert_buffer_local(out_buf)  # all-to-all back; the
+        # combine gather below then stays dp-local
+
+    # Combine: gather each kept (token, k) result, weight by router prob.
+    safe_e = jnp.where(keep, choice_e, 0)
+    safe_c = jnp.where(keep, my_rank, 0)
+    gathered = out_buf[g_idx, safe_e, safe_c]                   # [G, nK, d]
+    w = (top_w.reshape(G, n * K) * keep).astype(jnp.float32)[..., None]
+    contrib = gathered.astype(jnp.float32) * w
+    out = jnp.zeros((G, n, d), jnp.float32).at[g_idx, tok_idx].add(contrib)
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+def moe_aux_loss(params: dict, spec: MoESpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style load-balance loss (fraction routed x mean gate, scaled E)."""
+    N = x.shape[0] * x.shape[1]
+    logits = x.reshape(N, -1).astype(jnp.float32) @ params["router"]
+    gates = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(gates, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, spec.num_experts, dtype=jnp.float32), 0)
+    prob = jnp.mean(gates, axis=0)
+    return spec.num_experts * jnp.sum(frac * prob)

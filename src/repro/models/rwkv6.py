@@ -1,0 +1,160 @@
+"""RWKV6 (Finch) block — attention-free with data-dependent decay.
+
+Time-mix: token-shift interpolation feeds r/k/v/g/w projections; the decay
+``w_t`` is produced per channel by a small LoRA (d -> 64 -> d), making the
+decay *data-dependent* (the RWKV6 signature vs RWKV4/5).  The wkv recurrence
+``S_t = diag(w_t) S_{t-1} + k_t v_t^T``, read out as ``r_t (S_{t-1} +
+diag(u) k_t v_t^T)``, runs on the shared chunked linear-attention engine
+(strict + shifted convention + bonus u).
+
+Channel-mix: token-shift + squared-ReLU MLP with a receptance gate (per the
+RWKV reference implementation).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import _dense_init, layernorm
+from .linear_attention import (chunked_linear_attention,
+                               linear_attention_decode_step)
+
+DECAY_LORA = 64
+
+
+class RWKV6Spec(NamedTuple):
+    d_model: int
+    d_ff: int
+    head_dim: int
+
+    @property
+    def heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init_rwkv6(key, spec: RWKV6Spec, dtype) -> dict:
+    d, ff = spec.d_model, spec.d_ff
+    ks = jax.random.split(key, 10)
+    return {
+        "tm": {  # time-mix
+            "mix": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),
+            "wr": _dense_init(ks[1], (d, d), dtype),
+            "wk": _dense_init(ks[2], (d, d), dtype),
+            "wv": _dense_init(ks[3], (d, d), dtype),
+            "wg": _dense_init(ks[4], (d, d), dtype),
+            "wo": _dense_init(ks[5], (d, d), dtype),
+            "decay_lora_a": _dense_init(ks[6], (d, DECAY_LORA), dtype),
+            "decay_lora_b": _dense_init(ks[7], (DECAY_LORA, d), dtype),
+            "decay_base": jnp.full((d,), -4.0, jnp.float32),
+            "bonus_u": jnp.zeros((spec.heads, spec.head_dim), jnp.float32),
+            "ln_out": {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+        },
+        "cm": {  # channel-mix
+            "mix": (jax.random.uniform(ks[8], (2, d), jnp.float32)).astype(dtype),
+            "wk": _dense_init(ks[9], (d, ff), dtype),
+            "wv": _dense_init(jax.random.fold_in(key, 11), (ff, d), dtype),
+            "wr": _dense_init(jax.random.fold_in(key, 12), (d, d), dtype),
+        },
+    }
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray | None = None) -> jnp.ndarray:
+    """x shifted one token right; position 0 receives `prev` (or zeros)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _mix(x, shifted, m):
+    return x + (shifted - x) * m.astype(x.dtype)
+
+
+def rwkv6_time_mix(
+    params: dict, spec: RWKV6Spec, x: jnp.ndarray,
+    initial_state=None, shift_prev=None,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, T, d]. Returns (y, final_wkv_state [B, H, hd, hd])."""
+    B, T, d = x.shape
+    h, hd = spec.heads, spec.head_dim
+    xs = _token_shift(x, shift_prev)
+    m = params["mix"]
+    r = _mix(x, xs, m[0]) @ params["wr"]
+    k = _mix(x, xs, m[1]) @ params["wk"]
+    v = _mix(x, xs, m[2]) @ params["wv"]
+    g = _mix(x, xs, m[3]) @ params["wg"]
+    wx = _mix(x, xs, m[4])
+    # data-dependent per-channel decay (LoRA): w = exp(-exp(base + lora(wx)))
+    lora = jnp.tanh(wx @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    log_decay = -jnp.exp(params["decay_base"].astype(jnp.float32)
+                         + lora.astype(jnp.float32))          # [B, T, d] (<0)
+    rh = r.reshape(B, T, h, hd)
+    kh = k.reshape(B, T, h, hd)
+    vh = v.reshape(B, T, h, hd)
+    ld = log_decay.reshape(B, T, h, hd)
+    y, final = chunked_linear_attention(
+        rh, kh, vh, ld, strict=True, shifted=True,
+        bonus=params["bonus_u"], initial_state=initial_state)
+    y = y.reshape(B, T, d).astype(x.dtype)
+    y = layernorm(params["ln_out"], y)
+    return (y * jax.nn.silu(g)) @ params["wo"], final
+
+
+def rwkv6_channel_mix(params: dict, x: jnp.ndarray, shift_prev=None) -> jnp.ndarray:
+    xs = _token_shift(x, shift_prev)
+    m = params["mix"]
+    k = _mix(x, xs, m[0]) @ params["wk"]
+    r = _mix(x, xs, m[1]) @ params["wr"]
+    kv = jnp.square(jax.nn.relu(k)) @ params["wv"]
+    return jax.nn.sigmoid(r) * kv
+
+
+class RWKV6DecodeState(NamedTuple):
+    wkv: jnp.ndarray       # [B, H, hd, hd]
+    tm_prev: jnp.ndarray   # [B, 1, d] — last token (time-mix shift)
+    cm_prev: jnp.ndarray   # [B, 1, d] — last token (channel-mix shift)
+
+
+def init_decode_state(spec: RWKV6Spec, batch: int, dtype) -> RWKV6DecodeState:
+    return RWKV6DecodeState(
+        wkv=jnp.zeros((batch, spec.heads, spec.head_dim, spec.head_dim), jnp.float32),
+        tm_prev=jnp.zeros((batch, 1, spec.d_model), dtype),
+        cm_prev=jnp.zeros((batch, 1, spec.d_model), dtype),
+    )
+
+
+def rwkv6_time_mix_step(
+    params: dict, spec: RWKV6Spec, x: jnp.ndarray, state: RWKV6DecodeState,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """x: [B, d] one token. Returns (y [B, d], new_wkv, new_tm_prev)."""
+    B, d = x.shape
+    h, hd = spec.heads, spec.head_dim
+    xs = state.tm_prev[:, 0]
+    m = params["mix"]
+    mixf = lambda mi: x + (xs - x) * mi.astype(x.dtype)
+    r = mixf(m[0]) @ params["wr"]
+    k = mixf(m[1]) @ params["wk"]
+    v = mixf(m[2]) @ params["wv"]
+    g = mixf(m[3]) @ params["wg"]
+    wx = mixf(m[4])
+    lora = jnp.tanh(wx @ params["decay_lora_a"]) @ params["decay_lora_b"]
+    log_decay = -jnp.exp(params["decay_base"].astype(jnp.float32)
+                         + lora.astype(jnp.float32))
+    new_wkv, y = linear_attention_decode_step(
+        state.wkv, r.reshape(B, h, hd), k.reshape(B, h, hd), v.reshape(B, h, hd),
+        log_decay.reshape(B, h, hd), strict=True, bonus=params["bonus_u"])
+    y = y.reshape(B, d).astype(x.dtype)
+    y = layernorm(params["ln_out"], y)
+    return (y * jax.nn.silu(g)) @ params["wo"], new_wkv, x[:, None]
+
+
+def rwkv6_channel_mix_step(
+    params: dict, x: jnp.ndarray, state_prev: jnp.ndarray,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    xs = state_prev[:, 0]
+    m = params["mix"]
+    k = (x + (xs - x) * m[0].astype(x.dtype)) @ params["wk"]
+    r = (x + (xs - x) * m[1].astype(x.dtype)) @ params["wr"]
+    kv = jnp.square(jax.nn.relu(k)) @ params["wv"]
+    return jax.nn.sigmoid(r) * kv, x[:, None]

@@ -1,0 +1,375 @@
+"""Unified LM backbone: dense / MoE / hybrid(Mamba2+shared-attn) / RWKV6 / VLM.
+
+Structure: scan-over-layers with stacked per-layer params (bounds HLO size —
+one block body regardless of depth), `jax.checkpoint` remat around the block,
+per-layer attention windows carried as scan inputs (gemma3 local:global,
+mixtral SWA).
+
+Three entry points per family:
+  * ``forward``       — full-sequence logits (train path)
+  * ``prefill``       — full-sequence logits + stacked per-layer K/V (serving)
+  * ``decode_block_step`` pieces used by :mod:`repro.serve.serve_step`
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import mamba2 as m2
+from . import rwkv6 as rw
+from .attention import mea_attention
+from .layers import (apply_norm, embed, init_attention_proj, init_embedding,
+                     init_mlp, init_norm, mlp_apply, out_project, qkv_project,
+                     unembed, apply_rope, dense_init)
+from .moe import MoESpec, init_moe, moe_apply
+
+FULL_WINDOW = 1 << 30   # "no window" sentinel (traced-friendly)
+
+
+# --------------------------------------------------------------------------
+# Param init
+# --------------------------------------------------------------------------
+
+def _init_attn_block(key, cfg: ArchConfig, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    hd = cfg.resolved_head_dim
+    p = {
+        "ln_attn": init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": init_attention_proj(k1, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, hd, cfg.qkv_bias, dtype),
+        "ln_mlp": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        spec = MoESpec(cfg.d_model, cfg.d_ff, cfg.num_experts,
+                       cfg.experts_per_token,
+                       capacity_factor=cfg.moe_capacity_factor, act=cfg.act)
+        p["moe"] = init_moe(k2, spec, dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def init_lm_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> dict:
+    """Build the full parameter tree (stacked layers for scan)."""
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {
+        "embed": init_embedding(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[1], (cfg.d_model, cfg.vocab_size), dtype)
+
+    if cfg.family == "ssm":           # RWKV6
+        spec = rw.RWKV6Spec(cfg.d_model, cfg.d_ff, cfg.resolved_head_dim)
+        lkeys = jax.random.split(keys[2], cfg.num_layers)
+        params["layers"] = jax.vmap(lambda k: init_rwkv_block(k, cfg, spec, dtype))(lkeys)
+        return params
+
+    if cfg.family == "hybrid":        # zamba2: stacked mamba + ONE shared attn block
+        spec = m2.make_spec(cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim)
+        lkeys = jax.random.split(keys[2], cfg.num_layers)
+        params["layers"] = jax.vmap(
+            lambda k: {"ln": init_norm(cfg.norm, cfg.d_model, dtype),
+                       "mamba": m2.init_mamba2(k, spec, dtype)})(lkeys)
+        params["shared_attn"] = _init_attn_block(keys[3], cfg, dtype)
+        return params
+
+    n_layers = cfg.num_layers
+    lkeys = jax.random.split(keys[2], n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))(lkeys)
+
+    if cfg.encoder_layers:            # whisper: encoder stack + cross-attn in decoder
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+        params["enc_layers"] = jax.vmap(lambda k: _init_attn_block(k, cfg, dtype))(ekeys)
+        params["enc_final_norm"] = init_norm(cfg.norm, cfg.d_model, dtype)
+        params["enc_pos"] = (jax.random.normal(keys[5], (cfg.encoder_seq_len, cfg.d_model),
+                                               jnp.float32) * 0.02).astype(dtype)
+        ckeys = jax.random.split(keys[6], n_layers)
+        hd = cfg.resolved_head_dim
+        params["cross_layers"] = jax.vmap(
+            lambda k: {"ln": init_norm(cfg.norm, cfg.d_model, dtype),
+                       "attn": init_attention_proj(k, cfg.d_model, cfg.num_heads,
+                                                   cfg.num_kv_heads, hd, False, dtype)}
+        )(ckeys)
+        # Learned decoder positions; sized for the largest assigned decode
+        # shape (32k).  Whisper's deployed decoder ctx is 448 — see DESIGN.md.
+        params["dec_pos"] = jnp.zeros((32768 + 8, cfg.d_model), dtype)
+    return params
+
+
+def init_rwkv_block(key, cfg: ArchConfig, spec: rw.RWKV6Spec, dtype) -> dict:
+    p = rw.init_rwkv6(key, spec, dtype)
+    p["ln1"] = init_norm("layernorm", cfg.d_model, dtype)
+    p["ln2"] = init_norm("layernorm", cfg.d_model, dtype)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Per-layer window schedule
+# --------------------------------------------------------------------------
+
+def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
+    """[num_attn_layer_instances] int32 — attention window per layer."""
+    n = cfg.num_attn_layers if cfg.family != "hybrid" else cfg.num_layers // max(cfg.attn_every, 1)
+    if cfg.attn_pattern == "swa":
+        return jnp.full((n,), cfg.window, jnp.int32)
+    if cfg.attn_pattern == "local_global":
+        idx = jnp.arange(n)
+        period = cfg.local_per_global + 1
+        is_global = (idx % period) == cfg.local_per_global
+        return jnp.where(is_global, FULL_WINDOW, cfg.window).astype(jnp.int32)
+    return jnp.full((n,), FULL_WINDOW, jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Transformer block (train/prefill path)
+# --------------------------------------------------------------------------
+
+def _attn_block_seq(cfg: ArchConfig, lp: dict, x: jnp.ndarray, window,
+                    q_offset=0, return_kv: bool = False):
+    """Pre-norm attention + MLP block over a full sequence.
+
+    Returns x, or (x, (k, v)) with ``return_kv``.  MoE blocks additionally
+    stash the load-balance aux loss on the side channel via ``_moe_aux``.
+    """
+    hd = cfg.resolved_head_dim
+    h = apply_norm(cfg.norm, lp["ln_attn"], x)
+    q, k, v = qkv_project(lp["attn"], h, cfg.num_heads, cfg.num_kv_heads, hd)
+    positions = q_offset + jnp.arange(x.shape[1], dtype=jnp.int32)
+    if cfg.family != "audio":       # whisper uses learned abs pos, no rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    attn = mea_attention(q, k, v, causal=True, window=window, q_offset=q_offset)
+    x = x + out_project(lp["attn"], attn)
+    h = apply_norm(cfg.norm, lp["ln_mlp"], x)
+    if "moe" in lp:
+        spec = MoESpec(cfg.d_model, cfg.d_ff, cfg.num_experts,
+                       cfg.experts_per_token,
+                       capacity_factor=cfg.moe_capacity_factor, act=cfg.act)
+        x = x + moe_apply(lp["moe"], spec, h)
+    else:
+        x = x + mlp_apply(lp["mlp"], h, cfg.act)
+    if return_kv:
+        return x, (k, v)
+    return x
+
+
+def moe_layer_aux(cfg: ArchConfig, lp: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Load-balance aux loss for one MoE layer (cheap router recompute)."""
+    from .moe import moe_aux_loss
+    spec = MoESpec(cfg.d_model, cfg.d_ff, cfg.num_experts,
+                   cfg.experts_per_token,
+                   capacity_factor=cfg.moe_capacity_factor, act=cfg.act)
+    h = apply_norm(cfg.norm, lp["ln_mlp"], x)
+    return moe_aux_loss(lp["moe"], spec, h)
+
+
+def _encoder_block_seq(cfg: ArchConfig, lp: dict, x: jnp.ndarray):
+    """Bidirectional block (whisper encoder)."""
+    hd = cfg.resolved_head_dim
+    h = apply_norm(cfg.norm, lp["ln_attn"], x)
+    q, k, v = qkv_project(lp["attn"], h, cfg.num_heads, cfg.num_kv_heads, hd)
+    attn = mea_attention(q, k, v, causal=False, window=None)
+    x = x + out_project(lp["attn"], attn)
+    h = apply_norm(cfg.norm, lp["ln_mlp"], x)
+    return x + mlp_apply(lp["mlp"], h, cfg.act)
+
+
+def _cross_block_seq(cfg: ArchConfig, cp: dict, x: jnp.ndarray, enc_out: jnp.ndarray):
+    hd = cfg.resolved_head_dim
+    h = apply_norm(cfg.norm, cp["ln"], x)
+    q = (h @ cp["attn"]["wq"]).reshape(*h.shape[:-1], cfg.num_heads, hd)
+    k = (enc_out @ cp["attn"]["wk"]).reshape(*enc_out.shape[:-1], cfg.num_kv_heads, hd)
+    v = (enc_out @ cp["attn"]["wv"]).reshape(*enc_out.shape[:-1], cfg.num_kv_heads, hd)
+    attn = mea_attention(q, k, v, causal=False, window=None)
+    return x + out_project(cp["attn"], attn)
+
+
+# --------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def forward(
+    params: dict,
+    cfg: ArchConfig,
+    tokens: jnp.ndarray,                      # [B, S_tok]
+    prefix_embeds: Optional[jnp.ndarray] = None,   # [B, P, d] (vlm)
+    encoder_frames: Optional[jnp.ndarray] = None,  # [B, F, d] (audio stub)
+    remat: bool = True,
+    return_kv: bool = False,
+    hints=None,
+    unroll: bool = False,
+):
+    """Returns logits [B, S, vocab] (S includes the vlm prefix), and
+    optionally stacked per-attention-layer (k, v) for serving prefill."""
+    if hints is None:
+        from ..distributed.hints import NO_HINTS
+        hints = NO_HINTS
+    x = embed(params["embed"], tokens)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = hints.residual(x)
+    B, S, _ = x.shape
+
+    if cfg.family == "ssm":
+        x = _rwkv_stack(params, cfg, x, remat, hints=hints, unroll=unroll)
+    elif cfg.family == "hybrid":
+        x = _hybrid_stack(params, cfg, x, remat, return_kv=False, hints=hints,
+                          unroll=unroll)
+    elif cfg.encoder_layers:
+        enc = _whisper_encoder(params, cfg, encoder_frames, unroll=unroll)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+        x = _decoder_stack_with_cross(params, cfg, x, enc, remat, return_kv,
+                                      hints=hints, unroll=unroll)
+        if return_kv:
+            x, kv = x
+    else:
+        x = _decoder_stack(params, cfg, x, remat, return_kv, hints=hints,
+                           unroll=unroll)
+        if return_kv:
+            x, kv = x
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed(params["embed"], x, tied=True)
+    else:
+        logits = unembed(params["unembed"], x, tied=False)
+    if return_kv and cfg.family not in ("ssm", "hybrid"):
+        return logits, kv
+    return logits
+
+
+def _decoder_stack(params, cfg, x, remat, return_kv=False, hints=None,
+                   unroll=False):
+    windows = layer_windows(cfg)
+
+    def body(h, xs):
+        lp, w = xs
+        if hints is not None:
+            h = hints.residual(h)
+        out = _attn_block_seq(cfg, lp, h, w, return_kv=return_kv)
+        if return_kv:
+            h, kv = out
+            return h, kv
+        return out, None
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    h, kvs = jax.lax.scan(fn, x, (params["layers"], windows),
+                          unroll=cfg.num_layers if unroll else 1)
+    if return_kv:
+        return h, kvs
+    return h
+
+
+def _rwkv_stack(params, cfg, x, remat, return_states: bool = False, hints=None,
+                unroll=False):
+    spec = rw.RWKV6Spec(cfg.d_model, cfg.d_ff, cfg.resolved_head_dim)
+
+    def body(h, lp):
+        if hints is not None:
+            h = hints.residual(h)
+        tm_in = apply_norm("layernorm", lp["ln1"], h)
+        y, wkv_final = rw.rwkv6_time_mix(lp["tm"], spec, tm_in)
+        h = h + y
+        cm_in = apply_norm("layernorm", lp["ln2"], h)
+        h = h + rw.rwkv6_channel_mix(lp["cm"], cm_in)
+        states = ((wkv_final, tm_in[:, -1:], cm_in[:, -1:])
+                  if return_states else None)
+        return h, states
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    h, states = jax.lax.scan(fn, x, params["layers"],
+                             unroll=cfg.num_layers if unroll else 1)
+    if return_states:
+        return h, states
+    return h
+
+
+def _hybrid_stack(params, cfg, x, remat, return_kv=False, return_states=False,
+                  hints=None, unroll=False):
+    spec = m2.make_spec(cfg.d_model, cfg.ssm_state, cfg.ssm_head_dim)
+    every = max(cfg.attn_every, 1)
+    apply_attn = (jnp.arange(cfg.num_layers, dtype=jnp.int32) % every) == (every - 1)
+    shared = params["shared_attn"]
+
+    def body(h, xs):
+        lp, use_attn = xs
+        if hints is not None:
+            h = hints.residual(h)
+        y, ssm_final, conv_tail = m2.mamba2_forward_with_state(
+            lp["mamba"], spec, apply_norm(cfg.norm, lp["ln"], h))
+        h = h + y
+
+        if return_kv:
+            def with_attn(hh):
+                hh2, (k, v) = _attn_block_seq(cfg, shared, hh, FULL_WINDOW,
+                                              return_kv=True)
+                return hh2, k, v
+
+            def no_attn(hh):
+                B, T = hh.shape[:2]
+                z = jnp.zeros((B, T, cfg.num_kv_heads, cfg.resolved_head_dim),
+                              hh.dtype)
+                return hh, z, z
+
+            h, k, v = jax.lax.cond(use_attn, with_attn, no_attn, h)
+            kv = (k, v)
+        else:
+            h = jax.lax.cond(
+                use_attn,
+                lambda hh: _attn_block_seq(cfg, shared, hh, FULL_WINDOW),
+                lambda hh: hh,
+                h)
+            kv = None
+        states = (ssm_final, conv_tail) if return_states else None
+        out = tuple(o for o in (kv, states) if o is not None)
+        return h, (out if out else None)
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    h, ys = jax.lax.scan(fn, x, (params["layers"], apply_attn),
+                         unroll=cfg.num_layers if unroll else 1)
+    if return_kv or return_states:
+        return h, ys
+    return h
+
+
+def _whisper_encoder(params, cfg, frames, unroll=False):
+    """frames: [B, F, d] — precomputed conv-frontend output (stub)."""
+    x = frames + params["enc_pos"][:frames.shape[1]].astype(frames.dtype)
+
+    def body(h, lp):
+        return _encoder_block_seq(cfg, lp, h), None
+
+    h, _ = jax.lax.scan(body, x, params["enc_layers"],
+                        unroll=cfg.encoder_layers if unroll else 1)
+    return apply_norm(cfg.norm, params["enc_final_norm"], h)
+
+
+def _decoder_stack_with_cross(params, cfg, x, enc_out, remat, return_kv=False,
+                              hints=None, unroll=False):
+    windows = layer_windows(cfg)
+
+    def body(h, xs):
+        lp, cp, w = xs
+        if hints is not None:
+            h = hints.residual(h)
+        out = _attn_block_seq(cfg, lp, h, w, return_kv=return_kv)
+        if return_kv:
+            h, kv = out
+        else:
+            h = out
+            kv = None
+        h = _cross_block_seq(cfg, cp, h, enc_out)
+        return h, kv
+
+    fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
+    h, kvs = jax.lax.scan(fn, x, (params["layers"], params["cross_layers"], windows),
+                          unroll=cfg.num_layers if unroll else 1)
+    if return_kv:
+        return h, kvs
+    return h

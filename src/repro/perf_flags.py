@@ -1,0 +1,49 @@
+"""Performance feature flags (the §Perf hillclimb knobs).
+
+Defaults reproduce the paper-faithful BASELINE; the optimized configurations
+are opted into per experiment (env vars so each dry-run subprocess can pin
+its own set).  EXPERIMENTS.md §Perf records the hypothesis -> change ->
+before -> after for every flag.
+
+  REPRO_WINDOWED_GATHER=1   SWA decode gathers only the live window of page
+                            slots (exploits support-core page recycling)
+  REPRO_KV_GATHER_SHARD=    'lanes' (baseline) | 'auto' — 'auto' shards the
+                            gathered KV over `model` (kv-heads when divisible,
+                            else positions -> flash-decoding-style partial
+                            softmax merge by GSPMD)
+  REPRO_MOE_LOCAL_DISPATCH=1  scatter/combine stay dp-local; the expert
+                            buffer is re-sharded to EP explicitly, turning
+                            the dispatch into all-to-all instead of masked
+                            all-reduce
+  REPRO_POOL_LAYOUT=        'pages' (baseline: page dim over dp[+model]) |
+                            'layers' — KV pool sharded over layer dim (dp) and
+                            head_dim (model): the decode append scatter's
+                            indexed dims become fully local (no pool-sized
+                            collectives); the per-layer read pays a small
+                            dp all-reduce instead
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFlags:
+    windowed_gather: bool = False
+    kv_gather_shard: str = "lanes"    # lanes | auto
+    moe_local_dispatch: bool = False
+    pool_layout: str = "pages"        # pages | layers | pages_hd
+
+    @classmethod
+    def from_env(cls) -> "PerfFlags":
+        return cls(
+            windowed_gather=os.environ.get("REPRO_WINDOWED_GATHER", "0") == "1",
+            kv_gather_shard=os.environ.get("REPRO_KV_GATHER_SHARD", "lanes"),
+            moe_local_dispatch=os.environ.get("REPRO_MOE_LOCAL_DISPATCH", "0") == "1",
+            pool_layout=os.environ.get("REPRO_POOL_LAYOUT", "pages"),
+        )
+
+
+def current_flags() -> PerfFlags:
+    return PerfFlags.from_env()

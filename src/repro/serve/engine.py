@@ -1,0 +1,156 @@
+"""Serving engine: continuous batching on top of the SpeedMalloc paged KV.
+
+Host-side orchestration (request queue, lane assignment, completion) around
+the jitted prefill/decode steps.  Admission writes prefill KV through the
+support-core (`admit_prefill` — one HMQ burst allocation per sequence),
+exactly the paper's malloc-heavy "server-client" pattern (Larson) mapped to
+serving.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core import paged_kv as pkv
+from ..core.paged_kv import PagedKVConfig
+from ..models import decode as dec
+from ..models import mamba2 as m2
+from ..models import rwkv6 as rw
+from ..models.transformer import (_hybrid_stack, _rwkv_stack,
+                                  _whisper_encoder, forward)
+from ..models.layers import embed, apply_norm
+from .serve_step import (ServeState, init_serve_state, make_decode_step,
+                         recycle_window)
+
+
+@dataclasses.dataclass
+class EngineStats:
+    admitted: int = 0
+    completed: int = 0
+    decode_steps: int = 0
+    alloc_failures: int = 0
+
+
+class ServingEngine:
+    """Continuous-batching engine.  Lanes = slots in the running batch."""
+
+    def __init__(self, cfg: ArchConfig, kvcfg: PagedKVConfig, params: dict,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.kvcfg = kvcfg
+        self.params = params
+        self.dtype = dtype
+        self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
+        # fresh empty state: deactivate the synthetic lanes
+        self.state = self.state._replace(
+            paged=pkv.init_paged_kv(kvcfg),
+            tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
+        self._decode = jax.jit(make_decode_step(cfg, kvcfg))
+        self.stats = EngineStats()
+        self.window = recycle_window(cfg)
+
+    # ---------------- admission ----------------
+
+    def admit(self, lane: int, tokens: np.ndarray,
+              frames: Optional[np.ndarray] = None,
+              patches: Optional[np.ndarray] = None) -> None:
+        """Prefill one sequence and install it in `lane`."""
+        cfg = self.cfg
+        toks = jnp.asarray(tokens, jnp.int32)[None]
+        T = toks.shape[1]
+
+        if cfg.family == "ssm":
+            h, states = _run_prefill_states(self.params, cfg, toks, self.dtype)
+            wkv, tmp, cmp = states
+            rec = self.state.rec
+            rec = dec.RecurrentState(
+                ssm=rec.ssm.at[:, lane].set(wkv[:, 0]),
+                tm_prev=rec.tm_prev.at[:, lane].set(tmp[:, 0].astype(rec.tm_prev.dtype)),
+                cm_prev=rec.cm_prev.at[:, lane].set(cmp[:, 0].astype(rec.cm_prev.dtype)))
+            paged = self.state.paged
+            paged = paged._replace(
+                seq_lens=paged.seq_lens.at[lane].set(T),
+                active=paged.active.at[lane].set(True))
+            self.state = self.state._replace(
+                rec=rec, paged=paged,
+                tokens=self.state.tokens.at[lane].set(toks[0, -1]))
+        elif cfg.family == "hybrid":
+            h, ys = _run_prefill_states(self.params, cfg, toks, self.dtype)
+            (ks, vs), (ssm, conv) = ys
+            every = max(cfg.attn_every, 1)
+            idx = np.arange(every - 1, cfg.num_layers, every)
+            k_sel = ks[idx][:, 0]     # [L_kv, T, kv, hd]
+            v_sel = vs[idx][:, 0]
+            rec = self.state.rec
+            rec = dec.RecurrentState(
+                ssm=rec.ssm.at[:, lane].set(ssm[:, 0]),
+                conv=rec.conv.at[:, lane].set(conv[:, 0].astype(rec.conv.dtype)))
+            paged, stats = pkv.admit_prefill(
+                self.kvcfg, self.state.paged, jnp.int32(lane),
+                k_sel.swapaxes(0, 0), v_sel, jnp.int32(T))
+            self.state = self.state._replace(
+                rec=rec, paged=paged,
+                tokens=self.state.tokens.at[lane].set(toks[0, -1]))
+        else:
+            enc_out = None
+            batch = {"tokens": toks}
+            if cfg.family == "audio":
+                fr = jnp.asarray(frames, self.dtype)[None]
+                enc_out = _whisper_encoder(self.params, cfg, fr)
+                logits, kv = forward(self.params, cfg, toks,
+                                     encoder_frames=fr, return_kv=True)
+            elif cfg.family == "vlm" and patches is not None:
+                pe = jnp.asarray(patches, self.dtype)[None]
+                logits, kv = forward(self.params, cfg, toks,
+                                     prefix_embeds=pe, return_kv=True)
+                T = T + pe.shape[1]
+            else:
+                logits, kv = forward(self.params, cfg, toks, return_kv=True)
+            ks, vs = kv                      # [L, B, T, kvh, hd]
+            paged, stats = pkv.admit_prefill(
+                self.kvcfg, self.state.paged, jnp.int32(lane),
+                ks[:, 0], vs[:, 0], jnp.int32(T))
+            if int(stats.failed) > 0:
+                self.stats.alloc_failures += 1
+            if enc_out is not None:
+                new_enc = self.state.enc_out.at[lane].set(enc_out[0])
+                self.state = self.state._replace(enc_out=new_enc)
+            self.state = self.state._replace(
+                paged=paged,
+                tokens=self.state.tokens.at[lane].set(
+                    jnp.argmax(logits[0, -1]).astype(jnp.int32)))
+        self.stats.admitted += 1
+
+    # ---------------- decode ----------------
+
+    def step(self) -> np.ndarray:
+        """One decode step for all active lanes; returns next tokens."""
+        self.state, logits, stats = self._decode(self.params, self.state)
+        self.stats.decode_steps += 1
+        self.stats.alloc_failures += int(stats.failed)
+        return np.asarray(self.state.tokens)
+
+    def release(self, lanes: list[int]) -> None:
+        mask = np.zeros((self.kvcfg.max_lanes,), bool)
+        mask[lanes] = True
+        paged, _ = pkv.release_lanes(self.kvcfg, self.state.paged, jnp.asarray(mask))
+        self.state = self.state._replace(paged=paged)
+        self.stats.completed += len(lanes)
+
+    @property
+    def live_pages(self) -> int:
+        return int(pkv.live_pages(self.state.paged))
+
+
+def _run_prefill_states(params, cfg, toks, dtype):
+    """Prefill for recurrent families, returning per-layer final states."""
+    x = embed(params["embed"], toks)
+    if cfg.family == "ssm":
+        return _rwkv_stack(params, cfg, x, remat=False, return_states=True)
+    return _hybrid_stack(params, cfg, x, remat=False, return_kv=True,
+                         return_states=True)

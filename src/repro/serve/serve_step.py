@@ -1,0 +1,169 @@
+"""Jitted serving steps: decode (1 token / lane / step) and prefill.
+
+The decode step is the production home of the SpeedMalloc technique: every
+step the layer stack reads paged KV via block tables (segregated metadata),
+and ends with exactly ONE support-core HMQ batch (`decode_append`) carrying
+all page mallocs (page-boundary lanes) and frees (slid-out SWA pages).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.paged_kv import (PagedKVConfig, PagedKVState, decode_append,
+                             init_paged_kv)
+from ..distributed.hints import use_hints
+from ..core.support_core import StepStats
+from ..models.decode import (RecurrentState, decode_hidden, decode_logits,
+                             init_recurrent_state)
+from ..models.model_zoo import make_paged_config
+from ..models.transformer import FULL_WINDOW
+
+
+class ServeState(NamedTuple):
+    paged: PagedKVState
+    rec: Optional[RecurrentState]
+    tokens: jnp.ndarray                  # [lanes] last sampled token
+    enc_out: Optional[jnp.ndarray] = None  # [lanes, F, d] whisper encoder output
+    step: jnp.ndarray = None             # scalar int32
+
+
+def recycle_window(cfg: ArchConfig) -> Optional[int]:
+    """Page-recycling window: only when *every* attention layer is windowed."""
+    if cfg.attn_pattern == "swa" and cfg.window:
+        return cfg.window
+    return None
+
+
+def init_serve_state(
+    cfg: ArchConfig,
+    kvcfg: PagedKVConfig,
+    lanes: int,
+    prefilled_len: int = 0,
+    dtype=jnp.bfloat16,
+) -> ServeState:
+    """A serving state with `lanes` active sequences of `prefilled_len` tokens.
+
+    Block tables / free lists are set up as if prefill already admitted the
+    sequences (used for decode dry-runs and decode benchmarks; the real
+    admission path is `repro.serve.engine`).
+    """
+    paged = init_paged_kv(kvcfg)
+    ps = kvcfg.page_size
+    N = kvcfg.num_pages
+    n_pages = (prefilled_len + ps) // ps   # incl. page for the next token
+    lane_ids = jnp.arange(lanes, dtype=jnp.int32)
+    page_grid = jnp.arange(kvcfg.max_pages_per_lane, dtype=jnp.int32)
+    window = recycle_window(cfg)
+    first_live = 0
+    if window is not None:
+        first_live = max(0, (prefilled_len - window) // ps)
+    live_per_lane = N // lanes
+    n_live = min(n_pages - first_live, live_per_lane)
+    rank = page_grid[None, :] - first_live
+    live = (rank >= 0) & (rank < n_live) & (page_grid[None, :] < n_pages)
+    tbl = jnp.where(live, lane_ids[:, None] * live_per_lane + rank, -1)
+
+    # Consistent allocator metadata: page id p is used iff its lane slot is
+    # live; free stack holds exactly the unused ids (valid FreeListState).
+    pid = jnp.arange(N, dtype=jnp.int32)
+    owner_lane = pid // live_per_lane
+    used_mask = (owner_lane < lanes) & ((pid % live_per_lane) < n_live)
+    used0 = jnp.sum(used_mask).astype(jnp.int32)
+    order = jnp.argsort(used_mask, stable=True)       # free ids first
+    alloc = paged.alloc
+    alloc = alloc._replace(
+        free_stack=alloc.free_stack.at[0].set(pid[order]),
+        free_top=alloc.free_top.at[0].set(jnp.int32(N) - used0),
+        owner=alloc.owner.at[0].set(jnp.where(used_mask, owner_lane, -1)),
+        used=alloc.used.at[0].set(used0),
+        peak_used=alloc.peak_used.at[0].set(used0),
+    )
+    paged = paged._replace(
+        alloc=alloc,
+        block_tables=tbl.astype(jnp.int32),
+        seq_lens=jnp.full((lanes,), prefilled_len, jnp.int32),
+        active=jnp.ones((lanes,), bool),
+    )
+    rec = init_recurrent_state(cfg, lanes, dtype)
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = jnp.zeros((lanes, cfg.encoder_seq_len, cfg.d_model), dtype)
+    return ServeState(paged=paged, rec=rec,
+                      tokens=jnp.zeros((lanes,), jnp.int32),
+                      enc_out=enc_out, step=jnp.zeros((), jnp.int32))
+
+
+def abstract_serve_state(cfg: ArchConfig, kvcfg: PagedKVConfig, lanes: int,
+                         prefilled_len: int, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct serving state (dry-run; no allocation)."""
+    return jax.eval_shape(
+        lambda: init_serve_state(cfg, kvcfg, lanes, prefilled_len, dtype))
+
+
+def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
+                     hints=None, unroll: bool = False):
+    """Returns serve_step(params, state) -> (state, logits, StepStats)."""
+    window = recycle_window(cfg)
+
+    def _serve_step(params: dict, state: ServeState):
+        hidden, new_kv, new_rec = decode_hidden(
+            params, cfg, kvcfg, state.paged, state.rec, state.tokens,
+            enc_out=state.enc_out, hints=hints, unroll=unroll)
+        logits = decode_logits(params, cfg, hidden)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        if new_kv is not None:
+            new_k, new_v = new_kv
+            paged, stats = decode_append(
+                kvcfg, state.paged,
+                new_k.astype(kvcfg.dtype), new_v.astype(kvcfg.dtype),
+                window=window)
+        else:
+            # attention-free (rwkv6): no pages; still advance lane clocks
+            paged = state.paged._replace(
+                seq_lens=state.paged.seq_lens + state.paged.active.astype(jnp.int32))
+            z = jnp.zeros((), jnp.int32)
+            stats = StepStats(z, z, z, z, z)
+
+        new_state = ServeState(
+            paged=paged, rec=new_rec, tokens=next_tokens,
+            enc_out=state.enc_out, step=state.step + 1)
+        return new_state, logits, stats
+
+    def serve_step(params: dict, state: ServeState):
+        with use_hints(hints):
+            return _serve_step(params, state)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ArchConfig, hints=None, unroll: bool = False):
+    """Full-sequence forward returning logits + stacked per-layer KV.
+
+    (Admission of the produced KV into the paged pool is the engine's job —
+    `repro.serve.engine.admit_sequences`.)
+    """
+    from ..models.transformer import forward
+
+    def prefill_step(params: dict, batch: dict):
+      with use_hints(hints):
+        # Serving admission needs only the LAST position's logits (the full
+        # [B, S, V] tensor is a train-path artifact; returning it would cost
+        # up to 100+ GB/device at the 32k prefill shapes).
+        if cfg.family in ("ssm", "hybrid"):
+            logits = forward(params, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("patches"),
+                             encoder_frames=batch.get("frames"),
+                             hints=hints, unroll=unroll)
+            return logits[:, -1:], None
+        logits, kv = forward(params, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("patches"),
+                             encoder_frames=batch.get("frames"),
+                             return_kv=True, hints=hints, unroll=unroll)
+        return logits[:, -1:], kv
+
+    return prefill_step

@@ -1,0 +1,76 @@
+"""Cache-pollution model: allocator metadata competing with user data.
+
+Competitive-occupancy approximation (standard in cache-sharing literature):
+in steady state each access stream occupies cache proportionally to its miss
+*pressure*; the user stream's hit rate follows a power-law miss curve in its
+effective capacity share.
+
+  occupancy_m = C * p_m / (p_m + p_u)        (p = touch rate x reuse distance)
+  user_miss(C_eff) = (ws / C_eff)^alpha      capped at 1, alpha ~ 0.5
+
+Extra user misses caused by metadata = user_apk * [miss(C - occ_m) - miss(C)].
+
+Anchors (paper Fig. 1): TCMalloc on BFS @16T — metadata conflicts are 28.3%
+of all cache misses; SpeedMalloc removes 42%/19%/23% of L2 miss cycles vs
+Je/TC/Mi-malloc (Fig. 10).  Calibration constants below were fit to those.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+L2_LINES = 4096.0          # 256 KB / 64 B (Table 2)
+MISS_ALPHA = 0.5
+
+
+class CacheStream(NamedTuple):
+    lines_touched_per_1k: jnp.ndarray   # cache lines touched / 1k instructions
+    working_set_lines: jnp.ndarray      # reuse working set (lines)
+
+
+def user_miss_rate(ws_lines, capacity_lines) -> jnp.ndarray:
+    ws = jnp.asarray(ws_lines, jnp.float32)
+    cap = jnp.maximum(jnp.asarray(capacity_lines, jnp.float32), 1.0)
+    return jnp.clip((ws / cap) ** MISS_ALPHA * 0.18, 0.0, 1.0)
+
+
+def metadata_occupancy(md: CacheStream, user: CacheStream) -> jnp.ndarray:
+    """Steady-state L2 lines held by allocator metadata."""
+    p_m = md.lines_touched_per_1k * jnp.maximum(md.working_set_lines, 1.0)
+    p_u = user.lines_touched_per_1k * jnp.maximum(user.working_set_lines, 1.0)
+    share = p_m / jnp.maximum(p_m + p_u, 1e-9)
+    # metadata cannot hold more than its own working set
+    return jnp.minimum(L2_LINES * share, md.working_set_lines)
+
+
+#: pollution amplification (fit against paper Fig. 1c / Fig. 10 / Table 3 —
+#: see scratch/fit_sim.py; documented in EXPERIMENTS.md §Paper-claims)
+POLLUTION_AMP = 10.0
+
+
+def occupancy_share(md_ws_lines, user_ws_lines) -> jnp.ndarray:
+    """Bounded [0,1) share of cache effectively lost to metadata."""
+    md = jnp.asarray(md_ws_lines, jnp.float32)
+    uw = jnp.maximum(jnp.asarray(user_ws_lines, jnp.float32), 1.0)
+    return md / (md + uw)
+
+
+def pollution_cycles_per_1k(user_miss_cycles, md_ws_lines, user_ws_lines,
+                            amp: float = POLLUTION_AMP) -> jnp.ndarray:
+    """Extra user stall cycles caused by metadata residency.
+
+    Quadratic in the occupancy share: conflict misses in pointer-chasing
+    user code grow super-linearly as metadata displaces the hot set
+    (calibrated; bounded by `amp` x the user's own miss cycles)."""
+    share = occupancy_share(md_ws_lines, user_ws_lines)
+    return jnp.asarray(user_miss_cycles, jnp.float32) * amp * share * share
+
+
+def metadata_miss_fraction(md: CacheStream, user: CacheStream) -> jnp.ndarray:
+    """Fraction of all L2 misses attributable to metadata (Fig. 1c check)."""
+    extra = pollution_extra_misses_per_1k(md, user)
+    md_own = md.lines_touched_per_1k * user_miss_rate(md.working_set_lines, L2_LINES)
+    base = user.lines_touched_per_1k * user_miss_rate(user.working_set_lines, L2_LINES)
+    total = extra + md_own + base
+    return (extra + md_own) / jnp.maximum(total, 1e-9)

@@ -1,0 +1,289 @@
+"""Trace-driven allocator simulator (pure JAX `lax.scan`).
+
+The *structural* part — per-thread caches, shared-pool refills, accel
+buffers, live/peak accounting — is simulated event by event; the *cost*
+part converts the resulting event counts into cycles with the paper-derived
+constants (``costmodel``) plus the cache-pollution model (``cachemodel``).
+
+Outputs per (workload, policy, thread-count): wall-cycles per 1k
+instructions (speedups are ratios of these), the Fig. 10/11 decompositions
+(L2-miss cycles, atomic cycles), peak memory (Fig. 12), and relative energy
+(Fig. 13).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import cachemodel as cm
+from .costmodel import (DEFAULT_COSTS, CostParams, atomic_cost, energy,
+                        queue_wait)
+from .policies import PolicySpec
+from .workloads import (IPC_BASE, NUM_CLASSES, SIZE_CLASS_BYTES, WorkloadSpec,
+                        make_trace)
+
+#: extra vulnerability to passive false sharing (cache-scratch); centralized
+#: allocation hands out thread-segregated lines (paper §6.2.2 notes Mi/TC
+#: handle this better than Je)
+FS_VULNERABILITY = {"jemalloc": 1.0, "tcmalloc": 0.35, "mimalloc": 0.20,
+                    "mallacc": 0.35, "memento": 0.30, "ic-malloc": 0.15,
+                    "speedmalloc": 0.15, "ic+signals": 0.15,
+                    "ic+signals+hmq": 0.15}
+FS_CYCLES_PER_1K = 95.0
+
+
+class SimCounts(NamedTuple):
+    mallocs: jnp.ndarray
+    frees: jnp.ndarray
+    fast_hits: jnp.ndarray        # local cache hits (software path)
+    accel_hits: jnp.ndarray       # hardware front-end hits
+    shared_trips: jnp.ndarray     # refills/flushes touching the shared tier
+    foreign_pushes: jnp.ndarray   # cross-thread frees through shared metadata
+    mmaps: jnp.ndarray
+    peak_bytes: jnp.ndarray
+    final_cached_bytes: jnp.ndarray
+
+
+def _run_trace(policy: PolicySpec, trace: dict, threads: int) -> SimCounts:
+    T, C = threads, NUM_CLASSES
+    sizes = jnp.asarray(SIZE_CLASS_BYTES, jnp.int32)
+    ev = {k: jnp.asarray(v) for k, v in trace.items()}
+
+    class St(NamedTuple):
+        local_free: jnp.ndarray    # [T, C]
+        accel_free: jnp.ndarray    # [T, C]
+        shared_free: jnp.ndarray   # [C]
+        live_bytes: jnp.ndarray
+        cached_bytes: jnp.ndarray
+        peak_bytes: jnp.ndarray
+        counts: jnp.ndarray        # [7] mallocs,frees,fast,accel,shared,foreign,mmap
+
+    def step(st: St, e):
+        t, op, c, foreign = e
+        is_m = op == 1
+        sz = sizes[c]
+        central = policy.kind == "central"
+        has_accel = policy.accel_cap > 0
+
+        local = st.local_free[t, c]
+        accel = st.accel_free[t, c]
+        shared = st.shared_free[c]
+
+        # ---- malloc path ----
+        accel_hit = is_m & has_accel & (accel > 0) & (~central)
+        local_hit = is_m & (~accel_hit) & (local > 0) & (~central)
+        miss = is_m & (~accel_hit) & (~local_hit) & (~central)
+        # refill pulls `refill_batch` from shared (counts one shared trip)
+        need_mmap = miss & (shared < policy.refill_batch)
+        new_shared = jnp.where(need_mmap, shared + 4 * policy.refill_batch, shared)
+        new_shared = jnp.where(miss, new_shared - policy.refill_batch, new_shared)
+        new_local = jnp.where(local_hit, local - 1,
+                              jnp.where(miss, local + policy.refill_batch - 1, local))
+        new_accel = jnp.where(accel_hit, accel - 1,
+                              jnp.where(miss & has_accel,
+                                        jnp.minimum(policy.accel_cap, 4), accel))
+
+        # ---- free path ----
+        is_f = op == 2
+        foreign_f = is_f & (foreign == 1) & (~central)
+        local_f = is_f & (~foreign_f) & (~central)
+        # local frees refill accel first (it buffers recent frees), then local
+        accel_push = local_f & has_accel & (accel < policy.accel_cap)
+        new_accel = jnp.where(accel_push, new_accel + 1, new_accel)
+        new_local = jnp.where(local_f & ~accel_push, new_local + 1, new_local)
+        over = local_f & (new_local > policy.local_cap)
+        flushed = jnp.maximum(new_local - policy.flush_keep, 0)
+        new_shared = jnp.where(over, new_shared + flushed, new_shared)
+        new_shared = jnp.where(foreign_f, new_shared + 1, new_shared)
+        new_local = jnp.where(over, policy.flush_keep, new_local)
+
+        local_free = st.local_free.at[t, c].set(new_local)
+        accel_free = st.accel_free.at[t, c].set(new_accel)
+        shared_free = st.shared_free.at[c].set(new_shared)
+
+        live = st.live_bytes + jnp.where(is_m, sz, -sz)
+        cached = jnp.sum(local_free * sizes[None, :]) + \
+            jnp.sum(accel_free * sizes[None, :])
+        peak = jnp.maximum(st.peak_bytes, live + cached)
+
+        counts = st.counts + jnp.stack([
+            is_m.astype(jnp.float32),
+            is_f.astype(jnp.float32),
+            local_hit.astype(jnp.float32),
+            accel_hit.astype(jnp.float32),
+            (miss | over).astype(jnp.float32),
+            foreign_f.astype(jnp.float32),
+            need_mmap.astype(jnp.float32),
+        ])
+        return St(local_free, accel_free, shared_free, live, cached, peak,
+                  counts), None
+
+    init = St(
+        local_free=jnp.zeros((T, C), jnp.int32),
+        accel_free=jnp.zeros((T, C), jnp.int32),
+        shared_free=jnp.full((C,), 64, jnp.int32),
+        live_bytes=jnp.zeros((), jnp.int32),
+        cached_bytes=jnp.zeros((), jnp.int32),
+        peak_bytes=jnp.zeros((), jnp.int32),
+        counts=jnp.zeros((7,), jnp.float32),
+    )
+    xs = (ev["thread"], ev["op"], ev["size_class"], ev["foreign"])
+    final, _ = jax.lax.scan(step, init, xs)
+    c = final.counts
+    return SimCounts(mallocs=c[0], frees=c[1], fast_hits=c[2], accel_hits=c[3],
+                     shared_trips=c[4], foreign_pushes=c[5], mmaps=c[6],
+                     peak_bytes=final.peak_bytes.astype(jnp.float32),
+                     final_cached_bytes=final.cached_bytes.astype(jnp.float32))
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=4096)
+def _cached_counts(spec_key, policy: PolicySpec, T: int, num_events: int,
+                   churn: float, foreign: float, size_dist: str, seed: int):
+    """Structural counts depend only on (trace, policy) — cache across the
+    cheap cycle re-assemblies (calibration, thread sweeps)."""
+    spec_like = WorkloadSpec(name=spec_key, threads=T, alloc_instr_frac=0.05,
+                             foreign_free_frac=foreign, size_dist=size_dist,
+                             user_ws_lines=1, user_lines_per_1k=1,
+                             churn=churn, seed=seed)
+    trace = make_trace(spec_like, num_events=num_events, threads=T)
+    cnt = _run_trace(policy, trace, T)
+    return SimCounts(*[np.asarray(x) for x in cnt])
+
+
+def simulate(spec: WorkloadSpec, policy: PolicySpec, threads: int | None = None,
+             costs: CostParams = DEFAULT_COSTS, num_events: int = 4096) -> dict:
+    """Run one (workload, policy, threads) cell; returns the metric dict."""
+    T = threads if threads is not None else spec.threads
+    cnt = _cached_counts(spec.name, policy, T, num_events, spec.churn,
+                         spec.foreign_free_frac, spec.size_dist, spec.seed)
+
+    events = cnt.mallocs + cnt.frees
+    ev_per_1k = spec.events_per_1k_instr          # per thread
+    scale = ev_per_1k / jnp.maximum(events / 1.0, 1.0)  # trace events -> per 1k
+
+    central = policy.kind == "central"
+
+    # ---- allocator path cycles (per 1k instructions, per thread) ----
+    if central:
+        m_frac = float(cnt.mallocs / jnp.maximum(events, 1.0))
+        f_frac = 1.0 - m_frac
+        # Support-core demand per 1k instructions (server-side work for ALL
+        # threads' requests lands on the single server).
+        demand = T * ev_per_1k * (m_frac * policy.service_malloc
+                                  + f_frac * policy.service_free)
+        # self-consistent utilization: rho = server demand / wall cycles,
+        # iterated once from the no-queue estimate
+        per_malloc_base = 2 * policy.signal_cost + policy.service_malloc
+        per_free_base = policy.signal_cost + (
+            0.0 if policy.free_async
+            else policy.signal_cost + policy.service_free)
+        client = ev_per_1k * (m_frac * per_malloc_base + f_frac * per_free_base)
+        atomics = (cnt.mallocs + cnt.frees) * policy.atomics_per_request
+        wall0 = 1000.0 / IPC_BASE + client
+        if policy.free_async:   # malloc-priority: frees don't delay mallocs
+            rho = spec.burst * (demand * m_frac * policy.service_malloc
+                                / max(m_frac * policy.service_malloc
+                                      + f_frac * policy.service_free, 1e-9)) / wall0
+        else:
+            rho = spec.burst * demand / wall0
+        wait_m = queue_wait(policy.service_malloc, rho)
+        alloc_cycles = jnp.float32(client + ev_per_1k * m_frac * float(wait_m))
+        queue_cycles = ev_per_1k * m_frac * float(wait_m)
+        serial_floor = float(demand)   # wall >= total server demand
+    else:
+        serial_floor = 0.0
+        per_fast = costs.malloc_fast
+        per_accel = policy.accel_hit_cost
+        per_shared = costs.malloc_shared
+        alloc_cycles = (cnt.fast_hits * per_fast + cnt.accel_hits * per_accel
+                        + cnt.shared_trips * per_shared
+                        + cnt.frees * costs.free_fast
+                        + cnt.mmaps * costs.mmap) * scale
+        atomics = (cnt.shared_trips * policy.atomics_per_shared_trip
+                   + cnt.foreign_pushes * policy.atomics_per_foreign_free)
+        queue_cycles = jnp.float32(0.0)
+
+    contenders = jnp.maximum(policy.atomic_contention_frac * T, 1.0)
+    atomic_cycles = atomics * atomic_cost(costs, contenders) * scale
+
+    # ---- cache pollution (metadata on main cores) ----
+    md_ws = policy.md_ws_lines_per_thread * min(T, 8)   # neighbors' metadata too
+    if spec.user_miss_cycles > 0:
+        user_mem_cycles = spec.user_miss_cycles
+    else:
+        base_miss = cm.user_miss_rate(spec.user_ws_lines, cm.L2_LINES)
+        user_mem_cycles = spec.user_lines_per_1k * base_miss * costs.dram
+    pollution_cycles = float(cm.pollution_cycles_per_1k(
+        user_mem_cycles, md_ws, spec.user_ws_lines))
+    md_own_cycles = policy.md_lines_per_op * ev_per_1k * 0.15 * costs.dram
+    md = cm.CacheStream(jnp.float32(policy.md_lines_per_op * ev_per_1k),
+                        jnp.float32(md_ws))
+    user = cm.CacheStream(jnp.float32(spec.user_lines_per_1k),
+                          jnp.float32(spec.user_ws_lines))
+
+    fs_cycles = spec.false_sharing * FS_VULNERABILITY.get(policy.name, 0.3) \
+        * FS_CYCLES_PER_1K
+
+    base_cycles = policy.instr_factor * 1000.0 / IPC_BASE
+    l2_miss_cycles = user_mem_cycles + pollution_cycles + md_own_cycles
+    total = (base_cycles + l2_miss_cycles + alloc_cycles + atomic_cycles
+             + fs_cycles + policy.pf_cycles_per_1k * ev_per_1k)
+    total = jnp.maximum(total, jnp.float32(serial_floor))  # central server bound
+
+    # ---- memory (Fig. 12): peak live + policy cache overhead ----
+    peak = cnt.peak_bytes
+    if central and policy.free_async:
+        # deferred free: one HMQ window of frees stays live past its free()
+        avg_size = float(np.mean(SIZE_CLASS_BYTES))
+        peak = peak + T * 2.0 * avg_size
+
+    return {
+        "workload": spec.name, "policy": policy.name, "threads": T,
+        "cycles_per_1k": float(total),
+        "base_cycles": float(base_cycles),
+        "alloc_cycles": float(alloc_cycles),
+        "atomic_cycles": float(atomic_cycles),
+        "queue_cycles": float(queue_cycles),
+        "l2_miss_cycles": float(l2_miss_cycles),
+        "pollution_cycles": float(pollution_cycles + md_own_cycles),
+        "fs_cycles": float(fs_cycles),
+        "peak_bytes": float(peak),
+        "fast_hit_rate": float((cnt.fast_hits + cnt.accel_hits)
+                               / jnp.maximum(cnt.mallocs, 1.0)),
+        "metadata_miss_fraction": float(
+            (pollution_cycles + md_own_cycles)
+            / max(pollution_cycles + md_own_cycles + user_mem_cycles, 1e-9)),
+        "energy": float(_power(policy, T, costs) * total),
+    }
+
+
+def _power(policy: PolicySpec, T: int, costs: CostParams) -> float:
+    p = T * (costs.big_core_power + policy.per_core_power_adder)
+    if policy.extra_core == "big":
+        p += costs.big_core_power
+    elif policy.extra_core == "little":
+        p += costs.support_core_power
+    return p * (1.0 + costs.uncore_power_frac)
+
+
+def speedup_table(workloads, policies, threads=16, **kw) -> dict:
+    """cycles ratios vs the first policy (convention: jemalloc first)."""
+    rows: dict = {}
+    for spec in workloads:
+        cells = {p.name: simulate(spec, p, threads=threads, **kw) for p in policies}
+        base = cells[policies[0].name]["cycles_per_1k"]
+        rows[spec.name] = {name: base / c["cycles_per_1k"]
+                           for name, c in cells.items()}
+        rows[spec.name]["_cells"] = cells
+    return rows
+
+
+def geomean(values) -> float:
+    a = np.asarray(list(values), np.float64)
+    return float(np.exp(np.log(a).mean()))

@@ -1,0 +1,150 @@
+"""Allocator policy models: the paper's five baselines + IC-Malloc + SpeedMalloc.
+
+Each policy is a :class:`PolicySpec` consumed by the trace engine.  Three
+kinds:
+
+  local   — tiered software allocators (Jemalloc / TCMalloc / Mimalloc):
+            per-thread caches, shared pool refills guarded by atomics,
+            metadata resident in MAIN-core caches (pollution).
+  accel   — per-core hardware front-ends (Mallacc, Memento+): local fast
+            path at cache-access speed, but the shared tier is unchanged
+            (atomics + shared-metadata pollution remain — §2.3).
+  central — single-owner offload (IC-Malloc, SpeedMalloc): no thread-local
+            metadata on main cores (zero pollution), requests serialized
+            through one server.  IC-Malloc pays atomic-based cross-core
+            round-trips (§6.4.2); SpeedMalloc pays the 8-cycle signal and
+            HMQ service, frees are async (malloc-priority, §5.2).
+
+Structural parameters (batch sizes, cache caps, metadata footprints) follow
+each allocator's public design; see inline notes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+
+class PolicySpec(NamedTuple):
+    name: str
+    kind: str                       # local | accel | central
+    # tiered-cache structure
+    refill_batch: int = 16          # objects pulled from shared tier on miss
+    local_cap: int = 64             # per-(thread,class) cached objects
+    flush_keep: int = 32            # objects kept after a flush
+    # metadata footprint on MAIN cores
+    md_lines_per_op: float = 2.0    # metadata cache lines touched per op
+    md_ws_lines_per_thread: float = 160.0
+    # shared-tier synchronization
+    atomic_contention_frac: float = 1.0   # fraction of threads contending
+    atomics_per_shared_trip: float = 2.0
+    atomics_per_foreign_free: float = 1.0
+    # instruction-count factor vs Jemalloc (§6.2.2: TCM -11.1%, Mi -13.9%,
+    # SpeedMalloc additional -4.97% over TCMalloc)
+    instr_factor: float = 1.0
+    pf_cycles_per_1k: float = 0.0   # residual page-fault/kernel overhead
+    # accel front-end
+    accel_cap: int = 0              # buffered entries per size class
+    accel_hit_cost: float = 4.0
+    # central offload
+    service_malloc: float = 0.0
+    service_free: float = 0.0
+    signal_cost: float = 0.0
+    atomics_per_request: float = 0.0  # IC-Malloc software queue
+    free_async: bool = False
+    # energy accounting
+    extra_core: str = "none"        # none | big | little
+    per_core_power_adder: float = 0.0
+
+
+JEMALLOC = PolicySpec(
+    # arena-based: moderate thread caching, bin metadata spread across
+    # arenas; highest metadata footprint & kernel overhead of the three.
+    name="jemalloc", kind="local",
+    refill_batch=4, local_cap=16, flush_keep=8,
+    md_lines_per_op=4.5, md_ws_lines_per_thread=520.0,
+    atomic_contention_frac=0.75,     # 4 arenas serve 16 threads, hot arenas skew
+    atomics_per_shared_trip=3.5,
+    atomics_per_foreign_free=2.5,    # remote arena lock both ways
+    instr_factor=1.0, pf_cycles_per_1k=110.0,  # per event; §6.2.2: page faults in
+    #                                kernel, outside the allocation phase
+)
+
+TCMALLOC = PolicySpec(
+    # per-thread cache + central transfer cache; batch refills; global
+    # transfer-cache lock -> full contention.
+    name="tcmalloc", kind="local",
+    refill_batch=16, local_cap=64, flush_keep=32,
+    md_lines_per_op=2.2, md_ws_lines_per_thread=260.0,
+    atomic_contention_frac=0.5,      # transfer cache sharded by size class
+    atomics_per_shared_trip=2.0,
+    instr_factor=0.889, pf_cycles_per_1k=8.0,
+)
+
+MIMALLOC = PolicySpec(
+    # free-list sharding per page (aggregated metadata layout): cheap local
+    # ops, foreign frees via per-page atomic push (low contention).
+    name="mimalloc", kind="local",
+    refill_batch=32, local_cap=128, flush_keep=64,
+    md_lines_per_op=1.6, md_ws_lines_per_thread=200.0,
+    atomic_contention_frac=0.22,     # per-page sharded frees
+    atomics_per_shared_trip=1.5,
+    instr_factor=0.861, pf_cycles_per_1k=7.0,
+)
+
+MALLACC = PolicySpec(
+    # TCMalloc + 16KB malloc-cache at L1: pops/pushes of hot size classes at
+    # ~L1 speed.  Shared tier identical to TCMalloc (multi-thread weakness).
+    name="mallacc", kind="accel",
+    refill_batch=16, local_cap=64, flush_keep=32,
+    md_lines_per_op=1.2, md_ws_lines_per_thread=210.0,
+    atomic_contention_frac=1.0, atomics_per_shared_trip=2.0,
+    instr_factor=0.889, pf_cycles_per_1k=7.0,
+    accel_cap=48, accel_hit_cost=4.0,
+    per_core_power_adder=0.04,
+)
+
+MEMENTO = PolicySpec(
+    # Memento+ (§6.1.3): near-core object allocator, 16 entries per size
+    # class; TCMalloc transfer cache on the coherent bus for cross-thread.
+    name="memento", kind="accel",
+    refill_batch=16, local_cap=16, flush_keep=8,
+    md_lines_per_op=0.9, md_ws_lines_per_thread=150.0,
+    atomic_contention_frac=1.0, atomics_per_shared_trip=2.0,
+    instr_factor=0.889, pf_cycles_per_1k=7.0,
+    accel_cap=16, accel_hit_cost=4.0,
+    per_core_power_adder=0.06,
+)
+
+IC_MALLOC = PolicySpec(
+    # §6.4.2: harvest an idle big core; cross-core communication via atomic
+    # software queues (no signals, no HMQ); decoupled metadata (no pollution).
+    name="ic-malloc", kind="central",
+    md_lines_per_op=0.0, md_ws_lines_per_thread=0.0,
+    instr_factor=0.889, pf_cycles_per_1k=7.0,
+    service_malloc=40.0, service_free=28.0,
+    atomics_per_request=2.0,       # enqueue + dequeue/response
+    free_async=False,
+    extra_core="big",
+)
+
+SPEEDMALLOC = PolicySpec(
+    # the paper's system: signals (8cy) + HMQ (malloc-priority, async free),
+    # centralized metadata in the support-core L1, zero atomics.
+    name="speedmalloc", kind="central",
+    md_lines_per_op=0.0, md_ws_lines_per_thread=0.0,
+    instr_factor=0.845, pf_cycles_per_1k=6.0,  # -4.97% instr vs TCMalloc (§6.2.2)
+    service_malloc=14.0, service_free=10.0,
+    signal_cost=8.0, atomics_per_request=0.0,
+    free_async=True,
+    extra_core="little",
+)
+
+#: IC-Malloc ablation variants for Fig. 17 (decoupled -> +signals -> +HMQ)
+IC_PLUS_SIGNALS = IC_MALLOC._replace(
+    name="ic+signals", signal_cost=8.0, atomics_per_request=0.0,
+    service_malloc=30.0, service_free=22.0)
+SPEEDMALLOC_FULL = SPEEDMALLOC._replace(name="ic+signals+hmq")
+
+BASELINES = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO]
+ALL_POLICIES = {p.name: p for p in
+                [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO,
+                 IC_MALLOC, SPEEDMALLOC]}

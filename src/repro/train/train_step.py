@@ -1,0 +1,78 @@
+"""The jitted training step: grad-accum microbatching, remat, optional
+gradient compression, sharding-aware.
+
+``make_train_step`` returns a pure ``(params, opt_state, batch) -> (params,
+opt_state, metrics)`` suitable for ``jax.jit(in_shardings=..., donate...)``.
+Microbatching is a ``lax.scan`` over the leading batch split, so XLA can
+overlap the per-microbatch gradient reduce-scatter with the next
+microbatch's compute (the standard DP overlap trick).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.compression import CompressionConfig, compress_decompress
+from ..distributed.hints import use_hints
+from ..models.model_zoo import loss_fn
+from .optimizer import AdamW, AdamWState
+
+
+def _split_microbatches(batch: dict, accum: int, hints=None) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} not divisible by accum {accum}"
+        x = x.reshape(accum, b // accum, *x.shape[1:])
+        return hints.microbatches(x) if hints is not None else x
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: AdamW,
+    grad_accum: int = 1,
+    remat: bool = True,
+    compression: Optional[CompressionConfig] = None,
+    hints=None,
+    unroll: bool = False,
+):
+    def _train_step(params, opt_state: AdamWState, batch: dict):
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(p, cfg, mb, remat=remat, hints=hints,
+                                  unroll=unroll),
+            has_aux=True)
+
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            mbs = _split_microbatches(batch, grad_accum, hints)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, mb):
+                acc, lsum = carry
+                (l, _), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, lsum + l), None
+
+            (grads, lsum), _ = jax.lax.scan(body, (zero, jnp.float32(0)), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = lsum / grad_accum
+            metrics = {"loss": loss}
+
+        if compression is not None and compression.enabled:
+            grads, opt_state = compress_decompress(grads, opt_state, compression)
+
+        params, opt_state, gnorm = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    def train_step(params, opt_state: AdamWState, batch: dict):
+        with use_hints(hints):     # ambient hints for trace-time consumers (MoE)
+            return _train_step(params, opt_state, batch)
+
+    return train_step

@@ -1,0 +1,162 @@
+"""Training driver: checkpoint/restart, watchdog, failure recovery.
+
+The fault-tolerance contract (DESIGN.md §5):
+  * periodic **async** checkpoints (training never blocks on serialization);
+  * automatic **restore-on-start** from the newest intact checkpoint, with
+    resharding onto the current mesh (elastic restart after losing hosts);
+  * **deterministic data replay**: the pipeline is keyed by (seed, step,
+    host), so a restart resumes the exact token stream;
+  * **watchdog**: per-step wall-time tracking flags straggler steps (> k x
+    the trailing median) — at pod scale this is the signal to evict/replace
+    a slow host;
+  * **retry loop**: transient step failures (preemption-style) retry from
+    the last checkpoint up to `max_restarts` times.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from pathlib import Path
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..data.pipeline import DataPipeline, TokenSource
+from ..distributed.checkpoint import (AsyncCheckpointer, latest_step,
+                                      restore_checkpoint)
+from ..models.model_zoo import init_params
+from .optimizer import AdamW
+from .train_step import make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+    straggler_factor: float = 3.0
+    max_restarts: int = 3
+    grad_accum: int = 1
+    batch_size: int = 8
+    seq_len: int = 128
+    seed: int = 0
+    log_every: int = 10
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int = 0
+    restarts: int = 0
+    restored_from: Optional[int] = None
+    straggler_steps: int = 0
+    final_loss: float = float("nan")
+    step_times_ms: list = dataclasses.field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig,
+                 dtype=jnp.float32, fail_injector: Optional[Callable] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.dtype = dtype
+        self.fail_injector = fail_injector  # (step) -> None, raises to simulate
+        self.optimizer = AdamW(lr=1e-3)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, self.optimizer, grad_accum=tcfg.grad_accum))
+        self.ckpt = AsyncCheckpointer(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+        self.report = TrainerReport()
+
+    # -------------- state ----------------
+
+    def init_state(self):
+        params = init_params(self.cfg, seed=self.tcfg.seed, dtype=self.dtype)
+        opt_state = self.optimizer.init(params)
+        return params, opt_state, 0
+
+    def restore_or_init(self):
+        step = latest_step(self.tcfg.checkpoint_dir)
+        params, opt_state, _ = self.init_state()
+        if step is None:
+            return params, opt_state, 0
+        (params, opt_state), _ = restore_checkpoint(
+            self.tcfg.checkpoint_dir, (params, opt_state), step=step)
+        self.report.restored_from = step
+        return params, opt_state, step
+
+    # -------------- loop ----------------
+
+    def run(self) -> TrainerReport:
+        tcfg = self.tcfg
+        restarts = 0
+        while True:
+            try:
+                self._run_inner()
+                break
+            except _InjectedFailure:
+                # drain any in-flight checkpoint before restarting, so the
+                # restart sees the newest completed save
+                self.ckpt.wait()
+                restarts += 1
+                self.report.restarts = restarts
+                if restarts > tcfg.max_restarts:
+                    raise RuntimeError("exceeded max_restarts")
+                continue
+        self.ckpt.wait()
+        return self.report
+
+    def _run_inner(self) -> None:
+        tcfg = self.tcfg
+        params, opt_state, start = self.restore_or_init()
+        source = TokenSource(self.cfg, seed=tcfg.seed)
+        pipeline = DataPipeline(source, global_batch=tcfg.batch_size,
+                                seq_len=tcfg.seq_len, start_step=start)
+        times: list[float] = []
+        try:
+            for step in range(start, tcfg.total_steps):
+                batch = next(pipeline)
+                assert batch.pop("_step") == step, "data replay misaligned"
+                if self.fail_injector is not None:
+                    self.fail_injector(step)
+                t0 = time.monotonic()
+                params, opt_state, metrics = self.step_fn(
+                    params, opt_state, {k: jnp.asarray(v) for k, v in batch.items()})
+                loss = float(metrics["loss"])
+                dt = (time.monotonic() - t0) * 1e3
+                times.append(dt)
+                self.report.step_times_ms.append(dt)
+                # watchdog: straggler detection against trailing median
+                if len(times) >= 5:
+                    med = statistics.median(times[-20:])
+                    if dt > self.tcfg.straggler_factor * med:
+                        self.report.straggler_steps += 1
+                if (step + 1) % tcfg.checkpoint_every == 0 \
+                        or step + 1 == tcfg.total_steps:
+                    self.ckpt.save((params, opt_state), step + 1)
+                if (step + 1) % tcfg.log_every == 0:
+                    print(f"step {step + 1}: loss={loss:.4f} ({dt:.0f} ms)",
+                          flush=True)
+                self.report.steps_run += 1
+                self.report.final_loss = loss
+        finally:
+            pipeline.close()
+
+
+class _InjectedFailure(RuntimeError):
+    """Simulated preemption/node failure (tests)."""
+
+
+def make_preemption_injector(fail_at_step: int):
+    """Raise once at `fail_at_step` (simulates losing the job mid-run)."""
+    fired = {"done": False}
+
+    def inject(step: int):
+        if step == fail_at_step and not fired["done"]:
+            fired["done"] = True
+            raise _InjectedFailure(f"simulated preemption at step {step}")
+
+    return inject

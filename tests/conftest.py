@@ -1,0 +1,15 @@
+import os
+import sys
+from pathlib import Path
+
+# Tests must see ONE device (the dry-run sets its own XLA_FLAGS in its own
+# process); make the src layout importable regardless of how pytest is run.
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(0)

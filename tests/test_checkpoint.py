@@ -1,0 +1,70 @@
+"""Checkpointing: roundtrip, integrity, async, atomic commit, GC."""
+import json
+import shutil
+import tempfile
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.distributed.checkpoint import (AsyncCheckpointer, latest_step,
+                                          restore_checkpoint, save_checkpoint)
+from repro.models import init_params
+from repro.train.optimizer import AdamW
+
+
+@pytest.fixture
+def tree():
+    cfg = smoke_config("gemma3-1b")
+    params = init_params(cfg, dtype=jnp.float32)
+    return (params, AdamW().init(params))
+
+
+def test_roundtrip(tree, tmp_path):
+    save_checkpoint(tmp_path, tree, 7)
+    assert latest_step(tmp_path) == 7
+    restored, step = restore_checkpoint(tmp_path, tree)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_integrity_detection(tree, tmp_path):
+    path = save_checkpoint(tmp_path, tree, 1)
+    idx = json.loads((path / "index_p0.json").read_text())
+    victim = next(iter(idx["arrays"].values()))["file"]
+    arr = np.load(path / victim)
+    arr_corrupt = arr.copy()
+    arr_corrupt.flat[0] += 1
+    np.save(path / victim, arr_corrupt)
+    with pytest.raises(IOError, match="integrity"):
+        restore_checkpoint(tmp_path, tree)
+
+
+def test_dtype_resharding_restore(tree, tmp_path):
+    """Restore into a different-dtype template (e.g. bf16 training restart)."""
+    save_checkpoint(tmp_path, tree, 2)
+    template = jax.tree.map(
+        lambda x: jnp.zeros(x.shape, jnp.bfloat16)
+        if x.dtype == jnp.float32 else x, tree)
+    restored, _ = restore_checkpoint(tmp_path, template)
+    leaf = jax.tree.leaves(restored)[0]
+    assert leaf.dtype in (jnp.bfloat16, jnp.int32)
+
+
+def test_async_and_gc(tree, tmp_path):
+    ck = AsyncCheckpointer(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(tree, s)
+    ck.wait()
+    steps = sorted(int(p.name.split("_")[1]) for p in Path(tmp_path).glob("step_*"))
+    assert steps == [3, 4]
+
+
+def test_atomic_commit_no_partial(tree, tmp_path):
+    """A .tmp dir never counts as a checkpoint."""
+    (Path(tmp_path) / "step_00000009.tmp").mkdir(parents=True)
+    assert latest_step(tmp_path) is None

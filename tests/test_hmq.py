@@ -1,0 +1,67 @@
+"""HMQ scheduler: malloc-priority + round-robin fairness properties."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hmq import round_robin_rank, schedule
+from repro.core.packets import OP_FREE, OP_MALLOC, OP_NOP, make_queue
+
+
+def test_round_robin_rank_basic():
+    lane = jnp.array([0, 1, 0, 2, 1, 0], jnp.int32)
+    valid = jnp.ones(6, bool)
+    assert round_robin_rank(lane, valid).tolist() == [0, 0, 1, 0, 1, 2]
+
+
+def test_schedule_malloc_first_then_rr():
+    q = make_queue(
+        ops=[OP_FREE, OP_MALLOC, OP_MALLOC, OP_NOP, OP_MALLOC, OP_FREE],
+        lanes=[2, 1, 0, 0, 1, 0], size_classes=[0] * 6, args=[1] * 6)
+    sched, unperm = schedule(q)
+    ops = sched.op.tolist()
+    # all mallocs before all frees before nops
+    m_end = ops.index(OP_FREE)
+    assert all(o == OP_MALLOC for o in ops[:m_end])
+    assert OP_MALLOC not in ops[m_end:]
+    # round 0 in lane order: lanes of first two mallocs are 0, 1
+    assert sched.lane.tolist()[:2] == [0, 1]
+    # unperm routes responses back: sched[unperm[i]] == original slot i
+    for i in range(6):
+        j = int(unperm[i])
+        assert int(sched.op[j]) == int(q.op[i])
+        assert int(sched.lane[j]) == int(q.lane[i])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from([OP_MALLOC, OP_FREE, OP_NOP]),
+                          st.integers(0, 4)), min_size=1, max_size=24))
+def test_schedule_is_permutation_and_fair(entries):
+    ops = [e[0] for e in entries]
+    lanes = [e[1] for e in entries]
+    q = make_queue(ops, lanes, [0] * len(ops), [1] * len(ops))
+    sched, unperm = schedule(q)
+    # permutation property
+    assert sorted(sched.op.tolist()) == sorted(ops)
+    assert sorted(unperm.tolist()) == list(range(len(ops)))
+    # malloc priority
+    sops = sched.op.tolist()
+    if OP_MALLOC in sops and OP_FREE in sops:
+        assert max(i for i, o in enumerate(sops) if o == OP_MALLOC) \
+            < min(i for i, o in enumerate(sops) if o == OP_FREE)
+    # fairness: mallocs are served in (arrival-round, lane) order, where a
+    # lane's round counts its requests in the SAME queue (Fig. 7: malloc and
+    # free queues are separate)
+    rounds_m, rounds_f = {}, {}
+    keys = []
+    for o, l in zip(ops, lanes):
+        table = rounds_m if o == OP_MALLOC else rounds_f
+        r = table.get(l, 0)
+        if o != OP_NOP:
+            table[l] = r + 1
+        keys.append((r, l))
+    # reconstruct scheduled keys via the permutation
+    perm_keys = [None] * len(ops)
+    for orig, j in enumerate(unperm.tolist()):
+        perm_keys[j] = keys[orig]
+    sched_m = [k for k, o in zip(perm_keys, sops) if o == OP_MALLOC]
+    assert sched_m == sorted(k for k, o in zip(keys, ops) if o == OP_MALLOC)

@@ -1,0 +1,69 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.packets import OP_MALLOC, OP_NOP
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.hmq_alloc.ops import hmq_alloc_op
+from repro.kernels.paged_attention.ops import paged_decode_attention_op
+
+
+@pytest.mark.parametrize("B,KV,G,hd,ps,P,dtype", [
+    (3, 2, 4, 32, 8, 5, jnp.float32),
+    (2, 1, 8, 64, 16, 4, jnp.float32),
+    (2, 4, 1, 128, 8, 6, jnp.bfloat16),   # MHA-style G=1
+    (1, 2, 2, 16, 4, 3, jnp.float32),
+])
+@pytest.mark.parametrize("window", [1 << 30, 19])
+def test_paged_attention_kernel(rng, B, KV, G, hd, ps, P, dtype, window):
+    H = KV * G
+    npages = B * P + 2
+    q = jnp.asarray(rng.randn(B, H, hd), dtype)
+    kp = jnp.asarray(rng.randn(npages, ps, KV, hd), dtype)
+    vp = jnp.asarray(rng.randn(npages, ps, KV, hd), dtype)
+    tables = jnp.asarray(rng.permutation(npages)[:B * P].reshape(B, P), jnp.int32)
+    seq = jnp.asarray(rng.randint(1, P * ps - 1, size=B), jnp.int32)
+    out_k = paged_decode_attention_op(q, kp, vp, tables, seq, window=window)
+    out_r = paged_decode_attention_op(q, kp, vp, tables, seq, window=window,
+                                      impl="ref")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                               np.asarray(out_r, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("Tq,Tk,H,KV,hd,bq,bk,causal,window,dtype", [
+    (32, 32, 4, 2, 32, 16, 16, True, 1 << 30, jnp.float32),
+    (64, 64, 4, 1, 64, 32, 16, True, 24, jnp.float32),
+    (32, 32, 2, 2, 32, 8, 8, False, 1 << 30, jnp.float32),
+    (64, 64, 8, 2, 128, 32, 32, True, 1 << 30, jnp.bfloat16),
+])
+def test_flash_attention_kernel(rng, Tq, Tk, H, KV, hd, bq, bk, causal,
+                                window, dtype):
+    B = 2
+    q = jnp.asarray(rng.randn(B, Tq, H, hd), dtype)
+    k = jnp.asarray(rng.randn(B, Tk, KV, hd), dtype)
+    v = jnp.asarray(rng.randn(B, Tk, KV, hd), dtype)
+    a = flash_attention_op(q, k, v, causal=causal, window=window,
+                           block_q=bq, block_k=bk)
+    b = flash_attention_op(q, k, v, causal=causal, window=window, impl="ref")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("Q,C,N,R,scarce", [
+    (16, 2, 32, 4, False), (64, 4, 128, 8, False), (32, 3, 16, 4, True),
+])
+def test_hmq_alloc_kernel(rng, Q, C, N, R, scarce):
+    op = jnp.asarray(np.where(rng.rand(Q) < 0.7, OP_MALLOC, OP_NOP), jnp.int32)
+    cls = jnp.asarray(rng.randint(0, C, Q), jnp.int32)
+    want = jnp.asarray(rng.randint(1, R + 1, Q), jnp.int32)
+    stack = jnp.asarray(np.stack([rng.permutation(N) for _ in range(C)]), jnp.int32)
+    top = jnp.asarray(rng.randint(2 if scarce else N // 2,
+                                  N // 4 if scarce else N, C), jnp.int32)
+    outs_k = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R)
+    outs_r = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R, impl="ref")
+    for a, b in zip(outs_k, outs_r):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

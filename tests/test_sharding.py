@@ -1,0 +1,70 @@
+"""Sharding rules: divisibility-safety and placement policy on the
+production mesh shapes (AbstractMesh: no devices needed)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.distributed.sharding import (batch_specs, dp_axes, param_specs,
+                                        serve_state_specs)
+from repro.models import abstract_params
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("multi", [False, True])
+def test_param_specs_divisible(arch, multi):
+    cfg = get_config(arch)
+    mesh = _mesh(multi)
+    sizes = _axis_sizes(mesh)
+    params = abstract_params(cfg)
+    specs = param_specs(cfg, mesh, params)
+
+    def check(leaf, spec):
+        for dim, want in zip(leaf.shape, spec):
+            if want is None:
+                continue
+            n = 1
+            for a in (want if isinstance(want, tuple) else (want,)):
+                n *= sizes[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, params, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_big_params_are_sharded():
+    """No single param shard of qwen2-72b may exceed 1 GB on 256 chips."""
+    cfg = get_config("qwen2-72b")
+    mesh = _mesh()
+    sizes = _axis_sizes(mesh)
+    params = abstract_params(cfg)
+    specs = param_specs(cfg, mesh, params)
+
+    def shard_bytes(leaf, spec):
+        n = leaf.size * leaf.dtype.itemsize
+        for dim, want in zip(leaf.shape, spec):
+            if want is None:
+                continue
+            for a in (want if isinstance(want, tuple) else (want,)):
+                n //= sizes[a]
+        return n
+
+    worst = max(jax.tree.leaves(jax.tree.map(
+        shard_bytes, params, specs, is_leaf=lambda x: isinstance(x, P))))
+    assert worst < 1 << 30
+
+
+def test_dp_axes():
+    assert dp_axes(_mesh()) == ("data",)
+    assert dp_axes(_mesh(True)) == ("pod", "data")

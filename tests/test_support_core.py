@@ -1,0 +1,175 @@
+"""Support-core allocator: unit tests + hypothesis property tests against a
+Python oracle allocator (the system's core invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.freelist import init_freelist, validate_freelist
+from repro.core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
+                                OP_NOP, make_queue)
+from repro.core.support_core import support_core_step
+
+
+def test_basic_alloc_and_stats():
+    st_ = init_freelist([4, 8])
+    q = make_queue([OP_MALLOC, OP_MALLOC, OP_MALLOC], [0, 1, 0], [0, 0, 1], [2, 2, 3])
+    st2, resp, stats = support_core_step(st_, q, max_blocks_per_req=4)
+    assert resp.status.tolist() == [1, 1, 1]
+    assert st2.free_top.tolist() == [0, 5]
+    assert st2.used.tolist() == [4, 3]
+    assert int(stats.blocks_allocated) == 7
+    validate_freelist(st2)
+
+
+def test_scarcity_fails_late_rounds_first():
+    st_ = init_freelist([3])
+    # lanes 0,1,2 each ask 1 (round 0), lane 0 asks another (round 1) ->
+    # round-robin fairness: the round-1 request fails, not lane 2
+    q = make_queue([OP_MALLOC] * 4, [0, 0, 1, 2], [0] * 4, [1] * 4)
+    st2, resp, _ = support_core_step(st_, q)
+    assert resp.status.tolist() == [1, 0, 1, 1]
+    validate_freelist(st2)
+
+
+def test_deferred_free_semantics():
+    """This step's frees cannot serve this step's mallocs (HMQ malloc-priority)."""
+    st_ = init_freelist([2])
+    q = make_queue([OP_MALLOC, OP_MALLOC, OP_FREE, OP_MALLOC],
+                   [0, 1, 0, 2], [0] * 4, [1, 1, FREE_ALL, 1])
+    st2, resp, _ = support_core_step(st_, q)
+    assert resp.status.tolist() == [1, 1, 1, 0]
+    assert int(st2.free_top[0]) == 1  # lane0's block recycled for NEXT step
+    validate_freelist(st2)
+
+
+def test_free_all_cross_class():
+    st_ = init_freelist([4, 4])
+    q = make_queue([OP_MALLOC, OP_MALLOC], [7, 7], [0, 1], [2, 3])
+    st2, _, _ = support_core_step(st_, q, max_blocks_per_req=4)
+    q2 = make_queue([OP_FREE, OP_FREE], [7, 7], [0, 1], [FREE_ALL, FREE_ALL])
+    st3, _, _ = support_core_step(st2, q2)
+    assert st3.used.tolist() == [0, 0]
+    assert st3.free_top.tolist() == [4, 4]
+    validate_freelist(st3)
+
+
+def test_double_free_is_noop():
+    st_ = init_freelist([4])
+    q = make_queue([OP_MALLOC], [0], [0], [1])
+    st2, resp, _ = support_core_step(st_, q)
+    blk = int(resp.blocks[0, 0])
+    q2 = make_queue([OP_FREE, OP_FREE], [0, 0], [0, 0], [blk, blk])
+    st3, _, stats = support_core_step(st2, q2)
+    assert int(stats.blocks_freed) == 1
+    validate_freelist(st3)
+
+
+class PyOracle:
+    """Reference allocator with explicit per-step deferred frees."""
+
+    def __init__(self, capacities):
+        self.free = {c: list(range(cap)) for c, cap in enumerate(capacities)}
+        self.owner = {}
+
+    def step(self, reqs, max_per_req):
+        mallocs = [r for r in reqs if r[0] == OP_MALLOC]
+        frees = [r for r in reqs if r[0] == OP_FREE]
+        # round-robin order by (round, lane)
+        seen = {}
+        keyed = []
+        for idx, r in enumerate(mallocs):
+            rnd = seen.get(r[1], 0)
+            seen[r[1]] = rnd + 1
+            keyed.append((rnd, r[1], idx, r))
+        results = {}
+        for _, _, idx, (op, lane, cls, n) in sorted(keyed):
+            if 0 < n <= max_per_req and len(self.free[cls]) >= n:
+                blocks = [self.free[cls].pop() for _ in range(n)]
+                for b in blocks:
+                    self.owner[(cls, b)] = lane
+                results[id(mallocs[idx])] = blocks
+            else:
+                results[id(mallocs[idx])] = None
+        # frees are deferred and compacted per class in ascending id order
+        # (mirrors the support-core's masked compaction)
+        victims_by_class: dict[int, set] = {}
+        for op, lane, cls, arg in frees:
+            if arg == FREE_ALL:
+                vs = {b for (c, b), o in self.owner.items()
+                      if c == cls and o == lane}
+            else:
+                vs = {arg} if (cls, arg) in self.owner else set()
+            victims_by_class.setdefault(cls, set()).update(vs)
+        for cls, vs in victims_by_class.items():
+            for b in sorted(vs):
+                del self.owner[(cls, b)]
+                self.free[cls].append(b)
+        return [results.get(id(r)) for r in mallocs]
+
+
+@st.composite
+def request_batches(draw):
+    n_classes = draw(st.integers(1, 3))
+    caps = [draw(st.integers(2, 12)) for _ in range(n_classes)]
+    n_steps = draw(st.integers(1, 4))
+    steps = []
+    for _ in range(n_steps):
+        n_req = draw(st.integers(1, 8))
+        reqs = []
+        for _ in range(n_req):
+            op = draw(st.sampled_from([OP_MALLOC, OP_FREE, OP_NOP]))
+            lane = draw(st.integers(0, 3))
+            cls = draw(st.integers(0, n_classes - 1))
+            if op == OP_MALLOC:
+                arg = draw(st.integers(1, 3))
+            else:
+                arg = FREE_ALL
+            reqs.append((op, lane, cls, arg))
+        steps.append(reqs)
+    return caps, steps
+
+
+@settings(max_examples=12, deadline=None)
+@given(request_batches())
+def test_property_matches_python_oracle(batch):
+    """Multi-step traces: counts, free sets, and invariants match the oracle."""
+    caps, steps = batch
+    state = init_freelist(caps)
+    oracle = PyOracle(caps)
+    for reqs in steps:
+        q = make_queue([r[0] for r in reqs], [r[1] for r in reqs],
+                       [r[2] for r in reqs], [r[3] for r in reqs])
+        state, resp, _ = support_core_step(state, q, max_blocks_per_req=3)
+        oracle_out = oracle.step(reqs, 3)
+        validate_freelist(state)
+        # same per-class free counts and free-id sets
+        for c, cap in enumerate(caps):
+            top = int(state.free_top[c])
+            assert top == len(oracle.free[c])
+            assert set(np.asarray(state.free_stack[c][:top]).tolist()) \
+                == set(oracle.free[c])
+        # same grant/fail pattern for mallocs
+        mi = 0
+        for i, r in enumerate(reqs):
+            if r[0] != OP_MALLOC:
+                continue
+            got = oracle_out[mi]
+            mi += 1
+            if got is None:
+                assert int(resp.status[i]) == 0
+            else:
+                assert int(resp.status[i]) == 1
+                mine = [b for b in np.asarray(resp.blocks[i]).tolist() if b != NO_BLOCK]
+                assert set(mine) == set(got)
+
+
+def test_jit_stability():
+    st_ = init_freelist([8])
+    q = make_queue([OP_MALLOC, OP_FREE], [0, 1], [0, 0], [2, FREE_ALL])
+    f = jax.jit(lambda s, q: support_core_step(s, q, 2))
+    s1, r1, _ = f(st_, q)
+    s2, r2, _ = support_core_step(st_, q, 2)
+    np.testing.assert_array_equal(np.asarray(r1.blocks), np.asarray(r2.blocks))
+    np.testing.assert_array_equal(np.asarray(s1.free_top), np.asarray(s2.free_top))

@@ -1,0 +1,24 @@
+"""Trainer fault tolerance: preemption recovery + deterministic replay."""
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.train.trainer import Trainer, TrainerConfig, make_preemption_injector
+
+
+@pytest.mark.slow
+def test_preemption_recovery_and_determinism(tmp_path):
+    cfg = smoke_config("deepseek-7b")
+    tcfg = TrainerConfig(total_steps=10, checkpoint_every=4,
+                         checkpoint_dir=str(tmp_path / "a"),
+                         batch_size=4, seq_len=32, log_every=100)
+    rep = Trainer(cfg, tcfg, fail_injector=make_preemption_injector(6)).run()
+    assert rep.restarts == 1
+    assert rep.restored_from == 4
+    assert np.isfinite(rep.final_loss)
+
+    tcfg2 = TrainerConfig(total_steps=10, checkpoint_every=4,
+                          checkpoint_dir=str(tmp_path / "b"),
+                          batch_size=4, seq_len=32, log_every=100)
+    rep2 = Trainer(cfg, tcfg2).run()
+    assert abs(rep2.final_loss - rep.final_loss) < 1e-4
