@@ -1,18 +1,29 @@
 """Beyond-paper: SpeedMalloc paged-KV allocator in the real serving engine.
 
-Measures the end-to-end decode-step latency (CPU, smoke config) and the
-support-core telemetry under a Larson-style request churn.
+Drives the scheduler-driven continuous-batching stack (DESIGN.md §3) under a
+Larson-style request churn and measures the end-to-end decode-step latency
+plus the admission-path efficiency the scheduler refactor buys: HMQ bursts
+per admitted sequence (1/k for a k-sequence batch, vs 1 for the old
+sequential admit) and prefill recompile count (one per bucket, vs one per
+distinct prompt length).  Also writes ``BENCH_serving.json`` so the perf
+trajectory is machine-readable across PRs.
 """
+import json
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import smoke_config
+from repro.launch.serve import serve_loop
 from repro.models import init_params, make_paged_config
 from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import Request, Scheduler, make_scheduler_config
 
 from .common import csv_row
+
+BENCH_JSON = Path("BENCH_serving.json")
 
 
 def run() -> list[str]:
@@ -20,21 +31,54 @@ def run() -> list[str]:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
                               dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
     eng = ServingEngine(cfg, kvcfg, init_params(cfg, dtype=jnp.float32),
-                        dtype=jnp.float32)
-    for lane in range(4):
-        toks = rng.randint(0, cfg.vocab_size, size=24).astype(np.int32)
-        eng.admit(lane, toks)
-    eng.step()  # compile
-    t0 = time.perf_counter()
-    n = 20
-    for _ in range(n):
-        eng.step()
-    us = (time.perf_counter() - t0) / n * 1e6
+                        dtype=jnp.float32, sched_cfg=scfg)
+
+    # --- the real serving lifecycle (shared with repro.launch.serve) ---
+    sched = Scheduler(scfg)
+    n_requests = 8
+    requests = [Request(rid=rid,
+                        tokens=rng.randint(0, cfg.vocab_size,
+                                           size=24).astype(np.int32))
+                for rid in range(n_requests)]
+    decode_us: list[float] = []
+    t_start = time.perf_counter()
+    serve_loop(eng, sched, requests, max_new_tokens=6, verbose=False,
+               step_times_us=decode_us)
+    wall_s = time.perf_counter() - t_start
+
     a = eng.state.paged.alloc
+    s = eng.stats
+    # first decode step includes the decode compile; report steady state
+    steady_us = float(np.mean(decode_us[1:])) if len(decode_us) > 1 else 0.0
+    bursts_per_seq = s.hmq_admit_bursts / max(s.admitted, 1)
+    metrics = {
+        "requests": len(sched.finished),
+        "requests_unserved": len(sched.waiting),
+        "requests_failed": len(sched.failed),
+        "requests_per_s": len(sched.finished) / wall_s,
+        "decode_step_us": steady_us,
+        "hmq_admit_bursts": s.hmq_admit_bursts,
+        "admitted": s.admitted,
+        "hmq_bursts_per_admitted_seq": bursts_per_seq,
+        "prefill_recompiles": s.prefill_compiles,
+        "alloc_failures": s.alloc_failures,
+        "allocs": int(a.alloc_count[0]),
+        "frees": int(a.free_count[0]),
+        "peak_pages": int(a.peak_used[0]),
+    }
+    BENCH_JSON.write_text(json.dumps(metrics, indent=2) + "\n")
     return [
-        csv_row("serving/decode_step", us,
-                f"4 lanes, allocs={int(a.alloc_count[0])} "
-                f"frees={int(a.free_count[0])} fails={int(a.fail_count[0])} "
-                f"peak_pages={int(a.peak_used[0])}"),
+        csv_row("serving/decode_step", steady_us,
+                f"4 lanes, allocs={metrics['allocs']} "
+                f"frees={metrics['frees']} fails={int(a.fail_count[0])} "
+                f"peak_pages={metrics['peak_pages']}"),
+        csv_row("serving/admission", s.hmq_admit_bursts,
+                f"bursts for {s.admitted} seqs "
+                f"({bursts_per_seq:.2f}/seq) "
+                f"recompiles={s.prefill_compiles}"),
+        csv_row("serving/throughput", wall_s * 1e6,
+                f"requests_per_s={metrics['requests_per_s']:.2f} "
+                f"(json: {BENCH_JSON})"),
     ]

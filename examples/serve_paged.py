@@ -1,5 +1,8 @@
-"""Serving example: continuous batching over the SpeedMalloc paged KV cache
-with Poisson-ish arrivals and Pareto lengths (Larson-style server pattern).
+"""Serving example: scheduler-driven continuous batching over the SpeedMalloc
+paged KV cache with Poisson-ish arrivals and Pareto lengths (Larson-style
+server pattern).  Requests flow through the request-lifecycle scheduler:
+waiting queue -> prefill buckets -> running lanes -> packet-routed release,
+with one support-core HMQ burst per admission batch (DESIGN.md §3).
 
 Run:  PYTHONPATH=src python examples/serve_paged.py [--arch mixtral-8x7b]
 """

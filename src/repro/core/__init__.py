@@ -7,21 +7,22 @@
 - :mod:`repro.core.paged_kv`     -- paged KV cache on the support-core (DESIGN §2)
 """
 from .freelist import FreeListState, init_freelist, num_free, validate_freelist
-from .hmq import queue_occupancy, round_robin_rank, schedule
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
+from .hmq import max_safe_lanes, queue_occupancy, round_robin_rank, schedule
+from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
                       RequestQueue, ResponseQueue, empty_queue, make_queue)
 from .paged_kv import (KV_CLASS, STATE_CLASS, PagedKVConfig, PagedKVState,
-                       admit_prefill, decode_append, gather_kv, init_paged_kv,
-                       live_pages, release_lanes)
+                       admit_prefill, admit_prefill_many, decode_append,
+                       gather_kv, init_paged_kv, live_pages, release_lanes,
+                       release_packets)
 from .support_core import StepStats, support_core_step
 
 __all__ = [
     "FreeListState", "init_freelist", "num_free", "validate_freelist",
-    "queue_occupancy", "round_robin_rank", "schedule",
-    "FREE_ALL", "NO_BLOCK", "OP_FREE", "OP_MALLOC", "OP_NOP",
+    "max_safe_lanes", "queue_occupancy", "round_robin_rank", "schedule",
+    "FREE_ALL", "NO_BLOCK", "NO_LANE", "OP_FREE", "OP_MALLOC", "OP_NOP",
     "RequestQueue", "ResponseQueue", "empty_queue", "make_queue",
     "KV_CLASS", "STATE_CLASS", "PagedKVConfig", "PagedKVState",
-    "admit_prefill", "decode_append", "gather_kv", "init_paged_kv",
-    "live_pages", "release_lanes",
+    "admit_prefill", "admit_prefill_many", "decode_append", "gather_kv",
+    "init_paged_kv", "live_pages", "release_lanes", "release_packets",
     "StepStats", "support_core_step",
 ]

@@ -50,6 +50,18 @@ def round_robin_rank(lane: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(valid, rank, 0)
 
 
+def max_safe_lanes(q: int) -> int:
+    """Largest lane-id count for which the fused int32 sort key in
+    :func:`schedule` cannot overflow.
+
+    The fused key is ``(prio * (q+1) + rr) * (lanes+1) + lane`` with
+    ``prio <= 2`` and ``rr <= q``, so its magnitude is bounded by
+    ``3 * (q+1) * (lanes+1)``; it stays below 2**31 while
+    ``lanes + 1 <= (2**31 - 1) // (3 * (q + 1))``.
+    """
+    return max((2**31 - 1) // (3 * (q + 1)) - 1, 0)
+
+
 def schedule(queue: RequestQueue) -> tuple[RequestQueue, jnp.ndarray]:
     """Reorder a request queue per the HMQ policy.
 
@@ -69,9 +81,20 @@ def schedule(queue: RequestQueue) -> tuple[RequestQueue, jnp.ndarray]:
     rr_f = round_robin_rank(queue.lane, valid & is_free)
     rr = jnp.where(is_free, rr_f, rr_m)
     lanes = jnp.maximum(jnp.max(queue.lane), 0) + 1
-    # int32 key; safe while Q * (lanes+1) * 3 < 2**31 (Q, lanes <= ~16k).
+    # Fast path: one fused int32 key; safe while 3 * (q+1) * (lanes+1) < 2**31
+    # (the bound the docstring of max_safe_lanes derives).  The guard is
+    # enforced, not just documented: queues whose lane ids exceed the static
+    # safe bound take an overflow-proof lexicographic sort that yields the
+    # identical (prio, rr, lane)-lexicographic stable ordering.
     key = (prio * (q + 1) + rr) * (lanes + 1) + queue.lane
-    perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+
+    def fused_sort(_):
+        return jnp.argsort(key, stable=True).astype(jnp.int32)
+
+    def lex_sort(_):
+        return jnp.lexsort((queue.lane, rr, prio)).astype(jnp.int32)
+
+    perm = lax.cond(lanes <= max_safe_lanes(q), fused_sort, lex_sort, 0)
     sched = RequestQueue(
         op=queue.op[perm],
         lane=queue.lane[perm],

@@ -32,6 +32,11 @@ FREE_ALL = -1
 #: Response sentinel for "no block allocated" (failed or nop slot).
 NO_BLOCK = -1
 
+#: Lane-id sentinel for padded slots in compact lane-packet arrays (the
+#: scheduler's packet-routed release path: slots with lane == NO_LANE become
+#: OP_NOP packets).
+NO_LANE = -1
+
 
 class RequestQueue(NamedTuple):
     """Fixed-capacity batch of allocation requests (HMQ ingress).

@@ -36,7 +36,7 @@ from typing import NamedTuple, Optional
 import jax.numpy as jnp
 
 from .freelist import FreeListState, init_freelist
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
+from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
                       RequestQueue, ResponseQueue)
 from .support_core import StepStats, support_core_step
 
@@ -90,8 +90,101 @@ def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
 
 
 # --------------------------------------------------------------------------
-# Admission (prefill): one lane, T tokens -> ceil(T / page_size) pages.
+# Admission (prefill): B lanes, T tokens each -> ceil(len_i / page_size)
+# pages per lane, allocated by ONE support-core HMQ burst for the whole
+# batch (the paper's batched server-client admission).
 # --------------------------------------------------------------------------
+
+def admit_prefill_many(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    lanes: jnp.ndarray,           # [B] int32, distinct lane ids
+    k: jnp.ndarray,               # [B, L, T, kv_heads, head_dim]
+    v: jnp.ndarray,
+    lengths: jnp.ndarray,         # [B] int32, each <= T
+) -> tuple[PagedKVState, StepStats]:
+    """Admit B prefilled sequences with a single support-core step.
+
+    The request queue carries one KV-page malloc per lane (plus one
+    recurrent-state-slot malloc when the config has a state class), so the
+    whole admission batch costs exactly one HMQ burst.  With ``lanes`` in
+    ascending order the block assignment is bit-identical to B sequential
+    :func:`admit_prefill` calls: the HMQ arbiter serves round-0 mallocs in
+    lane order, from the same LIFO free stack.
+
+    Lanes must be distinct (one request packet per lane).
+    """
+    B, L, T = k.shape[:3]
+    ps = cfg.page_size
+    max_pages = (T + ps - 1) // ps
+    lanes = lanes.astype(jnp.int32)
+    n_pages = (lengths.astype(jnp.int32) + ps - 1) // ps                # [B]
+    # A sequence whose pages would overflow its block-table row can never be
+    # addressed: force BOTH of its packets to fail (overwide arg) instead of
+    # leaking unreferenced pages or a stranded state slot.  The admission
+    # then reports it in `failed`.
+    fits = n_pages <= cfg.max_pages_per_lane
+    forced_fail = jnp.int32(max_pages + 1)
+    kv_args = jnp.where(fits, n_pages, forced_fail)
+    st_args = jnp.where(fits, jnp.int32(1), forced_fail)
+
+    kv_ops = jnp.full((B,), OP_MALLOC, jnp.int32)
+    st_ops = jnp.full((B,), OP_MALLOC if cfg.state_slots else OP_NOP, jnp.int32)
+    queue = RequestQueue(
+        op=jnp.concatenate([kv_ops, st_ops]),
+        lane=jnp.concatenate([lanes, lanes]),
+        size_class=jnp.concatenate([jnp.full((B,), KV_CLASS, jnp.int32),
+                                    jnp.full((B,), STATE_CLASS, jnp.int32)]),
+        arg=jnp.concatenate([kv_args, st_args]),
+    )
+    alloc, resp, stats = support_core_step(state.alloc, queue,
+                                           max_blocks_per_req=max_pages)
+
+    pages = resp.blocks[:B]                                  # [B, max_pages]
+    # A lane is admitted only if EVERY packet it needs succeeded; under pool
+    # scarcity one class can still succeed while the other fails — those
+    # orphaned grants stay owned by the (inactive) lane until FREE_ALL
+    # releases it (ServingEngine.admit_many reclaims failed lanes itself).
+    got = resp.status[:B] == 1                               # [B]
+    if cfg.state_slots:
+        got = got & (resp.status[B:] == 1)
+    # Block table rows for the admitted lanes.
+    p_lim = min(max_pages, cfg.max_pages_per_lane)
+    rows = jnp.full((B, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32)
+    rows = rows.at[:, :p_lim].set(
+        jnp.where(got[:, None], pages[:, :p_lim], NO_BLOCK))
+    block_tables = state.block_tables.at[lanes].set(rows)
+
+    # Scatter KV into the allocated pages:
+    # [B, L, T, kv, hd] -> [B * max_pages, L, ps, kv, hd]
+    pad = max_pages * ps - T
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(B, L, max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(1, 2)
+    vp = vp.reshape(B, L, max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(1, 2)
+    valid = (jnp.arange(max_pages, dtype=jnp.int32)[None, :] < n_pages[:, None]) \
+        & got[:, None]
+    dst = jnp.where(valid, pages, cfg.num_pages)             # OOB sentinel -> dropped
+    flat = (B * max_pages, L, ps, cfg.kv_heads, cfg.head_dim)
+    k_pages = state.k_pages.at[dst.reshape(-1)].set(
+        kp.reshape(flat).astype(cfg.dtype), mode="drop")
+    v_pages = state.v_pages.at[dst.reshape(-1)].set(
+        vp.reshape(flat).astype(cfg.dtype), mode="drop")
+
+    slots = jnp.where(got, resp.blocks[B:, 0], NO_BLOCK) if cfg.state_slots \
+        else jnp.full((B,), NO_BLOCK, jnp.int32)
+    new = state._replace(
+        alloc=alloc,
+        block_tables=block_tables,
+        seq_lens=state.seq_lens.at[lanes].set(
+            jnp.where(got, lengths.astype(jnp.int32), 0)),
+        active=state.active.at[lanes].set(got),
+        k_pages=k_pages,
+        v_pages=v_pages,
+        state_slot=state.state_slot.at[lanes].set(slots),
+    )
+    return new, stats
+
 
 def admit_prefill(
     cfg: PagedKVConfig,
@@ -101,48 +194,10 @@ def admit_prefill(
     v: jnp.ndarray,
     length: jnp.ndarray,          # scalar int32, <= T
 ) -> tuple[PagedKVState, StepStats]:
-    """Admit a prefilled sequence into the cache (continuous-batching insert)."""
-    T = k.shape[1]
-    ps = cfg.page_size
-    max_pages = (T + ps - 1) // ps
-    n_pages = (length + ps - 1) // ps
-
-    ops = jnp.array([OP_MALLOC, OP_MALLOC if cfg.state_slots else OP_NOP], jnp.int32)
-    lanes = jnp.stack([lane, lane]).astype(jnp.int32)
-    classes = jnp.array([KV_CLASS, STATE_CLASS], jnp.int32)
-    args = jnp.stack([n_pages.astype(jnp.int32), jnp.int32(1)])
-    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
-    alloc, resp, stats = support_core_step(state.alloc, queue, max_blocks_per_req=max_pages)
-
-    pages = resp.blocks[0]                                   # [max_pages]
-    got = resp.status[0] == 1
-    # Block table row for this lane.
-    row = jnp.full((cfg.max_pages_per_lane,), NO_BLOCK, jnp.int32)
-    row = row.at[:max_pages].set(jnp.where(got, pages, NO_BLOCK))
-    block_tables = state.block_tables.at[lane].set(row)
-
-    # Scatter KV into the allocated pages: [L, T, kv, hd] -> [max_pages, L, ps, kv, hd]
-    pad = max_pages * ps - T
-    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    kp = kp.reshape(k.shape[0], max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(0, 1)
-    vp = vp.reshape(v.shape[0], max_pages, ps, cfg.kv_heads, cfg.head_dim).swapaxes(0, 1)
-    valid = (jnp.arange(max_pages, dtype=jnp.int32) < n_pages) & got
-    dst = jnp.where(valid, pages, cfg.num_pages)             # OOB sentinel -> dropped
-    k_pages = state.k_pages.at[dst].set(kp.astype(cfg.dtype), mode="drop")
-    v_pages = state.v_pages.at[dst].set(vp.astype(cfg.dtype), mode="drop")
-
-    slot = jnp.where(cfg.state_slots and True, resp.blocks[1, 0], NO_BLOCK)
-    new = state._replace(
-        alloc=alloc,
-        block_tables=block_tables,
-        seq_lens=state.seq_lens.at[lane].set(jnp.where(got, length, 0)),
-        active=state.active.at[lane].set(got),
-        k_pages=k_pages,
-        v_pages=v_pages,
-        state_slot=state.state_slot.at[lane].set(slot if cfg.state_slots else NO_BLOCK),
-    )
-    return new, stats
+    """Admit one prefilled sequence (batch-of-one :func:`admit_prefill_many`)."""
+    lanes = jnp.asarray(lane, jnp.int32).reshape(1)
+    lengths = jnp.asarray(length, jnp.int32).reshape(1)
+    return admit_prefill_many(cfg, state, lanes, k[None], v[None], lengths)
 
 
 # --------------------------------------------------------------------------
@@ -224,27 +279,43 @@ def decode_append(
 
 
 # --------------------------------------------------------------------------
-# Completion: free everything a set of lanes owns.
+# Completion: free everything a set of lanes owns, via OP_FREE/FREE_ALL
+# request packets — the scheduler's lane-lifecycle release path.
 # --------------------------------------------------------------------------
 
-def release_lanes(
+def release_packets(
     cfg: PagedKVConfig,
     state: PagedKVState,
-    release_mask: jnp.ndarray,    # [max_lanes] bool
+    lane_ids: jnp.ndarray,        # [K] int32 packet slots; NO_LANE = empty slot
 ) -> tuple[PagedKVState, StepStats]:
-    L = cfg.max_lanes
-    lane_ids = jnp.arange(L, dtype=jnp.int32)
-    ops = jnp.where(release_mask, OP_FREE, OP_NOP).astype(jnp.int32)
-    args = jnp.full((L,), FREE_ALL, jnp.int32)
+    """Release lanes through FREE_ALL request packets in one support-core step.
+
+    ``lane_ids`` is a compact packet array (the scheduler emits one slot per
+    completed lane, padded with :data:`~repro.core.packets.NO_LANE`).  Every
+    block the named lanes own — KV pages and, when configured, the
+    recurrent-state slot — is freed by the support-core's deferred-free path;
+    host metadata rows (block table, seq_lens, active, state_slot) are then
+    cleared.  Lanes may appear in any order; duplicate ids are harmless
+    (FREE_ALL is idempotent within a step).
+    """
+    K = lane_ids.shape[0]
+    lane_ids = lane_ids.astype(jnp.int32)
+    valid = lane_ids >= 0
+    safe = jnp.clip(lane_ids, 0, cfg.max_lanes - 1)
+    ops = jnp.where(valid, OP_FREE, OP_NOP).astype(jnp.int32)
+    args = jnp.full((K,), FREE_ALL, jnp.int32)
     if cfg.state_slots:
         ops = jnp.concatenate([ops, ops])
-        lanes = jnp.concatenate([lane_ids, lane_ids])
-        classes = jnp.concatenate([jnp.zeros((L,), jnp.int32), jnp.ones((L,), jnp.int32)])
+        lanes = jnp.concatenate([safe, safe])
+        classes = jnp.concatenate([jnp.full((K,), KV_CLASS, jnp.int32),
+                                   jnp.full((K,), STATE_CLASS, jnp.int32)])
         args = jnp.concatenate([args, args])
     else:
-        lanes, classes = lane_ids, jnp.zeros((L,), jnp.int32)
+        lanes, classes = safe, jnp.full((K,), KV_CLASS, jnp.int32)
     queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
     alloc, _, stats = support_core_step(state.alloc, queue, max_blocks_per_req=1)
+    release_mask = jnp.zeros((cfg.max_lanes,), bool).at[
+        jnp.where(valid, safe, cfg.max_lanes)].set(True, mode="drop")
     keep = ~release_mask
     new = state._replace(
         alloc=alloc,
@@ -254,6 +325,17 @@ def release_lanes(
         state_slot=jnp.where(keep, state.state_slot, NO_BLOCK),
     )
     return new, stats
+
+
+def release_lanes(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    release_mask: jnp.ndarray,    # [max_lanes] bool
+) -> tuple[PagedKVState, StepStats]:
+    """Dense-mask release (legacy shape; routed through the packet path)."""
+    lane_ids = jnp.where(release_mask,
+                         jnp.arange(cfg.max_lanes, dtype=jnp.int32), NO_LANE)
+    return release_packets(cfg, state, lane_ids)
 
 
 # --------------------------------------------------------------------------

@@ -1,10 +1,13 @@
 """Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
 
-Continuous-batching serving demo on the SpeedMalloc paged KV cache:
-Poisson request arrivals with Pareto-ish lengths (the paper's Larson-style
-server-client pattern), admission through support-core burst allocation,
-per-step HMQ batches during decode, page recycling for SWA archs, release
-on completion.  Prints allocator telemetry (live pages, peak, HMQ stats).
+Scheduler-driven continuous-batching demo on the SpeedMalloc paged KV cache:
+Poisson-ish request arrivals with Pareto-ish lengths (the paper's
+Larson-style server-client pattern) flow through the request-lifecycle
+scheduler (DESIGN.md §3) — waiting queue -> prefill buckets -> running lanes
+-> completion.  Each admission batch costs ONE support-core HMQ burst and at
+most one XLA compile per prefill bucket; decode issues one HMQ batch per
+step; completion releases lanes through OP_FREE/FREE_ALL packets.  Prints
+allocator + scheduler telemetry (live pages, peak, bursts, compiles).
 """
 from __future__ import annotations
 
@@ -16,7 +19,76 @@ import numpy as np
 from ..configs.base import ARCH_IDS, smoke_config
 from ..core.paged_kv import live_pages
 from ..models import init_params, make_paged_config
-from ..serve.engine import ServingEngine
+from ..serve.engine import AdmissionItem, ServingEngine
+from ..serve.scheduler import Request, Scheduler, make_scheduler_config
+
+
+def synth_requests(cfg, n: int, rng: np.random.RandomState) -> list[Request]:
+    reqs = []
+    for rid in range(n):
+        plen = int(rng.pareto(2.0) * 20) % 96 + 8
+        reqs.append(Request(
+            rid=rid,
+            tokens=rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32),
+            frames=(rng.randn(cfg.encoder_seq_len, cfg.d_model).astype(np.float32)
+                    if cfg.family == "audio" else None),
+            patches=(rng.randn(4, cfg.d_model).astype(np.float32)
+                     if cfg.family == "vlm" else None),
+        ))
+    return reqs
+
+
+def serve_loop(eng: ServingEngine, sched: Scheduler,
+               requests: list[Request], max_new_tokens: int,
+               log_every: int = 8, verbose: bool = True,
+               step_times_us: list | None = None) -> int:
+    """Drive the scheduler/engine lifecycle until every request completes.
+
+    Returns the number of decode steps taken.  When ``step_times_us`` is
+    given, per-decode-step wall times (µs) are appended to it (benchmark
+    hook).  If admission starves with nothing running — the pool cannot fit
+    any waiting request — the loop stops and reports the stranded requests
+    loudly rather than silently undercounting.
+    """
+    import time
+
+    for req in requests:
+        req.max_new_tokens = max_new_tokens
+        sched.submit(req)
+
+    step = 0
+    while sched.has_work:
+        plan = sched.plan_admission(eng.free_pages)
+        if plan.size:
+            items = [AdmissionItem(lane, r.tokens, r.frames, r.patches)
+                     for b in plan.batches for lane, r in b.items]
+            failed = eng.admit_many(items)   # failed lanes come back reclaimed
+            sched.commit_admission(plan)
+            if failed:
+                sched.fail_admission(failed)
+                print(f"WARNING: allocator rejected admission of "
+                      f"{len(failed)} request(s) (pool exhausted)")
+        if not sched.running:
+            break                      # nothing admissible: pool too small
+        t0 = time.perf_counter()
+        eng.step()
+        if step_times_us is not None:
+            step_times_us.append((time.perf_counter() - t0) * 1e6)
+        step += 1
+        finished = sched.note_decode_step()
+        if finished:
+            eng.release(finished)
+            sched.complete(finished)
+        if verbose and step % log_every == 0:
+            print(f"step {step}: done={len(sched.finished)}/{len(requests)} "
+                  f"waiting={len(sched.waiting)} "
+                  f"live_pages={eng.live_pages} "
+                  f"peak={int(eng.state.paged.alloc.peak_used[0])}")
+    if sched.waiting:
+        print(f"WARNING: admission starved — {len(sched.waiting)} request(s) "
+              f"not served (page budget {eng.free_pages} free - "
+              f"{sched.scfg.page_reserve} reserve cannot fit the next one)")
+    return step
 
 
 def main() -> None:
@@ -34,48 +106,24 @@ def main() -> None:
     kvcfg = make_paged_config(cfg, seq_len=256, lanes=args.lanes,
                               page_size=args.page_size, dtype=jnp.float32)
     params = init_params(cfg, dtype=jnp.float32)
-    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
+    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg)
+    sched = Scheduler(scfg)
 
-    pending = list(range(args.requests))
-    lane_req: dict[int, int] = {}
-    remaining: dict[int, int] = {}
-    done = 0
-    step = 0
-    while done < args.requests:
-        # admit into free lanes (continuous batching)
-        for lane in range(args.lanes):
-            if lane not in lane_req and pending:
-                rid = pending.pop(0)
-                plen = int(rng.pareto(2.0) * 20) % 96 + 8
-                toks = rng.randint(0, cfg.vocab_size, size=plen).astype(np.int32)
-                frames = (rng.randn(cfg.encoder_seq_len, cfg.d_model).astype(np.float32)
-                          if cfg.family == "audio" else None)
-                patches = (rng.randn(4, cfg.d_model).astype(np.float32)
-                           if cfg.family == "vlm" else None)
-                eng.admit(lane, toks, frames=frames, patches=patches)
-                lane_req[lane] = rid
-                remaining[lane] = args.max_new_tokens
-        eng.step()
-        step += 1
-        finished = []
-        for lane in list(lane_req):
-            remaining[lane] -= 1
-            if remaining[lane] <= 0:
-                finished.append(lane)
-        if finished:
-            eng.release(finished)
-            for lane in finished:
-                done += 1
-                del lane_req[lane], remaining[lane]
-        if step % 8 == 0:
-            print(f"step {step}: done={done}/{args.requests} "
-                  f"live_pages={eng.live_pages} "
-                  f"peak={int(eng.state.paged.alloc.peak_used[0])}")
+    requests = synth_requests(cfg, args.requests, rng)
+    steps = serve_loop(eng, sched, requests, args.max_new_tokens)
+
     a = eng.state.paged.alloc
-    print(f"served {done} requests in {step} decode steps | "
+    s = eng.stats
+    if sched.failed:
+        print(f"FAILED: {len(sched.failed)} request(s) rejected by the allocator")
+    print(f"served {len(sched.finished)} requests in {steps} decode steps | "
           f"allocs={int(a.alloc_count[0])} frees={int(a.free_count[0])} "
           f"fails={int(a.fail_count[0])} peak_pages={int(a.peak_used[0])} "
-          f"live={int(live_pages(eng.state.paged))}")
+          f"live={int(live_pages(eng.state.paged))} | "
+          f"admit_bursts={s.hmq_admit_bursts} "
+          f"({s.hmq_admit_bursts / max(s.admitted, 1):.2f}/seq) "
+          f"prefill_compiles={s.prefill_compiles}")
 
 
 if __name__ == "__main__":

@@ -1,15 +1,19 @@
-"""Serving engine: continuous batching on top of the SpeedMalloc paged KV.
+"""Serving engine: scheduler-driven continuous batching on the SpeedMalloc
+paged KV (DESIGN.md §3).
 
-Host-side orchestration (request queue, lane assignment, completion) around
-the jitted prefill/decode steps.  Admission writes prefill KV through the
-support-core (`admit_prefill` — one HMQ burst allocation per sequence),
-exactly the paper's malloc-heavy "server-client" pattern (Larson) mapped to
-serving.
+Host-side orchestration around the jitted prefill/decode steps.  Admission is
+*batched*: the scheduler hands the engine a batch of k sequences, the engine
+runs ONE jitted bucketed prefill per prompt bucket (compile once per bucket,
+not once per prompt length) and installs the whole batch's KV through ONE
+support-core HMQ burst (`paged_kv.admit_prefill_many`) — the paper's batched
+"server-client" (Larson) admission.  Completion releases lanes through
+OP_FREE/FREE_ALL request packets, so the engine's entire allocation
+lifecycle — admit, per-step append, release — speaks the packet protocol.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -19,13 +23,10 @@ from ..configs.base import ArchConfig
 from ..core import paged_kv as pkv
 from ..core.paged_kv import PagedKVConfig
 from ..models import decode as dec
-from ..models import mamba2 as m2
-from ..models import rwkv6 as rw
-from ..models.transformer import (_hybrid_stack, _rwkv_stack,
-                                  _whisper_encoder, forward)
-from ..models.layers import embed, apply_norm
+from .scheduler import (SchedulerConfig, make_scheduler_config, pick_bucket,
+                        release_packet_array)
 from .serve_step import (ServeState, init_serve_state, make_decode_step,
-                         recycle_window)
+                         make_family_prefill, recycle_window)
 
 
 @dataclasses.dataclass
@@ -33,98 +34,212 @@ class EngineStats:
     admitted: int = 0
     completed: int = 0
     decode_steps: int = 0
-    alloc_failures: int = 0
+    alloc_failures: int = 0        # failed malloc packets (all families)
+    hmq_admit_bursts: int = 0      # support-core steps issued for admission
+    prefill_compiles: int = 0      # distinct prefill buckets compiled
+
+
+class AdmissionItem(NamedTuple):
+    """One sequence the scheduler asks the engine to install."""
+
+    lane: int
+    tokens: np.ndarray                    # [T] int32
+    frames: Optional[np.ndarray] = None   # [F, d] (audio)
+    patches: Optional[np.ndarray] = None  # [P, d] (vlm)
 
 
 class ServingEngine:
     """Continuous-batching engine.  Lanes = slots in the running batch."""
 
     def __init__(self, cfg: ArchConfig, kvcfg: PagedKVConfig, params: dict,
-                 dtype=jnp.float32):
+                 dtype=jnp.float32,
+                 sched_cfg: Optional[SchedulerConfig] = None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
         self.dtype = dtype
+        self.sched_cfg = sched_cfg or make_scheduler_config(cfg, kvcfg)
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
         # fresh empty state: deactivate the synthetic lanes
         self.state = self.state._replace(
             paged=pkv.init_paged_kv(kvcfg),
             tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
         self._decode = jax.jit(make_decode_step(cfg, kvcfg))
+        # recurrent admission seeds decode from the last prompt token, so the
+        # vocab projection would be dead weight in the jitted prefill
+        self._family_prefill = make_family_prefill(
+            cfg, recurrent_logits=cfg.family not in ("ssm", "hybrid"))
+        self._prefill_cache: dict[tuple, Any] = {}
         self.stats = EngineStats()
         self.window = recycle_window(cfg)
 
     # ---------------- admission ----------------
 
+    def _prefill_fn(self, group_key: tuple):
+        """Jitted bucketed prefill, one compile per (bucket, aux-shape) group."""
+        fn = self._prefill_cache.get(group_key)
+        if fn is None:
+            fn = jax.jit(self._family_prefill)
+            self._prefill_cache[group_key] = fn
+            self.stats.prefill_compiles += 1
+        return fn
+
+    def _group_key(self, item: AdmissionItem, bucket: int) -> tuple:
+        p = item.patches.shape[0] if item.patches is not None else 0
+        return (bucket, p)
+
+    def admit_many(self, items: Sequence[AdmissionItem]) -> list[int]:
+        """Prefill and install a batch of sequences.
+
+        One jitted prefill per bucket (each padded to the static
+        ``admit_width`` batch rows) and — for families with paged KV — ONE
+        support-core HMQ burst covering every sequence in ``items``.  Lanes
+        must be distinct; the burst is issued in ascending-lane order (the
+        final argsort below), so the allocator serves it bit-identically to
+        sequential admission.
+
+        Returns the lanes whose admission FAILED (allocator could not serve
+        their packets).  Failed lanes are already reclaimed — any partially
+        granted blocks are freed before returning, so the pool is never
+        leaked — and do not count toward ``stats.admitted``; the caller only
+        needs to requeue or fail the corresponding requests.
+        """
+        if not items:
+            return []
+        items = [it if isinstance(it, AdmissionItem) else AdmissionItem(*it)
+                 for it in items]
+        scfg = self.sched_cfg
+        cfg = self.cfg
+        W = scfg.admit_width
+
+        groups: dict[tuple, list[AdmissionItem]] = {}
+        for it in items:
+            bucket = pick_bucket(len(it.tokens), scfg)
+            groups.setdefault(self._group_key(it, bucket), []).append(it)
+
+        # Per admitted sequence: (lane, kv_len, next_token) + per-bucket KV.
+        all_lanes: list[int] = []
+        all_kv_len: list[int] = []
+        all_next: list[jnp.ndarray] = []
+        kv_chunks: list[tuple[jnp.ndarray, jnp.ndarray]] = []
+
+        for (bucket, n_prefix), group in sorted(groups.items()):
+            k = len(group)
+            width = max(W, k)
+            toks = np.zeros((width, bucket), np.int32)
+            lengths = np.zeros((width,), np.int32)
+            for i, it in enumerate(group):
+                toks[i, : len(it.tokens)] = it.tokens
+                lengths[i] = len(it.tokens)
+            lengths[k:] = 1                       # dummy rows: benign gather idx
+            batch = {"tokens": jnp.asarray(toks),
+                     "lengths": jnp.asarray(lengths)}
+            if cfg.family == "audio":
+                fr = np.stack([np.asarray(it.frames, np.float32)
+                               for it in group])
+                if k < width:
+                    fr = np.concatenate(
+                        [fr, np.zeros((width - k,) + fr.shape[1:], fr.dtype)])
+                batch["frames"] = jnp.asarray(fr, self.dtype)
+            if n_prefix:
+                pe = np.stack([np.asarray(it.patches, np.float32)
+                               for it in group])
+                if k < width:
+                    pe = np.concatenate(
+                        [pe, np.zeros((width - k,) + pe.shape[1:], pe.dtype)])
+                batch["patches"] = jnp.asarray(pe, self.dtype)
+
+            res = self._prefill_fn((bucket, n_prefix, width))(self.params, batch)
+
+            rows = np.arange(k)
+            lanes = np.asarray([it.lane for it in group], np.int32)
+            if cfg.family in ("ssm", "hybrid"):
+                # recurrent families seed decode with the last prompt token
+                nxt = jnp.asarray([int(it.tokens[-1]) for it in group],
+                                  jnp.int32)
+                self._install_states(res.states, rows, lanes)
+            else:
+                nxt = jnp.argmax(res.last_logits[rows], axis=-1).astype(jnp.int32)
+            if res.enc_out is not None:
+                self.state = self.state._replace(
+                    enc_out=self.state.enc_out.at[lanes].set(res.enc_out[rows]))
+            all_next.append(nxt)
+            all_lanes.extend(int(l) for l in lanes)
+            all_kv_len.extend(int(lengths[i]) + n_prefix for i in rows)
+            if res.kv is not None:
+                ks, vs = res.kv                  # [width, L_kv, T_kv, kv, hd]
+                kv_chunks.append((ks[rows], vs[rows]))
+
+        order = np.argsort(np.asarray(all_lanes, np.int32))
+        lanes_arr = jnp.asarray(np.asarray(all_lanes, np.int32)[order])
+        next_tokens = jnp.concatenate(all_next)[jnp.asarray(order)]
+
+        if kv_chunks:
+            # Pad every bucket's KV to the widest time extent, then ONE burst.
+            t_max = max(c[0].shape[2] for c in kv_chunks)
+            ks = jnp.concatenate(
+                [jnp.pad(c[0], ((0, 0), (0, 0), (0, t_max - c[0].shape[2]),
+                                (0, 0), (0, 0))) for c in kv_chunks])
+            vs = jnp.concatenate(
+                [jnp.pad(c[1], ((0, 0), (0, 0), (0, t_max - c[1].shape[2]),
+                                (0, 0), (0, 0))) for c in kv_chunks])
+            perm = jnp.asarray(order)
+            kv_lens = jnp.asarray(np.asarray(all_kv_len, np.int32)[order])
+            paged, stats = pkv.admit_prefill_many(
+                self.kvcfg, self.state.paged, lanes_arr,
+                ks[perm], vs[perm], kv_lens)
+            self.stats.hmq_admit_bursts += 1
+            self.stats.alloc_failures += int(stats.failed)
+        else:
+            # attention-free (rwkv6): no pages to allocate; activate lanes
+            paged = self.state.paged
+            kv_lens = jnp.asarray(np.asarray(all_kv_len, np.int32)[order])
+            paged = paged._replace(
+                seq_lens=paged.seq_lens.at[lanes_arr].set(kv_lens),
+                active=paged.active.at[lanes_arr].set(True))
+
+        self.state = self.state._replace(
+            paged=paged,
+            tokens=self.state.tokens.at[lanes_arr].set(next_tokens))
+        ok = np.asarray(paged.active)[np.asarray(lanes_arr)]
+        failed = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if not o]
+        self.stats.admitted += len(items) - len(failed)
+        if failed:
+            # reclaim orphaned partial grants (e.g. KV pages granted while
+            # the state-slot packet failed) so failure never leaks the pool
+            self.release(failed, completed=False)
+        return failed
+
+    def _install_states(self, states: dec.RecurrentState, rows: np.ndarray,
+                        lanes: np.ndarray) -> None:
+        """Scatter per-layer recurrent prefill states into the lane slots."""
+        rec = self.state.rec
+        rows_j = jnp.asarray(rows)
+        lanes_j = jnp.asarray(lanes)
+        if self.cfg.family == "ssm":
+            rec = dec.RecurrentState(
+                ssm=rec.ssm.at[:, lanes_j].set(states.ssm[:, rows_j]),
+                tm_prev=rec.tm_prev.at[:, lanes_j].set(
+                    states.tm_prev[:, rows_j].astype(rec.tm_prev.dtype)),
+                cm_prev=rec.cm_prev.at[:, lanes_j].set(
+                    states.cm_prev[:, rows_j].astype(rec.cm_prev.dtype)))
+        else:  # hybrid
+            rec = dec.RecurrentState(
+                ssm=rec.ssm.at[:, lanes_j].set(states.ssm[:, rows_j]),
+                conv=rec.conv.at[:, lanes_j].set(
+                    states.conv[:, rows_j].astype(rec.conv.dtype)))
+        self.state = self.state._replace(rec=rec)
+
     def admit(self, lane: int, tokens: np.ndarray,
               frames: Optional[np.ndarray] = None,
-              patches: Optional[np.ndarray] = None) -> None:
-        """Prefill one sequence and install it in `lane`."""
-        cfg = self.cfg
-        toks = jnp.asarray(tokens, jnp.int32)[None]
-        T = toks.shape[1]
+              patches: Optional[np.ndarray] = None) -> bool:
+        """Prefill one sequence and install it in `lane` (batch-of-one).
 
-        if cfg.family == "ssm":
-            h, states = _run_prefill_states(self.params, cfg, toks, self.dtype)
-            wkv, tmp, cmp = states
-            rec = self.state.rec
-            rec = dec.RecurrentState(
-                ssm=rec.ssm.at[:, lane].set(wkv[:, 0]),
-                tm_prev=rec.tm_prev.at[:, lane].set(tmp[:, 0].astype(rec.tm_prev.dtype)),
-                cm_prev=rec.cm_prev.at[:, lane].set(cmp[:, 0].astype(rec.cm_prev.dtype)))
-            paged = self.state.paged
-            paged = paged._replace(
-                seq_lens=paged.seq_lens.at[lane].set(T),
-                active=paged.active.at[lane].set(True))
-            self.state = self.state._replace(
-                rec=rec, paged=paged,
-                tokens=self.state.tokens.at[lane].set(toks[0, -1]))
-        elif cfg.family == "hybrid":
-            h, ys = _run_prefill_states(self.params, cfg, toks, self.dtype)
-            (ks, vs), (ssm, conv) = ys
-            every = max(cfg.attn_every, 1)
-            idx = np.arange(every - 1, cfg.num_layers, every)
-            k_sel = ks[idx][:, 0]     # [L_kv, T, kv, hd]
-            v_sel = vs[idx][:, 0]
-            rec = self.state.rec
-            rec = dec.RecurrentState(
-                ssm=rec.ssm.at[:, lane].set(ssm[:, 0]),
-                conv=rec.conv.at[:, lane].set(conv[:, 0].astype(rec.conv.dtype)))
-            paged, stats = pkv.admit_prefill(
-                self.kvcfg, self.state.paged, jnp.int32(lane),
-                k_sel.swapaxes(0, 0), v_sel, jnp.int32(T))
-            self.state = self.state._replace(
-                rec=rec, paged=paged,
-                tokens=self.state.tokens.at[lane].set(toks[0, -1]))
-        else:
-            enc_out = None
-            batch = {"tokens": toks}
-            if cfg.family == "audio":
-                fr = jnp.asarray(frames, self.dtype)[None]
-                enc_out = _whisper_encoder(self.params, cfg, fr)
-                logits, kv = forward(self.params, cfg, toks,
-                                     encoder_frames=fr, return_kv=True)
-            elif cfg.family == "vlm" and patches is not None:
-                pe = jnp.asarray(patches, self.dtype)[None]
-                logits, kv = forward(self.params, cfg, toks,
-                                     prefix_embeds=pe, return_kv=True)
-                T = T + pe.shape[1]
-            else:
-                logits, kv = forward(self.params, cfg, toks, return_kv=True)
-            ks, vs = kv                      # [L, B, T, kvh, hd]
-            paged, stats = pkv.admit_prefill(
-                self.kvcfg, self.state.paged, jnp.int32(lane),
-                ks[:, 0], vs[:, 0], jnp.int32(T))
-            if int(stats.failed) > 0:
-                self.stats.alloc_failures += 1
-            if enc_out is not None:
-                new_enc = self.state.enc_out.at[lane].set(enc_out[0])
-                self.state = self.state._replace(enc_out=new_enc)
-            self.state = self.state._replace(
-                paged=paged,
-                tokens=self.state.tokens.at[lane].set(
-                    jnp.argmax(logits[0, -1]).astype(jnp.int32)))
-        self.stats.admitted += 1
+        Returns True when the sequence was admitted, False when the
+        allocator rejected it (the lane is left inactive and clean).
+        """
+        return not self.admit_many([AdmissionItem(
+            lane, np.asarray(tokens, np.int32), frames, patches)])
 
     # ---------------- decode ----------------
 
@@ -135,22 +250,27 @@ class ServingEngine:
         self.stats.alloc_failures += int(stats.failed)
         return np.asarray(self.state.tokens)
 
-    def release(self, lanes: list[int]) -> None:
-        mask = np.zeros((self.kvcfg.max_lanes,), bool)
-        mask[lanes] = True
-        paged, _ = pkv.release_lanes(self.kvcfg, self.state.paged, jnp.asarray(mask))
+    # ---------------- completion ----------------
+
+    def release(self, lanes: Sequence[int], completed: bool = True) -> None:
+        """Free everything the lanes own via FREE_ALL request packets.
+
+        ``completed=False`` reclaims lanes whose admission failed (any
+        partially granted blocks return to the pool) without counting them
+        as served.
+        """
+        pkts = release_packet_array(list(lanes), self.kvcfg.max_lanes)
+        paged, _ = pkv.release_packets(self.kvcfg, self.state.paged,
+                                       jnp.asarray(pkts))
         self.state = self.state._replace(paged=paged)
-        self.stats.completed += len(lanes)
+        if completed:
+            self.stats.completed += len(lanes)
 
     @property
     def live_pages(self) -> int:
         return int(pkv.live_pages(self.state.paged))
 
-
-def _run_prefill_states(params, cfg, toks, dtype):
-    """Prefill for recurrent families, returning per-layer final states."""
-    x = embed(params["embed"], toks)
-    if cfg.family == "ssm":
-        return _rwkv_stack(params, cfg, x, remat=False, return_states=True)
-    return _hybrid_stack(params, cfg, x, remat=False, return_kv=True,
-                         return_states=True)
+    @property
+    def free_pages(self) -> int:
+        """Allocatable KV pages right now (admission-policy input)."""
+        return int(self.state.paged.alloc.free_top[pkv.KV_CLASS])

@@ -1,0 +1,308 @@
+"""Request-lifecycle scheduler for continuous batching (DESIGN.md §3).
+
+The serving stack's control plane: requests flow
+
+    waiting queue  ->  prefill buckets  ->  running lanes  ->  completion
+
+and every allocation-lifecycle transition speaks the support-core's packet
+protocol (DESIGN.md §2):
+
+* **Admission** — the scheduler selects a batch of waiting requests under a
+  page-budget policy, groups them into a small set of padded prefill
+  *buckets* (so the jitted prefill compiles once per bucket, not once per
+  prompt length), and the engine admits the whole batch with ONE
+  ``admit_prefill_many`` HMQ burst — the paper's batched "server-client"
+  (Larson) admission instead of one synchronized burst per sequence.
+* **Decode** — one HMQ batch per step (unchanged; ``decode_append``).
+* **Completion** — finished lanes are released through compact
+  ``OP_FREE``/``FREE_ALL`` lane packets (``paged_kv.release_packets``), not a
+  host-built dense mask.
+
+Bucketing policy
+----------------
+Attention families (dense / moe / vlm / audio) use *padded* buckets: causal
+masking makes right-padding invisible to the real positions, so any prompt
+length maps to the smallest configured bucket that holds it.  Recurrent
+families (ssm, hybrid) fold every processed token into their state, so their
+buckets are *exact-length*: same-length prompts still batch (and still share
+the single admission burst), but distinct lengths compile separately.
+
+The scheduler is deliberately host-side and pure-Python: it owns no arrays,
+only request bookkeeping; all device work stays in the engine's jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.packets import NO_LANE
+from ..core.paged_kv import PagedKVConfig
+
+WAITING = "waiting"
+RUNNING = "running"
+FINISHED = "finished"
+FAILED = "failed"        # admission malloc failed; request was not served
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its lifecycle bookkeeping."""
+
+    rid: int
+    tokens: np.ndarray                       # [T] int32 prompt
+    max_new_tokens: int = 16
+    frames: Optional[np.ndarray] = None      # [F, d] (audio)
+    patches: Optional[np.ndarray] = None     # [P, d] (vlm)
+    # --- runtime state (scheduler-owned) ---
+    state: str = WAITING
+    lane: int = -1
+    generated: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.tokens.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Static policy knobs for the request scheduler."""
+
+    page_size: int
+    num_pages: int
+    max_lanes: int
+    buckets: tuple[int, ...]        # padded prefill lengths, ascending
+    admit_width: int = 4            # static prefill batch width per bucket
+    page_reserve: int = 0           # pages withheld from admission for decode growth
+    exact_buckets: bool = False     # recurrent families: bucket == exact length
+    max_kv_len: int = 0             # per-lane KV capacity in tokens (0 = unchecked)
+
+
+def default_buckets(max_len: int, start: int = 16) -> tuple[int, ...]:
+    """Power-of-two padded lengths from ``start`` up to ``max_len``."""
+    b = [start]
+    while b[-1] < max_len:
+        b.append(b[-1] * 2)
+    return tuple(b)
+
+
+def make_scheduler_config(
+    cfg: ArchConfig,
+    kvcfg: PagedKVConfig,
+    max_prompt_len: Optional[int] = None,
+    admit_width: Optional[int] = None,
+    page_reserve: Optional[int] = None,
+) -> SchedulerConfig:
+    """Derive scheduler policy from the arch + paged-KV configs.
+
+    The default page reserve holds back one page per lane so that running
+    sequences can cross at least their next page boundary even when
+    admission is saturating the pool.
+    """
+    capacity = kvcfg.max_pages_per_lane * kvcfg.page_size
+    max_len = min(max_prompt_len or capacity, capacity)
+    # Exact-length buckets where padding changes semantics: recurrent
+    # families fold pad tokens into their state, and capacity-routed MoE
+    # couples every token's keep/drop to the total token count (so even
+    # exact buckets leave MoE with the usual batched-capacity drift — see
+    # DESIGN.md §3; exact lengths just remove the pad-token component).
+    # Same-length prompts still batch and still share the admission burst.
+    exact = cfg.family in ("ssm", "hybrid") or cfg.num_experts > 1
+    # Clamp buckets to the per-lane KV capacity: a bucket beyond what the
+    # block table can address would make prefill emit unadmittable KV.
+    buckets = tuple(sorted({min(b, max_len) for b in default_buckets(max_len)}))
+    return SchedulerConfig(
+        page_size=kvcfg.page_size,
+        num_pages=kvcfg.num_pages,
+        max_lanes=kvcfg.max_lanes,
+        buckets=buckets,
+        max_kv_len=capacity,
+        admit_width=admit_width if admit_width is not None
+        else min(kvcfg.max_lanes, 4),
+        page_reserve=page_reserve if page_reserve is not None
+        else kvcfg.max_lanes,
+        exact_buckets=exact,
+    )
+
+
+def pick_bucket(length: int, scfg: SchedulerConfig) -> int:
+    """Padded prefill length for a prompt of ``length`` tokens."""
+    if scfg.exact_buckets:
+        return length
+    for b in scfg.buckets:
+        if b >= length:
+            return b
+    return length                       # beyond the largest bucket: own compile
+
+
+def pages_needed(kv_len: int, scfg: SchedulerConfig) -> int:
+    """KV pages one admitted sequence of ``kv_len`` cached tokens consumes."""
+    return math.ceil(kv_len / scfg.page_size)
+
+
+def release_packet_array(lanes: list[int], max_lanes: int) -> np.ndarray:
+    """Compact lane-packet array for ``paged_kv.release_packets``.
+
+    Fixed capacity ``max_lanes`` (one slot per possible completion) so the
+    packet shape is static; unused slots carry ``NO_LANE``.
+    """
+    pkts = np.full((max_lanes,), NO_LANE, np.int32)
+    pkts[: len(lanes)] = np.asarray(sorted(lanes), np.int32)
+    return pkts
+
+
+@dataclasses.dataclass
+class AdmissionBatch:
+    """One prefill bucket's worth of an admission plan."""
+
+    bucket: int                      # padded prompt length
+    items: list[tuple[int, Request]]  # (lane, request), lanes ascending
+
+
+@dataclasses.dataclass
+class AdmissionPlan:
+    """A scheduler-selected admission batch: k sequences, one HMQ burst."""
+
+    batches: list[AdmissionBatch]
+    pages_charged: int
+
+    @property
+    def size(self) -> int:
+        return sum(len(b.items) for b in self.batches)
+
+
+class Scheduler:
+    """Continuous-batching request scheduler.
+
+    Host-side control plane over the engine: tracks the waiting queue and
+    the running-lane table, plans page-budget-bounded admission batches, and
+    emits the completion packets that drive the packet-routed lane release.
+    """
+
+    def __init__(self, scfg: SchedulerConfig):
+        self.scfg = scfg
+        self.waiting: deque[Request] = deque()
+        self.running: dict[int, Request] = {}       # lane -> request
+        self.finished: list[Request] = []
+        self.failed: list[Request] = []
+
+    # ---------------- intake ----------------
+
+    def submit(self, req: Request) -> None:
+        kv_len = self._kv_len(req)
+        if self.scfg.max_kv_len and kv_len > self.scfg.max_kv_len:
+            raise ValueError(
+                f"request {req.rid}: {kv_len} KV tokens exceed the per-lane "
+                f"capacity of {self.scfg.max_kv_len}; it could never be "
+                f"admitted")
+        req.state = WAITING
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    def free_lanes(self) -> list[int]:
+        return [ln for ln in range(self.scfg.max_lanes) if ln not in self.running]
+
+    # ---------------- admission policy ----------------
+
+    def _kv_len(self, req: Request) -> int:
+        """Tokens this request puts in the KV cache at admission.
+
+        The vlm prefix is charged at the request's ACTUAL patch count — the
+        same number the engine admits — not the config's nominal
+        ``frontend_tokens``, so the page budget never drifts from what the
+        burst will allocate.
+        """
+        prefix = req.patches.shape[0] if req.patches is not None else 0
+        return req.prompt_len + prefix
+
+    def plan_admission(self, free_pages: int) -> AdmissionPlan:
+        """Select waiting requests to admit, FIFO, under the page budget.
+
+        A request is admissible while (a) a lane is free, (b) its bucket has
+        fewer than ``admit_width`` members (the static prefill batch width),
+        and (c) its KV pages — plus one recurrent-state slot charge-through —
+        fit in ``free_pages - page_reserve`` after earlier picks.  Selection
+        is head-of-line blocking: the first request that does not fit stops
+        the scan, preserving FIFO fairness under scarcity.
+        """
+        budget = free_pages - self.scfg.page_reserve
+        lanes = self.free_lanes()
+        by_bucket: dict[int, list[tuple[int, Request]]] = {}
+        charged = 0
+        taken = 0
+        for req in self.waiting:
+            if taken >= len(lanes):
+                break
+            bucket = pick_bucket(req.prompt_len, self.scfg)
+            members = by_bucket.setdefault(bucket, [])
+            if len(members) >= self.scfg.admit_width:
+                break
+            need = pages_needed(self._kv_len(req), self.scfg)
+            if charged + need > budget:
+                break
+            members.append((lanes[taken], req))
+            charged += need
+            taken += 1
+        batches = [AdmissionBatch(bucket=b, items=items)
+                   for b, items in sorted(by_bucket.items()) if items]
+        return AdmissionPlan(batches=batches, pages_charged=charged)
+
+    def commit_admission(self, plan: AdmissionPlan) -> None:
+        """Move the planned requests waiting -> running on their lanes."""
+        admitted = {id(req) for b in plan.batches for _, req in b.items}
+        self.waiting = deque(r for r in self.waiting if id(r) not in admitted)
+        for b in plan.batches:
+            for lane, req in b.items:
+                req.state = RUNNING
+                req.lane = lane
+                req.generated = 0
+                self.running[lane] = req
+
+    # ---------------- decode / completion lifecycle ----------------
+
+    def note_decode_step(self) -> list[int]:
+        """Advance every running request one token; return finished lanes."""
+        done = []
+        for lane, req in self.running.items():
+            req.generated += 1
+            if req.generated >= req.max_new_tokens:
+                done.append(lane)
+        return done
+
+    def release_packet_array(self, lanes: list[int]) -> np.ndarray:
+        """Completion packets for ``paged_kv.release_packets`` (module fn)."""
+        return release_packet_array(lanes, self.scfg.max_lanes)
+
+    def fail_admission(self, lanes: list[int]) -> list[Request]:
+        """Retire lanes whose admission the allocator rejected.
+
+        The engine reports these from :meth:`ServingEngine.admit_many`; the
+        requests move to the ``failed`` list (NOT ``finished``) so served
+        counts never silently include unserved work.
+        """
+        out = []
+        for lane in lanes:
+            req = self.running.pop(lane)
+            req.state = FAILED
+            req.lane = -1
+            self.failed.append(req)
+            out.append(req)
+        return out
+
+    def complete(self, lanes: list[int]) -> list[Request]:
+        """Retire finished lanes; returns the completed requests."""
+        out = []
+        for lane in lanes:
+            req = self.running.pop(lane)
+            req.state = FINISHED
+            req.lane = -1
+            self.finished.append(req)
+            out.append(req)
+        return out

@@ -11,6 +11,7 @@ from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs.base import ArchConfig
 from ..core.paged_kv import (PagedKVConfig, PagedKVState, decode_append,
@@ -141,29 +142,125 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
     return serve_step
 
 
-def make_prefill_step(cfg: ArchConfig, hints=None, unroll: bool = False):
-    """Full-sequence forward returning logits + stacked per-layer KV.
+class PrefillResult(NamedTuple):
+    """Output of the family-dispatch prefill layer (engine admission unit).
 
-    (Admission of the produced KV into the paged pool is the engine's job —
-    `repro.serve.engine.admit_sequences`.)
+    ``last_logits``  [B, V] logits at each sequence's last real position.
+    ``kv``           (k, v) each [B, L_kv, T_kv, kv_heads, head_dim] —
+                     batch-major, ready for ``paged_kv.admit_prefill_many``
+                     (None for attention-free families).
+    ``states``       per-layer recurrent states, family-specific layout
+                     (None for pure-attention families).
+    ``enc_out``      [B, F, d] whisper encoder output (None otherwise).
     """
-    from ..models.transformer import forward
+
+    last_logits: jnp.ndarray
+    kv: Optional[tuple]
+    states: Optional[Any]
+    enc_out: Optional[jnp.ndarray] = None
+
+
+def make_family_prefill(cfg: ArchConfig, hints=None, unroll: bool = False,
+                        recurrent_logits: bool = True):
+    """The ONE prefill for all families (engine admission + prefill step).
+
+    Returns ``prefill(params, batch) -> PrefillResult`` where ``batch`` holds
+    ``tokens`` [B, T] (right-padded), ``lengths`` [B] real prompt lengths, and
+    optionally ``frames`` / ``patches``.  Right-padding is invisible to the
+    real positions for attention families (causal masking), so sequences of
+    different lengths batch into one padded bucket — one XLA compile per
+    bucket instead of one per prompt length.  Recurrent families (ssm,
+    hybrid) fold padding into their state, so their buckets must be
+    exact-length (see ``repro.serve.scheduler.pick_bucket``).
+
+    ``recurrent_logits=False`` skips the vocab projection for ssm/hybrid
+    (whose admission path seeds decode from the last prompt token and never
+    reads logits) — at real scale that projection is a [B, d] x [d, ~100k]
+    matmul the pre-refactor admission never paid.
+    """
+    from ..models import decode as dec
+    from ..models.layers import embed
+    from ..models.transformer import (_hybrid_stack, _rwkv_stack,
+                                      _whisper_encoder, forward)
+
+    def prefill(params: dict, batch: dict) -> PrefillResult:
+      with use_hints(hints):
+        toks = batch["tokens"]
+        lengths = batch["lengths"].astype(jnp.int32)
+
+        def _recurrent_last(h):
+            if not recurrent_logits:
+                return None
+            h_last = jnp.take_along_axis(
+                h, (lengths - 1)[:, None, None], axis=1)[:, 0]
+            return dec.decode_logits(params, cfg, h_last)
+
+        if cfg.family == "ssm":
+            x = embed(params["embed"], toks)
+            h, (wkv, tmp, cmp) = _rwkv_stack(params, cfg, x, remat=False,
+                                             return_states=True, hints=hints,
+                                             unroll=unroll)
+            states = dec.RecurrentState(ssm=wkv, tm_prev=tmp, cm_prev=cmp)
+            return PrefillResult(_recurrent_last(h), None, states)
+
+        if cfg.family == "hybrid":
+            x = embed(params["embed"], toks)
+            h, ((ks, vs), (ssm, conv)) = _hybrid_stack(
+                params, cfg, x, remat=False, return_kv=True,
+                return_states=True, hints=hints, unroll=unroll)
+            last = _recurrent_last(h)
+            every = max(cfg.attn_every, 1)
+            idx = np.arange(every - 1, cfg.num_layers, every)
+            kv = (ks[idx].swapaxes(0, 1), vs[idx].swapaxes(0, 1))
+            return PrefillResult(last, kv, dec.RecurrentState(ssm=ssm, conv=conv))
+
+        # --- attention families (dense / moe / vlm / audio) ---
+        enc_out = None
+        last_idx = lengths - 1
+        if cfg.family == "audio":
+            enc_out = _whisper_encoder(params, cfg, batch["frames"],
+                                       unroll=unroll)
+            logits, kv = forward(params, cfg, toks,
+                                 encoder_frames=batch["frames"],
+                                 return_kv=True, hints=hints, unroll=unroll)
+        elif cfg.family == "vlm" and batch.get("patches") is not None:
+            logits, kv = forward(params, cfg, toks,
+                                 prefix_embeds=batch["patches"],
+                                 return_kv=True, hints=hints, unroll=unroll)
+            last_idx = last_idx + batch["patches"].shape[1]
+        else:
+            logits, kv = forward(params, cfg, toks, return_kv=True,
+                                 hints=hints, unroll=unroll)
+        last = jnp.take_along_axis(logits, last_idx[:, None, None], axis=1)[:, 0]
+        ks, vs = kv                                  # [L, B, S, kv, hd]
+        return PrefillResult(last, (ks.swapaxes(0, 1), vs.swapaxes(0, 1)),
+                             None, enc_out=enc_out)
+
+    return prefill
+
+
+def make_prefill_step(cfg: ArchConfig, hints=None, unroll: bool = False):
+    """Full-sequence forward returning last-position logits + stacked KV.
+
+    Thin wrapper over :func:`make_family_prefill` keeping the historical
+    contract (``(logits [B, 1, V], kv [L, B, S, kv, hd] | None)``) for the
+    dry-run/lowering path.  Batches without ``lengths`` are treated as
+    full-length (no padding).
+    """
+    fam = make_family_prefill(cfg, hints=hints, unroll=unroll)
 
     def prefill_step(params: dict, batch: dict):
-      with use_hints(hints):
+        B, T = batch["tokens"].shape
+        if "lengths" not in batch:
+            batch = dict(batch, lengths=jnp.full((B,), T, jnp.int32))
         # Serving admission needs only the LAST position's logits (the full
         # [B, S, V] tensor is a train-path artifact; returning it would cost
         # up to 100+ GB/device at the 32k prefill shapes).
-        if cfg.family in ("ssm", "hybrid"):
-            logits = forward(params, cfg, batch["tokens"],
-                             prefix_embeds=batch.get("patches"),
-                             encoder_frames=batch.get("frames"),
-                             hints=hints, unroll=unroll)
-            return logits[:, -1:], None
-        logits, kv = forward(params, cfg, batch["tokens"],
-                             prefix_embeds=batch.get("patches"),
-                             encoder_frames=batch.get("frames"),
-                             return_kv=True, hints=hints, unroll=unroll)
-        return logits[:, -1:], kv
+        res = fam(params, batch)
+        kv = None
+        if res.kv is not None and cfg.family != "hybrid":
+            ks, vs = res.kv
+            kv = (ks.swapaxes(0, 1), vs.swapaxes(0, 1))
+        return res.last_logits[:, None], kv
 
     return prefill_step

@@ -1,9 +1,11 @@
 """HMQ scheduler: malloc-priority + round-robin fairness properties."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core.hmq import round_robin_rank, schedule
+from _hypothesis_compat import given, needs_hypothesis, settings, st
+
+from repro.core.hmq import max_safe_lanes, round_robin_rank, schedule
 from repro.core.packets import OP_FREE, OP_MALLOC, OP_NOP, make_queue
 
 
@@ -32,6 +34,7 @@ def test_schedule_malloc_first_then_rr():
         assert int(sched.lane[j]) == int(q.lane[i])
 
 
+@needs_hypothesis
 @settings(max_examples=25, deadline=None)
 @given(st.lists(st.tuples(st.sampled_from([OP_MALLOC, OP_FREE, OP_NOP]),
                           st.integers(0, 4)), min_size=1, max_size=24))
@@ -65,3 +68,45 @@ def test_schedule_is_permutation_and_fair(entries):
         perm_keys[j] = keys[orig]
     sched_m = [k for k, o in zip(perm_keys, sops) if o == OP_MALLOC]
     assert sched_m == sorted(k for k, o in zip(keys, ops) if o == OP_MALLOC)
+
+
+# --------------------------------------------------------------------------
+# int32 fused-key bound: the documented guard is enforced, not just stated.
+# --------------------------------------------------------------------------
+
+def _schedule_oracle(ops, lanes):
+    """(prio, round, lane, position)-lexicographic expected permutation."""
+    rounds_m, rounds_f = {}, {}
+    keys = []
+    for i, (o, l) in enumerate(zip(ops, lanes)):
+        prio = 2 if o == OP_NOP else (1 if o == OP_FREE else 0)
+        table = rounds_m if o == OP_MALLOC else rounds_f
+        r = table.get(l, 0)
+        if o != OP_NOP:
+            table[l] = r + 1
+        keys.append((prio, r, l, i))
+    return sorted(range(len(ops)), key=lambda i: keys[i])
+
+
+@pytest.mark.parametrize("offset", [-3, 0, 3])
+def test_schedule_int32_bound_at_boundary(offset):
+    """Lane ids straddling max_safe_lanes must schedule identically to the
+    lexicographic oracle — the fused int32 key may not silently overflow."""
+    ops = [OP_FREE, OP_MALLOC, OP_MALLOC, OP_NOP, OP_MALLOC, OP_FREE,
+           OP_MALLOC, OP_MALLOC]
+    base = max(max_safe_lanes(len(ops)) + offset, 0)
+    lanes = [base, base + 1, base, 0, base + 1, base, base + 2, 1]
+    q = make_queue(ops, lanes, [0] * len(ops), [1] * len(ops))
+    sched, unperm = schedule(q)
+    expect = _schedule_oracle(ops, lanes)
+    got = [int(j) for j in np.argsort(np.asarray(unperm))]
+    assert got == expect, (offset, got, expect)
+    assert sorted(unperm.tolist()) == list(range(len(ops)))
+
+
+def test_max_safe_lanes_is_tight():
+    """The bound itself: key magnitude at the bound stays inside int32."""
+    q = 8
+    lanes = max_safe_lanes(q)
+    assert 3 * (q + 1) * (lanes + 1) <= 2**31 - 1
+    assert 3 * (q + 1) * (lanes + 2) > 2**31 - 1

@@ -1,0 +1,318 @@
+"""Scheduler-driven continuous batching: batched admission is bit-identical
+to sequential, bucketed prefill matches unpadded, packet-routed release
+matches the mask path, admission respects the page budget, and a k-sequence
+admission costs exactly ONE support-core HMQ burst + one compile per bucket."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.paged_kv as pkv
+from repro.configs import smoke_config
+from repro.core.freelist import validate_freelist
+from repro.core.packets import NO_LANE
+from repro.models import init_params, make_paged_config
+from repro.serve.engine import AdmissionItem, ServingEngine
+from repro.serve.scheduler import (Request, Scheduler, SchedulerConfig,
+                                   default_buckets, make_scheduler_config,
+                                   pick_bucket)
+from repro.serve.serve_step import make_family_prefill
+
+
+@pytest.fixture
+def kvcfg():
+    return pkv.PagedKVConfig(num_kv_layers=2, kv_heads=2, head_dim=4,
+                             page_size=4, num_pages=16, max_lanes=4,
+                             max_pages_per_lane=4, dtype=jnp.float32)
+
+
+@pytest.fixture
+def kvcfg_state():
+    return pkv.PagedKVConfig(num_kv_layers=1, kv_heads=1, head_dim=4,
+                             page_size=4, num_pages=12, max_lanes=3,
+                             max_pages_per_lane=3, dtype=jnp.float32,
+                             state_slots=3, state_dim=2)
+
+
+def _assert_states_equal(a, b):
+    for f in a._fields:
+        fa, fb = getattr(a, f), getattr(b, f)
+        if f == "alloc":
+            for g in fa._fields:
+                assert jnp.array_equal(getattr(fa, g), getattr(fb, g)), (f, g)
+        else:
+            assert jnp.array_equal(fa, fb), f
+
+
+@pytest.mark.parametrize("fix", ["kvcfg", "kvcfg_state"])
+def test_admit_many_bit_identical_to_sequential(fix, rng, request):
+    cfg = request.getfixturevalue(fix)
+    B = 3
+    T = 8
+    k = rng.randn(B, cfg.num_kv_layers, T, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    v = rng.randn(*k.shape).astype(np.float32)
+    lens = np.array([5, 8, 2], np.int32)
+
+    st0 = pkv.init_paged_kv(cfg)
+    seq = st0
+    for i in range(B):
+        seq, _ = pkv.admit_prefill(cfg, seq, jnp.int32(i), jnp.asarray(k[i]),
+                                   jnp.asarray(v[i]), jnp.int32(lens[i]))
+    batched, stats = pkv.admit_prefill_many(
+        cfg, st0, jnp.arange(B), jnp.asarray(k), jnp.asarray(v),
+        jnp.asarray(lens))
+    _assert_states_equal(seq, batched)
+    validate_freelist(batched.alloc)
+    # one KV malloc packet per lane (+ one state-class packet when configured)
+    assert int(stats.mallocs) == B * (2 if cfg.state_slots else 1)
+
+
+def test_admit_many_partial_failure_matches_sequential(kvcfg, rng):
+    """Under pool scarcity the batched burst fails the same lanes the
+    sequential path fails (HMQ sequential-skip grant semantics)."""
+    cfg = pkv.PagedKVConfig(num_kv_layers=1, kv_heads=1, head_dim=4,
+                            page_size=4, num_pages=3, max_lanes=3,
+                            max_pages_per_lane=2, dtype=jnp.float32)
+    B, T = 3, 8
+    k = rng.randn(B, 1, T, 1, 4).astype(np.float32)
+    lens = np.array([8, 8, 4], np.int32)   # needs 2+2+1 = 5 > 3 pages
+    st0 = pkv.init_paged_kv(cfg)
+    seq = st0
+    for i in range(B):
+        seq, _ = pkv.admit_prefill(cfg, seq, jnp.int32(i), jnp.asarray(k[i]),
+                                   jnp.asarray(k[i]), jnp.int32(lens[i]))
+    batched, stats = pkv.admit_prefill_many(
+        cfg, st0, jnp.arange(B), jnp.asarray(k), jnp.asarray(k),
+        jnp.asarray(lens))
+    _assert_states_equal(seq, batched)
+    assert batched.active.tolist() == [True, False, True]
+    assert int(stats.failed) == 1
+
+
+def test_release_packets_matches_mask_release(kvcfg_state, rng):
+    cfg = kvcfg_state
+    st = pkv.init_paged_kv(cfg)
+    k = rng.randn(3, 1, 8, 1, 4).astype(np.float32)
+    st, _ = pkv.admit_prefill_many(cfg, st, jnp.arange(3), jnp.asarray(k),
+                                   jnp.asarray(k), jnp.asarray([8, 6, 7]))
+    mask = jnp.asarray([True, False, True])
+    via_mask, _ = pkv.release_lanes(cfg, st, mask)
+    pkts = jnp.asarray([2, 0, NO_LANE], jnp.int32)   # unordered + padding
+    via_pkts, _ = pkv.release_packets(cfg, st, pkts)
+    _assert_states_equal(via_mask, via_pkts)
+    validate_freelist(via_pkts.alloc)
+    # exactly lane 1's pages stay live
+    assert int(pkv.live_pages(via_pkts)) == 2
+    assert via_pkts.active.tolist() == [False, True, False]
+    assert int(via_pkts.state_slot[1]) >= 0
+    assert int(via_pkts.state_slot[0]) == int(via_pkts.state_slot[2]) == -1
+
+
+def test_bucketing_and_page_budget_under_scarcity():
+    scfg = SchedulerConfig(page_size=4, num_pages=8, max_lanes=4,
+                           buckets=default_buckets(64), admit_width=4,
+                           page_reserve=2)
+    assert pick_bucket(9, scfg) == 16 and pick_bucket(16, scfg) == 16
+    exact = SchedulerConfig(page_size=4, num_pages=8, max_lanes=4,
+                            buckets=default_buckets(64), exact_buckets=True)
+    assert pick_bucket(9, exact) == 9
+
+    sched = Scheduler(scfg)
+    for rid, plen in enumerate([8, 8, 8, 8]):      # 2 pages each
+        sched.submit(Request(rid=rid, tokens=np.zeros(plen, np.int32),
+                             max_new_tokens=2))
+    # budget = 8 free - 2 reserve = 6 pages -> only 3 of 4 requests fit
+    plan = sched.plan_admission(free_pages=8)
+    assert plan.size == 3
+    assert plan.pages_charged == 6 <= 8 - scfg.page_reserve
+    sched.commit_admission(plan)
+    assert len(sched.running) == 3 and len(sched.waiting) == 1
+    # FIFO: the admitted requests are the first three submitted
+    assert sorted(r.rid for r in sched.running.values()) == [0, 1, 2]
+
+    # completion frees lanes; the held-back request becomes admissible
+    done = []
+    while not done:
+        done = sched.note_decode_step()
+    pkts = sched.release_packet_array(done)
+    assert pkts.shape == (scfg.max_lanes,) and set(pkts[len(done):]) == {NO_LANE}
+    sched.complete(done)
+    plan2 = sched.plan_admission(free_pages=8)
+    assert plan2.size == 1
+    assert [r.rid for _, r in plan2.batches[0].items] == [3]
+
+
+def test_one_burst_one_compile_and_equivalence(rng):
+    """Acceptance: admitting k>1 sequences issues exactly ONE support-core
+    HMQ burst and one XLA compile per prefill bucket, with engine outputs
+    equivalent to the old sequential-admit path."""
+    cfg = smoke_config("deepseek-7b")
+    params = init_params(cfg, dtype=jnp.float32)
+    kvcfg = make_paged_config(cfg, seq_len=64, lanes=4, page_size=4,
+                              dtype=jnp.float32)
+
+    calls = {"n": 0}
+    orig = pkv.support_core_step
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    pkv.support_core_step = counting
+    try:
+        eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
+        prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+                   for n in (7, 12, 5, 9)]           # one bucket (<= 16)
+        before = calls["n"]
+        eng.admit_many([AdmissionItem(l, p) for l, p in enumerate(prompts)])
+        assert calls["n"] - before == 1              # ONE HMQ burst for k=4
+        assert eng.stats.hmq_admit_bursts == 1
+        assert eng.stats.prefill_compiles == 1       # one bucket -> one compile
+
+        # same bucket again: no new compile
+        eng2 = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
+        eng2._prefill_cache = eng._prefill_cache
+        eng2.stats.prefill_compiles = eng.stats.prefill_compiles
+        for lane, p in enumerate(prompts):
+            eng2.admit(lane, p)
+        assert eng2.stats.prefill_compiles == eng.stats.prefill_compiles
+        assert eng2.stats.hmq_admit_bursts == 4      # sequential: one per seq
+    finally:
+        pkv.support_core_step = orig
+
+    # end-to-end equivalence: batched admission == sequential admission
+    assert eng.state.paged.seq_lens.tolist() == eng2.state.paged.seq_lens.tolist()
+    assert jnp.array_equal(eng.state.tokens, eng2.state.tokens)
+    for layer in range(kvcfg.num_kv_layers):
+        ka, _, va_mask = pkv.gather_kv(kvcfg, eng.state.paged, layer)
+        kb, _, vb_mask = pkv.gather_kv(kvcfg, eng2.state.paged, layer)
+        assert jnp.array_equal(va_mask, vb_mask)
+        np.testing.assert_allclose(np.where(np.asarray(va_mask)[..., None, None],
+                                            np.asarray(ka), 0),
+                                   np.where(np.asarray(vb_mask)[..., None, None],
+                                            np.asarray(kb), 0),
+                                   rtol=2e-5, atol=2e-5)
+    ta = eng.step()
+    tb = eng2.step()
+    np.testing.assert_array_equal(ta, tb)
+    validate_freelist(eng.state.paged.alloc)
+
+
+def test_bucketed_prefill_logits_match_unpadded(rng):
+    """Right-padding to a bucket (plus dummy batch rows) must not change the
+    last real position's logits for causal attention families."""
+    cfg = smoke_config("gemma3-1b")                  # local:global + tied emb
+    params = init_params(cfg, dtype=jnp.float32)
+    prefill = make_family_prefill(cfg)
+    T = 7
+    toks = rng.randint(0, cfg.vocab_size, size=(1, T)).astype(np.int32)
+
+    exact = prefill(params, {"tokens": jnp.asarray(toks),
+                             "lengths": jnp.asarray([T], jnp.int32)})
+    padded_toks = np.zeros((4, 16), np.int32)
+    padded_toks[0, :T] = toks[0]
+    padded = prefill(params, {"tokens": jnp.asarray(padded_toks),
+                              "lengths": jnp.asarray([T, 1, 1, 1], jnp.int32)})
+    np.testing.assert_allclose(np.asarray(exact.last_logits[0]),
+                               np.asarray(padded.last_logits[0]),
+                               rtol=1e-5, atol=1e-5)
+    # KV at the real positions is unchanged by padding
+    ke, _ = exact.kv
+    kp, _ = padded.kv
+    np.testing.assert_allclose(np.asarray(ke[0, :, :T]),
+                               np.asarray(kp[0, :, :T]), rtol=1e-5, atol=1e-5)
+
+
+def test_over_capacity_admission_fails_gracefully(kvcfg, rng):
+    """A sequence whose pages overflow the block-table row must FAIL its
+    malloc (no leaked pages, no crash), not clip silently."""
+    cfg = kvcfg                      # max_pages_per_lane=4, page_size=4
+    T = 24                           # 6 pages > 4-row block table
+    k = rng.randn(2, cfg.num_kv_layers, T, cfg.kv_heads, cfg.head_dim).astype(np.float32)
+    st, stats = pkv.admit_prefill_many(
+        cfg, pkv.init_paged_kv(cfg), jnp.arange(2), jnp.asarray(k),
+        jnp.asarray(k), jnp.asarray([24, 8]))   # lane 0 oversized, lane 1 fine
+    assert int(stats.failed) == 1
+    assert st.active.tolist()[:2] == [False, True]
+    assert int(pkv.live_pages(st)) == 2         # only lane 1's pages
+    validate_freelist(st.alloc)
+
+
+def test_failed_admission_does_not_leak_state_slot(kvcfg_state, rng):
+    """KV + state-slot packets of one admission succeed or fail together:
+    an over-capacity sequence must not strand a state slot."""
+    cfg = kvcfg_state                # max_pages_per_lane=3, state class
+    T = 16                           # 4 pages > 3-row block table
+    k = rng.randn(2, 1, T, 1, 4).astype(np.float32)
+    st, stats = pkv.admit_prefill_many(
+        cfg, pkv.init_paged_kv(cfg), jnp.arange(2), jnp.asarray(k),
+        jnp.asarray(k), jnp.asarray([16, 8]))
+    assert st.active.tolist()[:2] == [False, True]
+    assert int(st.alloc.used[pkv.STATE_CLASS]) == 1   # only lane 1's slot
+    assert int(st.state_slot[0]) == -1
+    validate_freelist(st.alloc)
+
+
+def test_admit_many_reports_failed_lanes(rng):
+    """The engine surfaces allocator-rejected lanes so the scheduler can
+    fail the requests instead of counting them as served."""
+    cfg = smoke_config("deepseek-7b")
+    params = init_params(cfg, dtype=jnp.float32)
+    kvcfg = pkv.PagedKVConfig(num_kv_layers=cfg.num_attn_layers,
+                              kv_heads=cfg.num_kv_heads,
+                              head_dim=cfg.resolved_head_dim,
+                              page_size=4, num_pages=3, max_lanes=2,
+                              max_pages_per_lane=8, dtype=jnp.float32)
+    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (8, 12)]     # 2 + 3 pages > 3-page pool
+    failed = eng.admit_many([AdmissionItem(l, p)
+                             for l, p in enumerate(prompts)])
+    assert failed == [1]
+    assert eng.state.paged.active.tolist() == [True, False]
+    assert eng.stats.alloc_failures == 1
+    # failed lanes come back reclaimed and are not counted as admitted
+    assert eng.stats.admitted == 1
+    assert eng.stats.completed == 0
+    assert int(eng.state.paged.alloc.used[pkv.KV_CLASS]) == 2  # lane 0 only
+    validate_freelist(eng.state.paged.alloc)
+
+
+def test_scheduler_rejects_never_fitting_request():
+    scfg = SchedulerConfig(page_size=4, num_pages=64, max_lanes=2,
+                           buckets=default_buckets(32), max_kv_len=32)
+    sched = Scheduler(scfg)
+    with pytest.raises(ValueError, match="per-lane"):
+        sched.submit(Request(rid=0, tokens=np.zeros(40, np.int32)))
+
+
+def test_make_scheduler_config_clamps_buckets_to_capacity():
+    from repro.serve.scheduler import make_scheduler_config
+    cfg = smoke_config("deepseek-7b")
+    kvcfg = make_paged_config(cfg, seq_len=95, lanes=2, page_size=16,
+                              dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg)
+    cap = kvcfg.max_pages_per_lane * kvcfg.page_size
+    assert all(b <= cap for b in scfg.buckets)
+    assert scfg.buckets[-1] == cap
+    assert pick_bucket(cap, scfg) == cap
+
+
+def test_scheduler_lifecycle_states():
+    scfg = SchedulerConfig(page_size=4, num_pages=64, max_lanes=2,
+                           buckets=default_buckets(32), admit_width=2)
+    sched = Scheduler(scfg)
+    reqs = [Request(rid=i, tokens=np.zeros(6, np.int32), max_new_tokens=1 + i)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    assert all(r.state == "waiting" for r in reqs)
+    plan = sched.plan_admission(free_pages=64)
+    assert plan.size == 2                            # lane-bound
+    sched.commit_admission(plan)
+    assert reqs[0].state == reqs[1].state == "running"
+    assert reqs[2].state == "waiting"
+    done = sched.note_decode_step()
+    assert [reqs[0].lane] == done                    # max_new_tokens=1 finishes
+    sched.complete(done)
+    assert reqs[0].state == "finished" and reqs[0].lane == -1
+    assert sched.has_work

@@ -4,7 +4,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, needs_hypothesis, settings, st
 
 from repro.core.freelist import init_freelist, validate_freelist
 from repro.core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
@@ -131,6 +132,7 @@ def request_batches(draw):
     return caps, steps
 
 
+@needs_hypothesis
 @settings(max_examples=12, deadline=None)
 @given(request_batches())
 def test_property_matches_python_oracle(batch):
