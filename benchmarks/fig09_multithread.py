@@ -1,4 +1,8 @@
-"""Fig. 9: multi-threaded speedups over Jemalloc for 1..16 threads."""
+"""Fig. 9: multi-threaded speedups over Jemalloc for 1..16 threads.
+
+Run directly for a single-config smoke (the CI sim job):
+``PYTHONPATH=src python -m benchmarks.fig09_multithread [threads]``.
+"""
 from .common import (MULTI_THREADED, SEVEN_POLICIES, csv_row, geomean,
                      speedup_table, timed)
 
@@ -16,3 +20,27 @@ def run() -> list[str]:
                                     if pol == "speedmalloc" else ""))
             rows.append(csv_row(f"fig09/{T}threads/{pol}_vs_jemalloc", us, note))
     return rows
+
+
+def run_single(threads: int = 16) -> list[str]:
+    """One thread-count config (CI sim smoke: exercises the full
+    trace-engine + cost-model path, including the speedmalloc_stash tier,
+    in a fraction of the sweep's time)."""
+    from repro.sim.policies import SPEEDMALLOC_STASH
+
+    table, us = timed(speedup_table, list(MULTI_THREADED.values()),
+                      SEVEN_POLICIES + [SPEEDMALLOC_STASH], threads=threads)
+    rows = []
+    for pol in ("tcmalloc", "mimalloc", "speedmalloc", "speedmalloc-stash"):
+        gm = geomean(r[pol] for r in table.values())
+        rows.append(csv_row(f"fig09/{threads}threads/{pol}_vs_jemalloc", us,
+                            f"{gm:.3f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    print("name,us_per_call,derived")
+    for row in run_single(int(sys.argv[1]) if len(sys.argv) > 1 else 16):
+        print(row)

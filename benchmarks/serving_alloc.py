@@ -1,12 +1,14 @@
 """Beyond-paper: SpeedMalloc paged-KV allocator in the real serving engine.
 
 Drives the scheduler-driven continuous-batching stack (DESIGN.md §3) under a
-Larson-style request churn and measures the end-to-end decode-step latency
-plus the admission-path efficiency the scheduler refactor buys: HMQ bursts
-per admitted sequence (1/k for a k-sequence batch, vs 1 for the old
-sequential admit) and prefill recompile count (one per bucket, vs one per
-distinct prompt length).  Also writes ``BENCH_serving.json`` so the perf
-trajectory is machine-readable across PRs.
+Larson-style request churn TWICE — once with the per-lane page-stash
+front-end (DESIGN.md §7) and once with it disabled — and measures what the
+two-tier refactor buys on the decode hot path: stash hit rate, HMQ bursts
+per 1k decode steps (pre-stash baseline: 1000 — one support-core batch every
+step), and the before/after steady-state decode-step latency.  Admission
+telemetry (bursts per admitted sequence, prefill compiles) rides along.
+Writes ``BENCH_serving.json`` so the perf trajectory is machine-readable
+across PRs.
 """
 import json
 import time
@@ -25,17 +27,16 @@ from .common import csv_row
 
 BENCH_JSON = Path("BENCH_serving.json")
 
+STASH = dict(stash_size=8, stash_watermark=2, stash_refill=4)
 
-def run() -> list[str]:
-    cfg = smoke_config("mixtral-8x7b")
+
+def _run_once(cfg, params, stash: bool) -> dict:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
-                              dtype=jnp.float32)
+                              dtype=jnp.float32, **(STASH if stash else {}))
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
-    eng = ServingEngine(cfg, kvcfg, init_params(cfg, dtype=jnp.float32),
-                        dtype=jnp.float32, sched_cfg=scfg)
+    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg)
 
-    # --- the real serving lifecycle (shared with repro.launch.serve) ---
     sched = Scheduler(scfg)
     n_requests = 8
     requests = [Request(rid=rid,
@@ -48,21 +49,53 @@ def run() -> list[str]:
                step_times_us=decode_us)
     wall_s = time.perf_counter() - t_start
 
-    a = eng.state.paged.alloc
     s = eng.stats
+    a = eng.state.paged.alloc
     # first decode step includes the decode compile; report steady state
     steady_us = float(np.mean(decode_us[1:])) if len(decode_us) > 1 else 0.0
+    return {
+        "finished": len(sched.finished),
+        "unserved": len(sched.waiting),
+        "failed": len(sched.failed),
+        "wall_s": wall_s,
+        "steady_us": steady_us,
+        "stats": s,
+        "alloc": a,
+    }
+
+
+def run() -> list[str]:
+    cfg = smoke_config("mixtral-8x7b")
+    params = init_params(cfg, dtype=jnp.float32)
+
+    # before -> after order: the central-only reference runs first and
+    # absorbs the process-wide JAX/XLA warmup; each run still pays its own
+    # engine's prefill/decode compiles, so requests_per_s stays end-to-end.
+    before = _run_once(cfg, params, stash=False)   # central-only reference
+    after = _run_once(cfg, params, stash=True)     # the two-tier allocator
+
+    s, a = after["stats"], after["alloc"]
+    s0 = before["stats"]
     bursts_per_seq = s.hmq_admit_bursts / max(s.admitted, 1)
     metrics = {
-        "requests": len(sched.finished),
-        "requests_unserved": len(sched.waiting),
-        "requests_failed": len(sched.failed),
-        "requests_per_s": len(sched.finished) / wall_s,
-        "decode_step_us": steady_us,
+        "requests": after["finished"],
+        "requests_unserved": after["unserved"],
+        "requests_failed": after["failed"],
+        "requests_per_s": after["finished"] / after["wall_s"],
+        # --- decode hot path, before/after the stash front-end ---
+        "decode_step_us": after["steady_us"],
+        "decode_step_us_stash_off": before["steady_us"],
+        "hmq_bursts_per_1k_decode_steps": s.hmq_bursts_per_1k_decode_steps,
+        "hmq_bursts_per_1k_decode_steps_stash_off":
+            s0.hmq_bursts_per_1k_decode_steps,
+        "stash_hit_rate": s.stash_hit_rate,
+        "decode_steps": s.decode_steps,
+        "decode_bursts": s.decode_bursts,
+        # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
         "admitted": s.admitted,
         "hmq_bursts_per_admitted_seq": bursts_per_seq,
-        "prefill_recompiles": s.prefill_compiles,
+        "prefill_compiles": s.prefill_compiles,
         "alloc_failures": s.alloc_failures,
         "allocs": int(a.alloc_count[0]),
         "frees": int(a.free_count[0]),
@@ -70,15 +103,16 @@ def run() -> list[str]:
     }
     BENCH_JSON.write_text(json.dumps(metrics, indent=2) + "\n")
     return [
-        csv_row("serving/decode_step", steady_us,
-                f"4 lanes, allocs={metrics['allocs']} "
-                f"frees={metrics['frees']} fails={int(a.fail_count[0])} "
-                f"peak_pages={metrics['peak_pages']}"),
+        csv_row("serving/decode_step", after["steady_us"],
+                f"4 lanes, stash_hit_rate={metrics['stash_hit_rate']:.2f} "
+                f"bursts/1k={metrics['hmq_bursts_per_1k_decode_steps']:.0f} "
+                f"(stash off: {before['steady_us']:.0f}us, "
+                f"{metrics['hmq_bursts_per_1k_decode_steps_stash_off']:.0f}/1k)"),
         csv_row("serving/admission", s.hmq_admit_bursts,
                 f"bursts for {s.admitted} seqs "
                 f"({bursts_per_seq:.2f}/seq) "
-                f"recompiles={s.prefill_compiles}"),
-        csv_row("serving/throughput", wall_s * 1e6,
+                f"compiles={s.prefill_compiles}"),
+        csv_row("serving/throughput", after["wall_s"] * 1e6,
                 f"requests_per_s={metrics['requests_per_s']:.2f} "
                 f"(json: {BENCH_JSON})"),
     ]

@@ -89,7 +89,13 @@ def num_free(state: FreeListState) -> jnp.ndarray:
     return state.free_top
 
 
-def validate_freelist(state: FreeListState) -> None:
+def validate_freelist(
+    state: FreeListState,
+    stash_pages=None,
+    stash_depth=None,
+    in_use=None,
+    stash_class: int = 0,
+) -> None:
     """Host-side invariant check (tests / debugging only; not jittable).
 
     Invariants:
@@ -97,6 +103,14 @@ def validate_freelist(state: FreeListState) -> None:
       I2. stack entries below free_top are unique, valid ids, and unowned
       I3. used == capacity - free_top
       I4. every block is either on the stack or owned (exactly once)
+      I5. (when the lane-stash tier is passed in) every block of the stash's
+          class is exactly one of {central free stack, some lane's stash,
+          in use}; stashed blocks are owner-mapped to their stash lane.
+
+    ``stash_pages``/``stash_depth`` are the ``[max_lanes, S]``/``[max_lanes]``
+    arrays of :class:`repro.core.lane_stash.LaneStashState`.  ``in_use`` is an
+    optional ``[N]`` bool of blocks referenced by consumers (e.g. block
+    tables); when given, the three-way partition is checked exactly.
     """
     fs = np.asarray(state.free_stack)
     ft = np.asarray(state.free_top)
@@ -114,3 +128,37 @@ def validate_freelist(state: FreeListState) -> None:
         owned = np.where(owner[c, :cap] >= 0)[0]
         assert len(owned) + top == cap, f"I4 accounting, class {c}"
         assert not np.intersect1d(owned, live).size, f"I4 overlap, class {c}"
+
+    if stash_pages is None:
+        return
+    sp = np.asarray(stash_pages)
+    sd = np.asarray(stash_depth)
+    c = stash_class
+    cap = int(caps[c])
+    stack_ids = fs[c, : int(ft[c])]
+    stashed_all = []
+    for lane in range(sp.shape[0]):
+        d = int(sd[lane])
+        assert 0 <= d <= sp.shape[1], f"I5 stash depth range, lane {lane}"
+        row = sp[lane, :d]
+        assert (sp[lane, d:] == -1).all(), f"I5 stash hygiene, lane {lane}"
+        if d == 0:
+            continue
+        assert row.min() >= 0 and row.max() < cap, f"I5 stash id range, lane {lane}"
+        assert (owner[c, row] == lane).all(), \
+            f"I5 stashed block not owner-mapped to its lane, lane {lane}"
+        stashed_all.append(row)
+    stashed = np.concatenate(stashed_all) if stashed_all else \
+        np.zeros((0,), np.int32)
+    assert len(np.unique(stashed)) == len(stashed), "I5 dup across stashes"
+    assert not np.intersect1d(stashed, stack_ids).size, \
+        "I5 block on both central stack and a stash"
+    if in_use is not None:
+        used_ids = np.where(np.asarray(in_use)[:cap])[0]
+        assert not np.intersect1d(used_ids, stashed).size, \
+            "I5 block both stashed and in use"
+        assert not np.intersect1d(used_ids, stack_ids).size, \
+            "I5 block both free and in use"
+        assert len(stack_ids) + len(stashed) + len(used_ids) == cap, \
+            (f"I5 partition: stack {len(stack_ids)} + stash {len(stashed)} "
+             f"+ in-use {len(used_ids)} != capacity {cap}")

@@ -24,7 +24,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from .packets import OP_FREE, OP_MALLOC, OP_NOP, RequestQueue
+from .packets import OP_FREE, OP_MALLOC, OP_NOP, OP_REFILL, RequestQueue
 
 
 def round_robin_rank(lane: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
@@ -55,11 +55,11 @@ def max_safe_lanes(q: int) -> int:
     :func:`schedule` cannot overflow.
 
     The fused key is ``(prio * (q+1) + rr) * (lanes+1) + lane`` with
-    ``prio <= 2`` and ``rr <= q``, so its magnitude is bounded by
-    ``3 * (q+1) * (lanes+1)``; it stays below 2**31 while
-    ``lanes + 1 <= (2**31 - 1) // (3 * (q + 1))``.
+    ``prio <= 3`` (malloc < refill < free < nop) and ``rr <= q``, so its
+    magnitude is bounded by ``4 * (q+1) * (lanes+1)``; it stays below 2**31
+    while ``lanes + 1 <= (2**31 - 1) // (4 * (q + 1))``.
     """
-    return max((2**31 - 1) // (3 * (q + 1)) - 1, 0)
+    return max((2**31 - 1) // (4 * (q + 1)) - 1, 0)
 
 
 def schedule(queue: RequestQueue) -> tuple[RequestQueue, jnp.ndarray]:
@@ -72,16 +72,23 @@ def schedule(queue: RequestQueue) -> tuple[RequestQueue, jnp.ndarray]:
     q = queue.capacity
     valid = queue.op != OP_NOP
     is_free = queue.op == OP_FREE
-    # priority: malloc(0) < free(1) < nop(2)  — lower key served first
-    prio = jnp.where(valid, jnp.where(is_free, 1, 0), 2).astype(jnp.int32)
-    # Fig. 7: malloc and free land in SEPARATE queues, so the round-robin
-    # arrival round is counted per queue (a lane's earlier free does not
+    is_refill = queue.op == OP_REFILL
+    # priority: malloc(0) < refill(1) < free(2) < nop(3) — lower key served
+    # first.  Refills are speculative mallocs (stash pre-grants): allocation
+    # is still prioritized over deallocation, but an on-path OP_MALLOC can
+    # never be starved by another lane's bulk refill under scarcity.
+    prio = jnp.where(valid,
+                     jnp.where(is_free, 2, jnp.where(is_refill, 1, 0)),
+                     3).astype(jnp.int32)
+    # Fig. 7: each priority class lands in its own queue, so the round-robin
+    # arrival round is counted per class (a lane's earlier free does not
     # delay its first malloc).
-    rr_m = round_robin_rank(queue.lane, valid & ~is_free)
+    rr_m = round_robin_rank(queue.lane, valid & ~is_free & ~is_refill)
+    rr_r = round_robin_rank(queue.lane, valid & is_refill)
     rr_f = round_robin_rank(queue.lane, valid & is_free)
-    rr = jnp.where(is_free, rr_f, rr_m)
+    rr = jnp.where(is_free, rr_f, jnp.where(is_refill, rr_r, rr_m))
     lanes = jnp.maximum(jnp.max(queue.lane), 0) + 1
-    # Fast path: one fused int32 key; safe while 3 * (q+1) * (lanes+1) < 2**31
+    # Fast path: one fused int32 key; safe while 4 * (q+1) * (lanes+1) < 2**31
     # (the bound the docstring of max_safe_lanes derives).  The guard is
     # enforced, not just documented: queues whose lane ids exceed the static
     # safe bound take an overflow-proof lexicographic sort that yields the
@@ -111,5 +118,6 @@ def queue_occupancy(queue: RequestQueue) -> dict[str, jnp.ndarray]:
     return {
         "total": jnp.sum(valid).astype(jnp.int32),
         "malloc": jnp.sum(queue.op == OP_MALLOC).astype(jnp.int32),
+        "refill": jnp.sum(queue.op == OP_REFILL).astype(jnp.int32),
         "free": jnp.sum(queue.op == OP_FREE).astype(jnp.int32),
     }

@@ -1,0 +1,172 @@
+"""Per-lane page stash: the tiered front-end of the two-tier allocator.
+
+The paper's TCMalloc/Mimalloc baselines (§2) win their single-thread speed
+from a per-thread cache in front of the shared tier; SpeedMalloc removes the
+shared-tier *synchronization* but its support-core is still a round-trip.
+This module is the serving allocator's equivalent of that front tier
+(cf. scalloc's batched span reuse, arXiv:1503.09006): each lane keeps a tiny
+LIFO stash of pre-granted KV pages so the decode hot path pops its
+page-boundary allocation with pure vector ops and touches the central
+support-core only in amortized bulk *refill bursts*:
+
+* pop   — a lane crossing a page boundary takes its stash top (O(1) gather);
+* push  — SWA-recycled dead pages go back to the stash first, so in steady
+          state a windowed lane's page traffic never leaves the front tier;
+* refill— one HMQ burst serves EVERY lane below the watermark with
+          ``refill`` pages each, so central traffic drops from one burst per
+          decode step to ~1 per ``size · page_size`` tokens per lane;
+* flush — pushes that find the stash full overflow to the central free list
+          (an ``OP_FREE`` packet riding the same burst).
+
+Ownership contract: every stashed page is *owner-mapped to its lane* in the
+segregated free-list metadata (the support-core granted it to that lane, or
+the lane recycled its own dead page).  Releasing a lane with ``FREE_ALL``
+therefore reclaims its stashed pages with no extra packets, and the host
+only clears the stash row.  ``validate_freelist``'s invariant I5 checks the
+resulting three-way partition: every page is exactly one of {central stack,
+lane stash, in use}.
+
+All ops are shape-static and jit-friendly; the stash arrays ride in
+:class:`~repro.core.paged_kv.PagedKVState` (and through it in the serving
+``ServeState``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .packets import NO_BLOCK
+
+
+class LaneStashState(NamedTuple):
+    """Per-lane LIFO stash of pre-granted block ids.
+
+    ``pages[l, :depth[l]]`` are valid; slots at and above ``depth[l]`` hold
+    ``NO_BLOCK``.  A config with the stash disabled still carries a
+    ``[max_lanes, 1]`` dummy so the pytree structure is static.
+    """
+
+    pages: jnp.ndarray   # [max_lanes, S] int32
+    depth: jnp.ndarray   # [max_lanes]    int32
+
+    @property
+    def size(self) -> int:
+        return self.pages.shape[1]
+
+    @property
+    def max_lanes(self) -> int:
+        return self.pages.shape[0]
+
+
+def validate_stash_params(size: int, watermark: int, refill: int) -> None:
+    """Static config check: a refill must always fit above the watermark.
+
+    Refill grants are all-or-nothing (the support-core has no partial
+    grants), so a below-watermark lane must be able to accept a full
+    ``refill`` batch: ``depth < watermark`` and ``watermark + refill <= size``
+    together guarantee ``depth + refill <= size``.
+    """
+    if size < 0 or watermark < 0 or refill < 0:
+        raise ValueError("stash parameters must be non-negative")
+    if size == 0:
+        return
+    if watermark < 1:
+        raise ValueError("a non-empty stash needs stash_watermark >= 1")
+    if refill < 1:
+        raise ValueError("a non-empty stash needs stash_refill >= 1")
+    if watermark + refill > size:
+        raise ValueError(
+            f"stash_watermark ({watermark}) + stash_refill ({refill}) must "
+            f"not exceed stash_size ({size}): an all-or-nothing refill of a "
+            f"below-watermark lane could overflow the stash")
+
+
+def init_stash(max_lanes: int, size: int) -> LaneStashState:
+    return LaneStashState(
+        pages=jnp.full((max_lanes, max(size, 1)), NO_BLOCK, jnp.int32),
+        depth=jnp.zeros((max_lanes,), jnp.int32),
+    )
+
+
+def stash_pop(stash: LaneStashState, want: jnp.ndarray
+              ) -> tuple[LaneStashState, jnp.ndarray, jnp.ndarray]:
+    """Pop each wanting lane's stash top.  Returns (stash, pages, got).
+
+    ``pages[l]`` is the popped block id (``NO_BLOCK`` where the pop missed);
+    ``got = want & (depth > 0)``.  Pure gathers/scatters — no allocator step.
+    """
+    L, S = stash.pages.shape
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
+    got = want & (stash.depth > 0)
+    top = jnp.clip(stash.depth - 1, 0, S - 1)
+    pages = jnp.where(got, stash.pages[lane_ids, top], NO_BLOCK)
+    new_pages = stash.pages.at[jnp.where(got, lane_ids, L), top].set(
+        NO_BLOCK, mode="drop")
+    return (LaneStashState(new_pages, stash.depth - got.astype(jnp.int32)),
+            pages, got)
+
+
+def stash_push(stash: LaneStashState, pages: jnp.ndarray, want: jnp.ndarray
+               ) -> tuple[LaneStashState, jnp.ndarray]:
+    """Push one page per wanting lane where there is room.
+
+    Returns (stash, pushed).  ``want & ~pushed`` lanes must route their page
+    to the central free list instead (overflow flush).
+    """
+    L, S = stash.pages.shape
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
+    pushed = want & (stash.depth < S)
+    slot = jnp.clip(stash.depth, 0, S - 1)
+    new_pages = stash.pages.at[jnp.where(pushed, lane_ids, L), slot].set(
+        pages, mode="drop")
+    return (LaneStashState(new_pages, stash.depth + pushed.astype(jnp.int32)),
+            pushed)
+
+
+def stash_push_batch(stash: LaneStashState, blocks: jnp.ndarray,
+                     count: int, want: jnp.ndarray) -> LaneStashState:
+    """Append ``blocks[l, :count]`` to each wanting lane's stash (bulk refill
+    install).  Callers guarantee room (``validate_stash_params``)."""
+    L, S = stash.pages.shape
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
+    j = jnp.arange(count, dtype=jnp.int32)[None, :]
+    slot = jnp.clip(stash.depth[:, None] + j, 0, S - 1)
+    rows = jnp.where(want[:, None], lane_ids[:, None], L)
+    rows = jnp.broadcast_to(rows, (L, count))
+    new_pages = stash.pages.at[rows.reshape(-1), slot.reshape(-1)].set(
+        blocks[:, :count].reshape(-1), mode="drop")
+    return LaneStashState(
+        new_pages, stash.depth + jnp.int32(count) * want.astype(jnp.int32))
+
+
+def stash_set_rows(stash: LaneStashState, lanes: jnp.ndarray,
+                   blocks: jnp.ndarray, count: int,
+                   got: jnp.ndarray) -> LaneStashState:
+    """Overwrite whole stash rows for ``lanes`` (admission pre-charge):
+    granted lanes get ``blocks[:, :count]``, others an empty row."""
+    S = stash.size
+    rows = jnp.full((lanes.shape[0], S), NO_BLOCK, jnp.int32)
+    if count:
+        rows = rows.at[:, :count].set(
+            jnp.where(got[:, None], blocks[:, :count], NO_BLOCK))
+    return LaneStashState(
+        pages=stash.pages.at[lanes].set(rows),
+        depth=stash.depth.at[lanes].set(
+            jnp.where(got, jnp.int32(count), 0)),
+    )
+
+
+def stash_clear(stash: LaneStashState, mask: jnp.ndarray) -> LaneStashState:
+    """Empty the stash rows of masked lanes (lane release: the pages
+    themselves return to the central stack via FREE_ALL)."""
+    return LaneStashState(
+        pages=jnp.where(mask[:, None], NO_BLOCK, stash.pages),
+        depth=jnp.where(mask, 0, stash.depth),
+    )
+
+
+def below_watermark(stash: LaneStashState, active: jnp.ndarray,
+                    watermark: int) -> jnp.ndarray:
+    """Lanes whose stash needs a bulk refill this step."""
+    return active & (stash.depth < watermark)

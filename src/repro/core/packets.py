@@ -12,6 +12,12 @@ Opcodes
 -------
 ``OP_NOP``    empty slot (queues are fixed capacity; unused slots are nops)
 ``OP_MALLOC`` allocate ``count`` blocks of ``size_class`` for ``lane``
+``OP_REFILL`` malloc with *refill priority*: identical grant semantics to
+              ``OP_MALLOC`` but scheduled after every plain malloc in the
+              batch (and before frees).  Used by the lane-stash front-end
+              (DESIGN.md §7) for bulk refills and admission pre-charges, so
+              under pool scarcity a speculative refill can never starve
+              another lane's on-path allocation.
 ``OP_FREE``   free blocks: ``arg >= 0`` frees the single block id ``arg``;
               ``arg == FREE_ALL`` frees every block owned by ``lane`` in
               ``size_class`` (sequence-completion path in paged KV)
@@ -25,6 +31,7 @@ import jax.numpy as jnp
 OP_NOP = 0
 OP_MALLOC = 1
 OP_FREE = 2
+OP_REFILL = 3
 
 #: ``arg`` sentinel for OP_FREE meaning "free all blocks owned by lane".
 FREE_ALL = -1

@@ -23,10 +23,14 @@ through the same centralized allocator.
 
 Beyond-paper feature: **sliding-window page recycling** — for SWA archs
 (mixtral, gemma3 local layers) pages that fall fully behind the attention
-window are freed with single-block OP_FREE packets, bounding pages/lane to
-``window/page_size + 1``.  This makes steady-state decode issue both mallocs
-and frees every step: the workload the HMQ (malloc-priority + deferred free)
-is designed for.
+window are recycled, bounding pages/lane to ``window/page_size + 1``.
+
+Two-tier front-end (DESIGN.md §7): when ``stash_size > 0`` each lane keeps a
+small LIFO stash of pre-granted pages (``core/lane_stash.py``).  Decode pops
+boundary pages from the stash and pushes recycled dead pages back to it, so
+steady-state steps never touch the central allocator; one bulk HMQ burst
+(gated behind an any-live-packet ``lax.cond``) periodically refills every
+below-watermark lane and flushes overflow.
 """
 from __future__ import annotations
 
@@ -34,10 +38,14 @@ import dataclasses
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+from jax import lax
 
 from .freelist import FreeListState, init_freelist
+from .lane_stash import (LaneStashState, below_watermark, init_stash,
+                         stash_clear, stash_pop, stash_push, stash_push_batch,
+                         stash_set_rows, validate_stash_params)
 from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
-                      RequestQueue, ResponseQueue)
+                      OP_REFILL, RequestQueue, ResponseQueue)
 from .support_core import StepStats, support_core_step
 
 KV_CLASS = 0
@@ -57,6 +65,19 @@ class PagedKVConfig:
     # SSM/hybrid lane-state slots (0 disables the extra size class)
     state_slots: int = 0
     state_dim: int = 0
+    # Per-lane page-stash front-end (DESIGN.md §7).  stash_size == 0 disables
+    # the tier (decode then issues its HMQ burst exactly as before, still
+    # gated behind the any-live-packet predicate).  When enabled, a lane
+    # whose stash depth drops below ``stash_watermark`` gets ``stash_refill``
+    # pages in the next bulk refill burst.
+    stash_size: int = 0
+    stash_watermark: int = 2
+    stash_refill: int = 4
+
+    def __post_init__(self):
+        if self.stash_size:
+            validate_stash_params(self.stash_size, self.stash_watermark,
+                                  self.stash_refill)
 
     @property
     def tokens_capacity(self) -> int:
@@ -72,6 +93,42 @@ class PagedKVState(NamedTuple):
     v_pages: jnp.ndarray          # same
     state_slot: jnp.ndarray       # [max_lanes] int32 (NO_BLOCK if none)
     lane_state: jnp.ndarray       # [state_slots, state_dim] recurrent state storage
+    stash: LaneStashState         # per-lane page-stash front-end (DESIGN.md §7)
+
+
+class DecodeStats(NamedTuple):
+    """Decode-step telemetry: the support-core stats plus the stash tier.
+
+    ``bursts`` is 0/1 — whether this step actually issued a support-core HMQ
+    batch (steady-state stash-served steps skip it entirely).  ``failed``
+    counts only *on-path* failures (a boundary lane that got no page);
+    failed speculative refills are benign and tracked separately in
+    ``refill_failed`` (``core.failed`` still holds the raw total).
+    """
+
+    core: StepStats
+    failed: jnp.ndarray          # on-path (emergency) malloc failures
+    refill_failed: jnp.ndarray   # benign speculative-refill failures
+    stash_hits: jnp.ndarray      # boundary pages served by the stash
+    stash_misses: jnp.ndarray    # boundary pages that needed a central malloc
+    bursts: jnp.ndarray          # 0/1 support-core steps issued
+
+    # forwarders so DecodeStats reads like the StepStats it extends
+    @property
+    def mallocs(self):
+        return self.core.mallocs
+
+    @property
+    def frees(self):
+        return self.core.frees
+
+    @property
+    def blocks_allocated(self):
+        return self.core.blocks_allocated
+
+    @property
+    def blocks_freed(self):
+        return self.core.blocks_freed
 
 
 def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
@@ -86,7 +143,39 @@ def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
         v_pages=jnp.zeros(shape, cfg.dtype),
         state_slot=jnp.full((cfg.max_lanes,), NO_BLOCK, jnp.int32),
         lane_state=jnp.zeros((max(cfg.state_slots, 1), max(cfg.state_dim, 1)), jnp.float32),
+        stash=init_stash(cfg.max_lanes, cfg.stash_size),
     )
+
+
+def _gated_support_core_step(
+    alloc: FreeListState,
+    queue: RequestQueue,
+    max_blocks_per_req: int,
+) -> tuple[FreeListState, ResponseQueue, StepStats, jnp.ndarray]:
+    """Run the support-core step only when the queue has a live packet.
+
+    An all-NOP queue is a no-op for the allocator (bit-identical state, all
+    responses failed/empty), so the whole metadata pass is skipped with a
+    ``lax.cond`` — the fast path that makes stash-served (and idle) decode
+    steps cost zero central-allocator work.  Returns the extra ``live`` flag
+    (0/1) for burst telemetry.
+    """
+    live = jnp.any(queue.op != OP_NOP)
+
+    def run(_):
+        return support_core_step(alloc, queue,
+                                 max_blocks_per_req=max_blocks_per_req)
+
+    def skip(_):
+        q = queue.capacity
+        z = jnp.zeros((), jnp.int32)
+        resp = ResponseQueue(
+            blocks=jnp.full((q, max_blocks_per_req), NO_BLOCK, jnp.int32),
+            status=jnp.zeros((q,), jnp.int32))
+        return alloc, resp, StepStats(z, z, z, z, z)
+
+    new_alloc, resp, stats = lax.cond(live, run, skip, 0)
+    return new_alloc, resp, stats, live
 
 
 # --------------------------------------------------------------------------
@@ -124,30 +213,61 @@ def admit_prefill_many(
     # leaking unreferenced pages or a stranded state slot.  The admission
     # then reports it in `failed`.
     fits = n_pages <= cfg.max_pages_per_lane
-    forced_fail = jnp.int32(max_pages + 1)
+    # forced-fail must exceed the response width R (overwide -> fail), which
+    # the stash pre-charge packets may widen beyond max_pages.
+    pre = cfg.stash_refill if cfg.stash_size else 0
+    resp_width = max(max_pages, pre)
+    forced_fail = jnp.int32(resp_width + 1)
     kv_args = jnp.where(fits, n_pages, forced_fail)
     st_args = jnp.where(fits, jnp.int32(1), forced_fail)
 
     kv_ops = jnp.full((B,), OP_MALLOC, jnp.int32)
     st_ops = jnp.full((B,), OP_MALLOC if cfg.state_slots else OP_NOP, jnp.int32)
+    ops = [kv_ops, st_ops]
+    req_lanes = [lanes, lanes]
+    classes = [jnp.full((B,), KV_CLASS, jnp.int32),
+               jnp.full((B,), STATE_CLASS, jnp.int32)]
+    args = [kv_args, st_args]
+    if cfg.stash_size:
+        # Stash pre-charge: one extra malloc packet per lane fills the
+        # admitted lane's stash with a refill batch, so early decode steps
+        # are served by the front tier instead of bursting immediately.
+        # The packet rides the SAME burst at refill priority (OP_REFILL:
+        # after every plain malloc), so under scarcity the pre-charge fails
+        # first and admission itself is unaffected (an empty stash is
+        # benign).
+        ops.append(jnp.full((B,), OP_REFILL, jnp.int32))
+        req_lanes.append(lanes)
+        classes.append(jnp.full((B,), KV_CLASS, jnp.int32))
+        args.append(jnp.where(fits, jnp.int32(pre), forced_fail))
     queue = RequestQueue(
-        op=jnp.concatenate([kv_ops, st_ops]),
-        lane=jnp.concatenate([lanes, lanes]),
-        size_class=jnp.concatenate([jnp.full((B,), KV_CLASS, jnp.int32),
-                                    jnp.full((B,), STATE_CLASS, jnp.int32)]),
-        arg=jnp.concatenate([kv_args, st_args]),
+        op=jnp.concatenate(ops),
+        lane=jnp.concatenate(req_lanes),
+        size_class=jnp.concatenate(classes),
+        arg=jnp.concatenate(args),
     )
     alloc, resp, stats = support_core_step(state.alloc, queue,
-                                           max_blocks_per_req=max_pages)
+                                           max_blocks_per_req=resp_width)
+    if cfg.stash_size:
+        # `failed` should mean "admission packets that failed": a failed
+        # pre-charge is benign (the lane just starts with an empty stash)
+        # and must not read as an allocation failure in engine telemetry.
+        required = jnp.sum(resp.status[:B] == 0).astype(jnp.int32)
+        if cfg.state_slots:
+            required = required + jnp.sum(
+                resp.status[B:2 * B] == 0).astype(jnp.int32)
+        stats = stats._replace(failed=required)
 
-    pages = resp.blocks[:B]                                  # [B, max_pages]
+    pages = resp.blocks[:B, :max_pages]                      # [B, max_pages]
     # A lane is admitted only if EVERY packet it needs succeeded; under pool
     # scarcity one class can still succeed while the other fails — those
     # orphaned grants stay owned by the (inactive) lane until FREE_ALL
     # releases it (ServingEngine.admit_many reclaims failed lanes itself).
+    # The stash pre-charge packet is NOT required: admission stands even
+    # when the pre-charge failed (the lane just starts with an empty stash).
     got = resp.status[:B] == 1                               # [B]
     if cfg.state_slots:
-        got = got & (resp.status[B:] == 1)
+        got = got & (resp.status[B:2 * B] == 1)
     # Block table rows for the admitted lanes.
     p_lim = min(max_pages, cfg.max_pages_per_lane)
     rows = jnp.full((B, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32)
@@ -171,8 +291,18 @@ def admit_prefill_many(
     v_pages = state.v_pages.at[dst.reshape(-1)].set(
         vp.reshape(flat).astype(cfg.dtype), mode="drop")
 
-    slots = jnp.where(got, resp.blocks[B:, 0], NO_BLOCK) if cfg.state_slots \
+    slots = jnp.where(got, resp.blocks[B:2 * B, 0], NO_BLOCK) if cfg.state_slots \
         else jnp.full((B,), NO_BLOCK, jnp.int32)
+    stash = state.stash
+    if cfg.stash_size:
+        # Install the pre-charge grants.  Recorded whenever the pre-charge
+        # packet itself succeeded (even for a lane whose admission failed:
+        # the pages are owner-mapped to the lane either way, and the
+        # engine's failure path releases the lane with FREE_ALL — clearing
+        # the stash row keeps the I5 partition exact).
+        pc_got = resp.status[2 * B:] == 1
+        stash = stash_set_rows(stash, lanes, resp.blocks[2 * B:, :pre],
+                               pre, pc_got)
     new = state._replace(
         alloc=alloc,
         block_tables=block_tables,
@@ -182,6 +312,7 @@ def admit_prefill_many(
         k_pages=k_pages,
         v_pages=v_pages,
         state_slot=state.state_slot.at[lanes].set(slots),
+        stash=stash,
     )
     return new, stats
 
@@ -210,19 +341,41 @@ def decode_append(
     new_k: jnp.ndarray,           # [max_lanes, L, kv_heads, head_dim]
     new_v: jnp.ndarray,
     window: Optional[int] = None,  # SWA window (tokens); enables page recycling
-) -> tuple[PagedKVState, StepStats]:
+) -> tuple[PagedKVState, DecodeStats]:
+    """Append one token per active lane through the two-tier allocator.
+
+    Tier 1 (stash, when ``cfg.stash_size > 0``): page-boundary lanes pop
+    their new page from the per-lane stash with pure vector ops, and
+    SWA-recycled dead pages push back to the stash first.  Tier 2 (central
+    support-core): ONE bulk HMQ burst carries (a) emergency 1-page mallocs
+    for lanes whose stash pop missed, (b) ``stash_refill``-page refills for
+    every below-watermark lane, and (c) ``OP_FREE`` flushes for recycled
+    pages that found the stash full — and the whole burst is skipped via
+    ``lax.cond`` when no packet is live, so steady-state stash-served steps
+    never touch the central allocator.  With the stash disabled the queue is
+    exactly the pre-stash one (bit-identical behaviour), still gated by the
+    same all-NOP predicate.
+    """
     ps = cfg.page_size
     L = cfg.max_lanes
+    S = cfg.stash_size
     pos = state.seq_lens                                     # [lanes]
+    lane_ids = jnp.arange(L, dtype=jnp.int32)
     needs_page = state.active & (pos % ps == 0) \
         & (pos // ps < cfg.max_pages_per_lane)   # table range guard
 
-    # --- build the HMQ batch: mallocs for page-boundary lanes, frees for
-    # pages that slid out of the window (if SWA).  One queue, one step.
-    lane_ids = jnp.arange(L, dtype=jnp.int32)
-    m_ops = jnp.where(needs_page, OP_MALLOC, OP_NOP).astype(jnp.int32)
-    m_args = jnp.ones((L,), jnp.int32)
+    # --- tier 1: pop the boundary page from the stash (no allocator step)
+    stash = state.stash
+    if S:
+        stash, popped, got_stash = stash_pop(stash, needs_page)
+        missed = needs_page & ~got_stash
+    else:
+        popped = jnp.full((L,), NO_BLOCK, jnp.int32)
+        got_stash = jnp.zeros((L,), bool)
+        missed = needs_page
 
+    # --- SWA page recycling: dead pages push to the stash first; only
+    # overflow (stash full / stash off) goes back through the central tier.
     if window is not None:
         # After appending at `pos`, tokens < pos+1-window are dead.  A page p
         # (covering [p*ps, (p+1)*ps)) is dead when (p+1)*ps <= pos+1-window.
@@ -233,29 +386,64 @@ def decode_append(
         safe_idx = jnp.clip(dead_page_idx, 0, cfg.max_pages_per_lane - 1)
         dead_block = state.block_tables[lane_ids, safe_idx]
         already = dead_block == NO_BLOCK                     # freed in a previous step
-        f_ops = jnp.where(has_dead & ~already, OP_FREE, OP_NOP).astype(jnp.int32)
-        f_args = jnp.where(has_dead & ~already, dead_block, 0)
-        ops = jnp.concatenate([m_ops, f_ops])
-        lanes = jnp.concatenate([lane_ids, lane_ids])
-        args = jnp.concatenate([m_args, f_args])
+        recycle = has_dead & ~already
+        if S:
+            stash, pushed = stash_push(stash, dead_block, recycle)
+            overflow = recycle & ~pushed                     # stash full: flush
+        else:
+            overflow = recycle
+        f_ops = jnp.where(overflow, OP_FREE, OP_NOP).astype(jnp.int32)
+        f_args = jnp.where(overflow, dead_block, 0)
+        free_slots = (f_ops, lane_ids, f_args)
+        # the dead page leaves the table whether it was stashed or flushed
         block_tables = state.block_tables.at[
-            jnp.where(f_ops == OP_FREE, lane_ids, L), safe_idx
+            jnp.where(recycle, lane_ids, L), safe_idx
         ].set(NO_BLOCK, mode="drop")
     else:
-        ops, lanes, args = m_ops, lane_ids, m_args
+        free_slots = None
         block_tables = state.block_tables
+
+    # --- tier 2: one bulk HMQ burst (emergency + refill + flush), gated.
+    m_ops = jnp.where(missed, OP_MALLOC, OP_NOP).astype(jnp.int32)
+    m_args = jnp.ones((L,), jnp.int32)
+    slots = [(m_ops, lane_ids, m_args)]
+    if S:
+        # OP_REFILL: scheduled after every plain malloc in the batch, so a
+        # bulk refill can never starve another lane's boundary allocation.
+        below = below_watermark(stash, state.active, cfg.stash_watermark)
+        r_ops = jnp.where(below, OP_REFILL, OP_NOP).astype(jnp.int32)
+        r_args = jnp.full((L,), cfg.stash_refill, jnp.int32)
+        slots.append((r_ops, lane_ids, r_args))
+    if free_slots is not None:
+        slots.append(free_slots)
+    ops = jnp.concatenate([s[0] for s in slots])
+    lanes = jnp.concatenate([s[1] for s in slots])
+    args = jnp.concatenate([s[2] for s in slots])
 
     classes = jnp.zeros_like(ops)
     queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
-    alloc, resp, stats = support_core_step(state.alloc, queue, max_blocks_per_req=1)
+    alloc, resp, stats, live = _gated_support_core_step(
+        state.alloc, queue, max_blocks_per_req=max(1, cfg.stash_refill if S else 1))
 
-    # --- install newly allocated pages into block tables
+    # --- install newly obtained pages into block tables (stash pop wins;
+    # emergency grants cover the misses)
     new_blocks = resp.blocks[:L, 0]                          # [lanes]
-    got = (resp.status[:L] == 1) & needs_page
+    e_got = (resp.status[:L] == 1) & missed
+    got = got_stash | e_got
+    page_for_lane = jnp.where(got_stash, popped, new_blocks)
     tbl_idx = jnp.clip(pos // ps, 0, cfg.max_pages_per_lane - 1)
     block_tables = block_tables.at[
         jnp.where(got, lane_ids, L), tbl_idx
-    ].set(jnp.where(got, new_blocks, NO_BLOCK), mode="drop")
+    ].set(jnp.where(got, page_for_lane, NO_BLOCK), mode="drop")
+
+    # --- install bulk-refill grants into the stash
+    if S:
+        r_got = (resp.status[L:2 * L] == 1) & below
+        stash = stash_push_batch(stash, resp.blocks[L:2 * L, :cfg.stash_refill],
+                                 cfg.stash_refill, r_got)
+        refill_failed = jnp.sum(below & ~r_got).astype(jnp.int32)
+    else:
+        refill_failed = jnp.zeros((), jnp.int32)
 
     # --- write the new token's K/V into each lane's current page
     writable = state.active & (got | ~needs_page)
@@ -274,8 +462,17 @@ def decode_append(
         seq_lens=jnp.where(writable, pos + 1, pos),
         k_pages=k_pages,
         v_pages=v_pages,
+        stash=stash,
     )
-    return new, stats
+    dstats = DecodeStats(
+        core=stats,
+        failed=jnp.sum(missed & ~e_got).astype(jnp.int32),
+        refill_failed=refill_failed,
+        stash_hits=jnp.sum(got_stash).astype(jnp.int32),
+        stash_misses=jnp.sum(missed).astype(jnp.int32),
+        bursts=live.astype(jnp.int32),
+    )
+    return new, dstats
 
 
 # --------------------------------------------------------------------------
@@ -323,6 +520,9 @@ def release_packets(
         seq_lens=jnp.where(keep, state.seq_lens, 0),
         active=state.active & keep,
         state_slot=jnp.where(keep, state.state_slot, NO_BLOCK),
+        # stashed pages are owner-mapped to the lane, so the FREE_ALL above
+        # already returned them to the central stack; just clear the rows
+        stash=stash_clear(state.stash, release_mask),
     )
     return new, stats
 
@@ -404,3 +604,26 @@ def gather_kv_window(
 def live_pages(state: PagedKVState) -> jnp.ndarray:
     """Currently allocated KV pages (telemetry / blowup tracking)."""
     return state.alloc.used[KV_CLASS]
+
+
+def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
+    """Host-side [num_pages] bool: pages referenced by any block table."""
+    import numpy as np
+    tbl = np.asarray(state.block_tables)
+    in_use = np.zeros((cfg.num_pages,), bool)
+    in_use[tbl[tbl != NO_BLOCK]] = True
+    return in_use
+
+
+def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState) -> None:
+    """Host-side invariant check for the full paged-KV allocator state:
+    I1–I4 on the segregated metadata plus I5 — every KV page is exactly one
+    of {central free stack, lane stash, block-table referenced}."""
+    from .freelist import validate_freelist
+    validate_freelist(
+        state.alloc,
+        stash_pages=state.stash.pages,
+        stash_depth=state.stash.depth,
+        in_use=kv_pages_in_use(cfg, state),
+        stash_class=KV_CLASS,
+    )

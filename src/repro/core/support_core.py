@@ -41,8 +41,8 @@ import jax.numpy as jnp
 
 from .freelist import FreeListState
 from .hmq import schedule
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, RequestQueue,
-                      ResponseQueue)
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
+                      RequestQueue, ResponseQueue)
 
 
 class StepStats(NamedTuple):
@@ -75,7 +75,9 @@ def support_core_step(
     Q, R = queue.capacity, max_blocks_per_req
 
     sched, unperm = schedule(queue)
-    is_malloc = sched.op == OP_MALLOC
+    # OP_REFILL is a malloc with refill priority: identical grant semantics,
+    # but `schedule` already placed every refill after every plain malloc.
+    is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
     is_free = sched.op == OP_FREE
     want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)          # [Q]
     want = jnp.where(want <= R, want, 0)                                # overwide -> fail
@@ -134,20 +136,34 @@ def support_core_step(
 
     # ---- free phase (deferred append; cannot serve this step's mallocs) ----
     # Two free modes: single block id, or FREE_ALL (all blocks owned by lane).
-    # Build a [C, N] boolean of blocks to free.
-    blk_ids = jnp.arange(N, dtype=jnp.int32)[None, None, :]             # [1,1,N]
-    req_cls = cls[:, None, None]                                        # [Q,1,1]
-    class_grid = jnp.arange(C, dtype=jnp.int32)[None, :, None]          # [1,C,1]
-    single = is_free[:, None, None] & (sched.arg[:, None, None] >= 0) \
-        & (class_grid == req_cls) & (blk_ids == sched.arg[:, None, None])
-    whole_lane = is_free[:, None, None] & (sched.arg[:, None, None] == FREE_ALL) \
-        & (class_grid == req_cls) \
-        & (owner[None, :, :] == sched.lane[:, None, None])
-    free_mask = jnp.any(single | whole_lane, axis=0)                    # [C, N]
+    # Scatter-based construction of the [C, N] free mask in O(Q + C·N):
+    #   * single-block frees scatter (class, arg) hits directly — one [Q]
+    #     scatter instead of a [Q, C, N] comparison grid;
+    #   * FREE_ALL resolves through an owner-map sweep: the FREE_ALL
+    #     (class, lane) requests become a per-class sorted lane list, and
+    #     every owned block membership-tests its owner against its class's
+    #     list (binary search, O(C·N·log Q)).
+    # Semantically identical to the dense-mask reference kept in
+    # tests/test_support_core.py (differential-tested bit-exact).
+    blk_ids = jnp.arange(N, dtype=jnp.int32)                            # [N]
+    is_single = is_free & (sched.arg >= 0)
+    sgl_c = jnp.where(is_single, cls, C)                                # OOB -> drop
+    sgl_b = jnp.where(is_single & (sched.arg < N), sched.arg, N)
+    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
+
+    is_fa = is_free & (sched.arg == FREE_ALL)
+    # Per-class FREE_ALL lane lists, padded with int32 max (lane id 2**31-1
+    # is reserved as this sentinel — far above the hmq fused-key bound).
+    pad = jnp.int32(2**31 - 1)
+    fa_lanes = jnp.where(is_fa[None, :] & onehot.T, sched.lane[None, :], pad)
+    fa_sorted = jnp.sort(fa_lanes, axis=1)                              # [C, Q]
+    fa_pos = jax.vmap(jnp.searchsorted)(fa_sorted, owner)               # [C, N]
+    whole_lane = (jnp.take_along_axis(
+        fa_sorted, jnp.clip(fa_pos, 0, Q - 1), axis=1) == owner) & (owner != pad)
     # Only currently-owned blocks can be freed (double-free of a free block is
     # a nop).  Uses the post-alloc owner map: frees are processed after
     # mallocs, so a block allocated this very step can be freed this step.
-    free_mask = free_mask & (owner >= 0)
+    free_mask = (single | whole_lane) & (owner >= 0)
 
     # Compact freed ids per class and append to the stack.
     freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)      # [C]
@@ -155,7 +171,7 @@ def support_core_step(
     dest = jnp.where(free_mask, dest, N)  # N = positive OOB sentinel -> dropped
     class_rows = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
     new_stack = state.free_stack.at[class_rows.reshape(-1), dest.reshape(-1)].set(
-        jnp.broadcast_to(blk_ids[0], (C, N)).reshape(-1), mode="drop")
+        jnp.broadcast_to(blk_ids[None, :], (C, N)).reshape(-1), mode="drop")
     owner = jnp.where(free_mask, -1, owner)
 
     new_top = top_after_alloc + freed_per_class

@@ -98,13 +98,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--stash-size", type=int, default=8,
+                    help="per-lane page-stash size (0 disables the front tier)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch)
     rng = np.random.RandomState(args.seed)
     kvcfg = make_paged_config(cfg, seq_len=256, lanes=args.lanes,
-                              page_size=args.page_size, dtype=jnp.float32)
+                              page_size=args.page_size, dtype=jnp.float32,
+                              stash_size=args.stash_size)
     params = init_params(cfg, dtype=jnp.float32)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
     eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg)
@@ -123,7 +126,9 @@ def main() -> None:
           f"live={int(live_pages(eng.state.paged))} | "
           f"admit_bursts={s.hmq_admit_bursts} "
           f"({s.hmq_admit_bursts / max(s.admitted, 1):.2f}/seq) "
-          f"prefill_compiles={s.prefill_compiles}")
+          f"prefill_compiles={s.prefill_compiles} | "
+          f"stash_hit_rate={s.stash_hit_rate:.2f} "
+          f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f}")
 
 
 if __name__ == "__main__":

@@ -133,6 +133,9 @@ def make_paged_config(
     page_size: int = DEFAULT_PAGE_SIZE,
     dtype=jnp.bfloat16,
     slack_pages: int = 8,
+    stash_size: int = 0,
+    stash_watermark: int = 2,
+    stash_refill: int = 4,
 ) -> PagedKVConfig:
     """Size the page pool for `lanes` sequences of up to `seq_len` tokens.
 
@@ -150,8 +153,9 @@ def make_paged_config(
         live_pages = pages_per_lane_addr
     n_kv_layers = max(cfg.num_attn_layers, 1)
     # Round the pool up to a multiple of 512 so the page dim shards evenly
-    # over any (pod x data) combination of the production meshes.
-    num_pages = lanes * live_pages + slack_pages
+    # over any (pod x data) combination of the production meshes.  A lane's
+    # stash can hold up to stash_size pre-granted pages beyond its live set.
+    num_pages = lanes * (live_pages + stash_size) + slack_pages
     num_pages = -(-num_pages // 512) * 512
     return PagedKVConfig(
         num_kv_layers=n_kv_layers,
@@ -164,4 +168,7 @@ def make_paged_config(
         dtype=dtype,
         state_slots=lanes if cfg.family in ("ssm", "hybrid") else 0,
         state_dim=1,
+        stash_size=stash_size,
+        stash_watermark=stash_watermark,
+        stash_refill=stash_refill,
     )

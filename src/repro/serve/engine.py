@@ -37,6 +37,24 @@ class EngineStats:
     alloc_failures: int = 0        # failed malloc packets (all families)
     hmq_admit_bursts: int = 0      # support-core steps issued for admission
     prefill_compiles: int = 0      # distinct prefill buckets compiled
+    # --- stash front-end telemetry (DESIGN.md §7) ---
+    decode_bursts: int = 0         # decode steps that issued a support-core batch
+    stash_hits: int = 0            # boundary pages served by the lane stash
+    stash_misses: int = 0          # boundary pages that needed a central malloc
+
+    @property
+    def stash_hit_rate(self) -> float:
+        """Fraction of page-boundary allocations the stash front-end served."""
+        total = self.stash_hits + self.stash_misses
+        return self.stash_hits / total if total else 0.0
+
+    @property
+    def hmq_bursts_per_1k_decode_steps(self) -> float:
+        """Central-allocator bursts per 1000 decode steps (pre-stash
+        baseline: 1000 — one support-core batch every step)."""
+        if not self.decode_steps:
+            return 0.0
+        return 1000.0 * self.decode_bursts / self.decode_steps
 
 
 class AdmissionItem(NamedTuple):
@@ -248,6 +266,9 @@ class ServingEngine:
         self.state, logits, stats = self._decode(self.params, self.state)
         self.stats.decode_steps += 1
         self.stats.alloc_failures += int(stats.failed)
+        self.stats.decode_bursts += int(stats.bursts)
+        self.stats.stash_hits += int(stats.stash_hits)
+        self.stats.stash_misses += int(stats.stash_misses)
         return np.asarray(self.state.tokens)
 
     # ---------------- completion ----------------

@@ -13,7 +13,11 @@ protocol (DESIGN.md §2):
   prompt length), and the engine admits the whole batch with ONE
   ``admit_prefill_many`` HMQ burst — the paper's batched "server-client"
   (Larson) admission instead of one synchronized burst per sequence.
-* **Decode** — one HMQ batch per step (unchanged; ``decode_append``).
+* **Decode** — ``decode_append``'s two-tier fast path: page boundaries pop
+  the per-lane stash, and at most ONE bulk HMQ burst per step carries
+  refills/flushes (skipped entirely when no packet is live — DESIGN.md §7).
+  The page budget charges each admission's stash pre-charge
+  (``stash_precharge``) so admission never overcommits against the stash.
 * **Completion** — finished lanes are released through compact
   ``OP_FREE``/``FREE_ALL`` lane packets (``paged_kv.release_packets``), not a
   host-built dense mask.
@@ -80,6 +84,11 @@ class SchedulerConfig:
     page_reserve: int = 0           # pages withheld from admission for decode growth
     exact_buckets: bool = False     # recurrent families: bucket == exact length
     max_kv_len: int = 0             # per-lane KV capacity in tokens (0 = unchecked)
+    # Pages the engine's admission burst pre-charges into the lane's page
+    # stash (kvcfg.stash_refill when the stash front-end is enabled).  The
+    # page budget must account for them or admission would overcommit the
+    # pool against its own stash grants.
+    stash_precharge: int = 0
 
 
 def default_buckets(max_len: int, start: int = 16) -> tuple[int, ...]:
@@ -126,6 +135,7 @@ def make_scheduler_config(
         page_reserve=page_reserve if page_reserve is not None
         else kvcfg.max_lanes,
         exact_buckets=exact,
+        stash_precharge=kvcfg.stash_refill if kvcfg.stash_size else 0,
     )
 
 
@@ -244,7 +254,8 @@ class Scheduler:
             members = by_bucket.setdefault(bucket, [])
             if len(members) >= self.scfg.admit_width:
                 break
-            need = pages_needed(self._kv_len(req), self.scfg)
+            need = pages_needed(self._kv_len(req), self.scfg) \
+                + self.scfg.stash_precharge
             if charged + need > budget:
                 break
             members.append((lanes[taken], req))

@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.paged_kv import (PagedKVConfig, PagedKVState, decode_append,
-                             init_paged_kv)
+from ..core.paged_kv import (DecodeStats, PagedKVConfig, PagedKVState,
+                             decode_append, init_paged_kv)
 from ..distributed.hints import use_hints
 from ..core.support_core import StepStats
 from ..models.decode import (RecurrentState, decode_hidden, decode_logits,
@@ -107,7 +107,7 @@ def abstract_serve_state(cfg: ArchConfig, kvcfg: PagedKVConfig, lanes: int,
 
 def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
                      hints=None, unroll: bool = False):
-    """Returns serve_step(params, state) -> (state, logits, StepStats)."""
+    """Returns serve_step(params, state) -> (state, logits, DecodeStats)."""
     window = recycle_window(cfg)
 
     def _serve_step(params: dict, state: ServeState):
@@ -128,7 +128,9 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
             paged = state.paged._replace(
                 seq_lens=state.paged.seq_lens + state.paged.active.astype(jnp.int32))
             z = jnp.zeros((), jnp.int32)
-            stats = StepStats(z, z, z, z, z)
+            stats = DecodeStats(core=StepStats(z, z, z, z, z),
+                                failed=z, refill_failed=z,
+                                stash_hits=z, stash_misses=z, bursts=z)
 
         new_state = ServeState(
             paged=paged, rec=new_rec, tokens=next_tokens,

@@ -61,44 +61,76 @@ def _run_trace(policy: PolicySpec, trace: dict, threads: int) -> SimCounts:
         peak_bytes: jnp.ndarray
         counts: jnp.ndarray        # [7] mallocs,frees,fast,accel,shared,foreign,mmap
 
+    # Static (python-level) tier layout: the central-with-stash variant
+    # (`speedmalloc_stash`) runs a tiny local tier in front of the central
+    # server; every other policy keeps its original path bit-for-bit.
+    central = policy.kind == "central"
+    stash_on = central and policy.stash_cap > 0
+
     def step(st: St, e):
         t, op, c, foreign = e
         is_m = op == 1
         sz = sizes[c]
-        central = policy.kind == "central"
         has_accel = policy.accel_cap > 0
 
         local = st.local_free[t, c]
         accel = st.accel_free[t, c]
         shared = st.shared_free[c]
 
-        # ---- malloc path ----
-        accel_hit = is_m & has_accel & (accel > 0) & (~central)
-        local_hit = is_m & (~accel_hit) & (local > 0) & (~central)
-        miss = is_m & (~accel_hit) & (~local_hit) & (~central)
-        # refill pulls `refill_batch` from shared (counts one shared trip)
-        need_mmap = miss & (shared < policy.refill_batch)
-        new_shared = jnp.where(need_mmap, shared + 4 * policy.refill_batch, shared)
-        new_shared = jnp.where(miss, new_shared - policy.refill_batch, new_shared)
-        new_local = jnp.where(local_hit, local - 1,
-                              jnp.where(miss, local + policy.refill_batch - 1, local))
-        new_accel = jnp.where(accel_hit, accel - 1,
-                              jnp.where(miss & has_accel,
-                                        jnp.minimum(policy.accel_cap, 4), accel))
+        if stash_on:
+            # ---- stash front-end over the central server ----
+            # malloc: pop the stash; a miss pulls refill_batch through one
+            # HMQ trip (counted in shared_trips — the "burst" the serving
+            # engine measures).  The central pool is the support-core's
+            # free list: unbounded from the client's view (no mmap here).
+            local_hit = is_m & (local > 0)
+            miss = is_m & ~local_hit
+            need_mmap = jnp.zeros((), bool)
+            new_local = jnp.where(local_hit, local - 1,
+                                  jnp.where(miss, local + policy.refill_batch - 1,
+                                            local))
+            new_accel = accel
+            new_shared = shared
+            accel_hit = jnp.zeros((), bool)
+            # free: the stash can only absorb the thread's OWN pages (the
+            # serving lane stash never receives another lane's recycles) —
+            # foreign frees go straight to the central tier (async signal).
+            # Own frees push back when there is room; overflow flushes one
+            # object through the burst path.
+            is_f = op == 2
+            foreign_f = is_f & (foreign == 1)
+            own_f = is_f & ~foreign_f
+            stash_push_ok = own_f & (new_local < policy.stash_cap)
+            over = own_f & ~stash_push_ok
+            new_local = jnp.where(stash_push_ok, new_local + 1, new_local)
+        else:
+            # ---- malloc path ----
+            accel_hit = is_m & has_accel & (accel > 0) & (not central)
+            local_hit = is_m & (~accel_hit) & (local > 0) & (not central)
+            miss = is_m & (~accel_hit) & (~local_hit) & (not central)
+            # refill pulls `refill_batch` from shared (counts one shared trip)
+            need_mmap = miss & (shared < policy.refill_batch)
+            new_shared = jnp.where(need_mmap, shared + 4 * policy.refill_batch, shared)
+            new_shared = jnp.where(miss, new_shared - policy.refill_batch, new_shared)
+            new_local = jnp.where(local_hit, local - 1,
+                                  jnp.where(miss, local + policy.refill_batch - 1, local))
+            new_accel = jnp.where(accel_hit, accel - 1,
+                                  jnp.where(miss & has_accel,
+                                            jnp.minimum(policy.accel_cap, 4), accel))
 
-        # ---- free path ----
-        is_f = op == 2
-        foreign_f = is_f & (foreign == 1) & (~central)
-        local_f = is_f & (~foreign_f) & (~central)
-        # local frees refill accel first (it buffers recent frees), then local
-        accel_push = local_f & has_accel & (accel < policy.accel_cap)
-        new_accel = jnp.where(accel_push, new_accel + 1, new_accel)
-        new_local = jnp.where(local_f & ~accel_push, new_local + 1, new_local)
-        over = local_f & (new_local > policy.local_cap)
-        flushed = jnp.maximum(new_local - policy.flush_keep, 0)
-        new_shared = jnp.where(over, new_shared + flushed, new_shared)
-        new_shared = jnp.where(foreign_f, new_shared + 1, new_shared)
-        new_local = jnp.where(over, policy.flush_keep, new_local)
+            # ---- free path ----
+            is_f = op == 2
+            foreign_f = is_f & (foreign == 1) & (not central)
+            local_f = is_f & (~foreign_f) & (not central)
+            # local frees refill accel first (it buffers recent frees), then local
+            accel_push = local_f & has_accel & (accel < policy.accel_cap)
+            new_accel = jnp.where(accel_push, new_accel + 1, new_accel)
+            new_local = jnp.where(local_f & ~accel_push, new_local + 1, new_local)
+            over = local_f & (new_local > policy.local_cap)
+            flushed = jnp.maximum(new_local - policy.flush_keep, 0)
+            new_shared = jnp.where(over, new_shared + flushed, new_shared)
+            new_shared = jnp.where(foreign_f, new_shared + 1, new_shared)
+            new_local = jnp.where(over, policy.flush_keep, new_local)
 
         local_free = st.local_free.at[t, c].set(new_local)
         accel_free = st.accel_free.at[t, c].set(new_accel)
@@ -139,6 +171,16 @@ def _run_trace(policy: PolicySpec, trace: dict, threads: int) -> SimCounts:
                      final_cached_bytes=final.cached_bytes.astype(jnp.float32))
 
 
+def run_trace_counts(policy: PolicySpec, trace: dict, threads: int) -> SimCounts:
+    """Structural event counts for a *scripted* trace (public entry point).
+
+    Used by the sim↔serve cross-validation: a hand-built trace of the
+    serving engine's decode allocation pattern runs through the policy
+    model, and ``shared_trips`` predicts the engine's measured HMQ burst
+    count (`tests/test_sim.py`)."""
+    return _run_trace(policy, trace, threads)
+
+
 import functools
 
 
@@ -170,7 +212,30 @@ def simulate(spec: WorkloadSpec, policy: PolicySpec, threads: int | None = None,
     central = policy.kind == "central"
 
     # ---- allocator path cycles (per 1k instructions, per thread) ----
-    if central:
+    if central and policy.stash_cap > 0:
+        # stash front-end over the central server (speedmalloc_stash): only
+        # refill trips reach the HMQ; stash hits run at cache speed.  A trip
+        # pulls refill_batch blocks — the first pays the full service, the
+        # rest a per-block pop (batched LIFO pops are cheap).
+        per_trip = policy.service_malloc + 2.0 * max(policy.refill_batch - 1, 0)
+        trips_per_1k = float(cnt.shared_trips) * float(scale)
+        hits_per_1k = float(cnt.fast_hits) * float(scale)
+        frees_per_1k = float(cnt.frees) * float(scale)
+        foreign_per_1k = float(cnt.foreign_pushes) * float(scale)
+        demand = T * (trips_per_1k * per_trip
+                      + foreign_per_1k * policy.service_free)
+        client = (hits_per_1k * costs.malloc_fast
+                  + trips_per_1k * (2 * policy.signal_cost + per_trip)
+                  + frees_per_1k * costs.free_fast
+                  + foreign_per_1k * policy.signal_cost)  # async central free
+        atomics = cnt.shared_trips * policy.atomics_per_request
+        wall0 = 1000.0 / IPC_BASE + client
+        rho = spec.burst * demand / wall0
+        wait_m = queue_wait(per_trip, rho)
+        alloc_cycles = jnp.float32(client + trips_per_1k * float(wait_m))
+        queue_cycles = trips_per_1k * float(wait_m)
+        serial_floor = float(demand)
+    elif central:
         m_frac = float(cnt.mallocs / jnp.maximum(events, 1.0))
         f_frac = 1.0 - m_frac
         # Support-core demand per 1k instructions (server-side work for ALL

@@ -50,6 +50,10 @@ class PolicySpec(NamedTuple):
     signal_cost: float = 0.0
     atomics_per_request: float = 0.0  # IC-Malloc software queue
     free_async: bool = False
+    # central + per-thread stash front-end (the serving stack's lane stash:
+    # a tiny local tier in front of the support-core; refill_batch objects
+    # are pulled per refill trip).  0 = no front tier (plain SpeedMalloc).
+    stash_cap: int = 0
     # energy accounting
     extra_core: str = "none"        # none | big | little
     per_core_power_adder: float = 0.0
@@ -138,6 +142,20 @@ SPEEDMALLOC = PolicySpec(
     extra_core="little",
 )
 
+def speedmalloc_stash(stash_cap: int = 8, refill_batch: int = 4,
+                      name: str | None = None) -> PolicySpec:
+    """SpeedMalloc + a per-thread stash front-end (the serving stack's
+    per-lane page stash, DESIGN.md §7): local pops at cache speed, bulk
+    ``refill_batch`` pulls through the HMQ on a miss.  Parameterized so the
+    fig14–17 sweeps can model stash-size sensitivity."""
+    return SPEEDMALLOC._replace(
+        name=name or f"speedmalloc-stash{stash_cap}",
+        stash_cap=stash_cap, refill_batch=refill_batch)
+
+
+#: default stash variant (matches the serving default: S=8, refill 4)
+SPEEDMALLOC_STASH = speedmalloc_stash(8, 4, name="speedmalloc-stash")
+
 #: IC-Malloc ablation variants for Fig. 17 (decoupled -> +signals -> +HMQ)
 IC_PLUS_SIGNALS = IC_MALLOC._replace(
     name="ic+signals", signal_cost=8.0, atomics_per_request=0.0,
@@ -147,4 +165,4 @@ SPEEDMALLOC_FULL = SPEEDMALLOC._replace(name="ic+signals+hmq")
 BASELINES = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO]
 ALL_POLICIES = {p.name: p for p in
                 [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO,
-                 IC_MALLOC, SPEEDMALLOC]}
+                 IC_MALLOC, SPEEDMALLOC, SPEEDMALLOC_STASH]}

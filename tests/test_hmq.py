@@ -105,8 +105,23 @@ def test_schedule_int32_bound_at_boundary(offset):
 
 
 def test_max_safe_lanes_is_tight():
-    """The bound itself: key magnitude at the bound stays inside int32."""
+    """The bound itself: key magnitude at the bound stays inside int32
+    (prio <= 3 since the OP_REFILL tier)."""
     q = 8
     lanes = max_safe_lanes(q)
-    assert 3 * (q + 1) * (lanes + 1) <= 2**31 - 1
-    assert 3 * (q + 1) * (lanes + 2) > 2**31 - 1
+    assert 4 * (q + 1) * (lanes + 1) <= 2**31 - 1
+    assert 4 * (q + 1) * (lanes + 2) > 2**31 - 1
+
+
+def test_refill_priority_between_malloc_and_free():
+    """OP_REFILL schedules after every plain malloc and before every free,
+    with its own round-robin class."""
+    from repro.core.packets import OP_REFILL
+    q = make_queue(
+        ops=[OP_REFILL, OP_FREE, OP_MALLOC, OP_REFILL, OP_MALLOC],
+        lanes=[0, 1, 2, 3, 0], size_classes=[0] * 5, args=[1] * 5)
+    sched, _ = schedule(q)
+    assert sched.op.tolist() == [OP_MALLOC, OP_MALLOC, OP_REFILL,
+                                 OP_REFILL, OP_FREE]
+    # refills in lane order within their tier
+    assert sched.lane.tolist()[2:4] == [0, 3]

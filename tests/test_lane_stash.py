@@ -1,0 +1,284 @@
+"""Per-lane page-stash front-end: refill bursts, overflow flush, SWA
+recycle-to-stash, release with stashed pages, stash-off equivalence, and the
+I5 partition invariant (every page is exactly one of central stack / lane
+stash / in use)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.paged_kv as pkv
+from repro.core.freelist import validate_freelist
+from repro.core.lane_stash import (init_stash, stash_pop, stash_push,
+                                   validate_stash_params)
+from repro.core.packets import NO_BLOCK, OP_NOP, empty_queue
+from repro.core.paged_kv import (PagedKVConfig, admit_prefill, decode_append,
+                                 init_paged_kv, live_pages, release_lanes,
+                                 support_core_step, validate_paged_kv)
+
+
+def make_cfg(**kw):
+    base = dict(num_kv_layers=1, kv_heads=1, head_dim=4, page_size=4,
+                num_pages=64, max_lanes=2, max_pages_per_lane=8,
+                dtype=jnp.float32,
+                stash_size=8, stash_watermark=2, stash_refill=4)
+    base.update(kw)
+    return PagedKVConfig(**base)
+
+
+def admit(cfg, st, lane, tokens, rng):
+    k = rng.randn(cfg.num_kv_layers, tokens, cfg.kv_heads,
+                  cfg.head_dim).astype(np.float32)
+    return admit_prefill(cfg, st, jnp.int32(lane), jnp.asarray(k),
+                         jnp.asarray(k), jnp.int32(tokens))
+
+
+def run_decode(cfg, st, steps, rng, window=None):
+    """Drive decode_append; returns (state, total_bursts, hits, misses)."""
+    bursts = hits = misses = 0
+    for _ in range(steps):
+        nk = rng.randn(cfg.max_lanes, cfg.num_kv_layers, cfg.kv_heads,
+                       cfg.head_dim).astype(np.float32)
+        st, stats = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk),
+                                  window=window)
+        bursts += int(stats.bursts)
+        hits += int(stats.stash_hits)
+        misses += int(stats.stash_misses)
+    return st, bursts, hits, misses
+
+
+def test_stash_config_validation():
+    with pytest.raises(ValueError, match="exceed"):
+        make_cfg(stash_size=4, stash_watermark=2, stash_refill=4)
+    with pytest.raises(ValueError, match="watermark"):
+        validate_stash_params(4, 0, 2)
+    validate_stash_params(0, 0, 0)        # disabled: anything goes
+
+
+def test_admission_precharges_stash(rng):
+    cfg = make_cfg()
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 8, rng)
+    # 2 KV pages in the table + stash_refill pre-charged in the stash
+    assert int(live_pages(st)) == 2 + cfg.stash_refill
+    assert int(st.stash.depth[0]) == cfg.stash_refill
+    assert int(st.stash.depth[1]) == 0
+    validate_paged_kv(cfg, st)
+
+
+def test_decode_pops_stash_and_bulk_refills(rng):
+    """Steady-state decode: page boundaries are stash hits (no burst); the
+    central allocator is only touched by amortized bulk refills."""
+    cfg = make_cfg(max_lanes=2)
+    st = init_paged_kv(cfg)
+    for lane in (0, 1):
+        st, _ = admit(cfg, st, lane, 8, rng)
+    steps = 20                                  # 5 page boundaries per lane
+    st, bursts, hits, misses = run_decode(cfg, st, steps, rng)
+    assert misses == 0                          # pre-charge + refills cover all
+    assert hits == 2 * (steps // cfg.page_size)
+    # boundary steps that hit the stash issue NO burst; only refill steps do
+    assert 0 < bursts < steps // cfg.page_size
+    validate_paged_kv(cfg, st)
+
+
+def test_bulk_refill_serves_all_lanes_in_one_burst(rng):
+    """The refill burst is bulk: when several lanes cross the watermark on
+    the same step, ONE support-core step refills every one of them."""
+    cfg = make_cfg(max_lanes=4, num_pages=128)
+    st = init_paged_kv(cfg)
+    for lane in range(4):                       # same length => same phase
+        st, _ = admit(cfg, st, lane, 8, rng)
+    st, bursts, hits, misses = run_decode(cfg, st, 40, rng)
+    assert misses == 0
+    # lanes are in phase: bursts would be 4x this if refills weren't batched
+    assert bursts <= 40 // (cfg.page_size * cfg.stash_refill) + 1
+    validate_paged_kv(cfg, st)
+
+
+def test_swa_recycle_goes_to_stash_first(rng):
+    """Dead SWA pages push back to the lane stash (front-tier recycling);
+    the central free count stays untouched while there is room."""
+    cfg = make_cfg(max_lanes=1, max_pages_per_lane=16, num_pages=64)
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 4, rng)
+    frees_before = int(st.alloc.free_count[0])
+    st, bursts, hits, misses = run_decode(cfg, st, 24, rng, window=8)
+    # recycling feeds the stash, which feeds the boundary pops: steady state
+    # needs no central traffic at all once the pre-charge is consumed
+    assert int(st.alloc.free_count[0]) == frees_before   # no central frees
+    assert misses == 0
+    # depth stays bounded: every boundary pop is matched by a recycle push
+    assert int(st.stash.depth[0]) <= cfg.stash_size
+    validate_paged_kv(cfg, st)
+
+
+def test_swa_overflow_flushes_to_central(rng):
+    """When the stash is full, recycled pages flush to the central stack
+    (OP_FREE riding the burst) instead of being dropped.
+
+    Symmetric SWA steady state never overflows (one recycle push per
+    boundary pop — that balance is the point of the tier), so the full
+    stash is constructed explicitly: a centrally granted page tops the
+    stash up to capacity, then a recycle-only step (non-boundary position
+    with a newly dead page) finds no room and must flush.
+    """
+    from repro.core.packets import OP_MALLOC, make_queue
+
+    cfg = make_cfg(max_lanes=1, stash_size=2, stash_watermark=1,
+                   stash_refill=1, max_pages_per_lane=32, num_pages=64)
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 12, rng)  # 3 pages + depth-1 stash
+    # top the stash up to capacity with a properly owner-mapped grant
+    alloc, resp, _ = support_core_step(
+        st.alloc, make_queue([OP_MALLOC], [0], [0], [1]))
+    stash, pushed = stash_push(st.stash, resp.blocks[:, 0],
+                               jnp.array([True]))
+    assert bool(pushed[0])
+    st = st._replace(alloc=alloc, stash=stash)
+    assert int(st.stash.depth[0]) == cfg.stash_size
+    validate_paged_kv(cfg, st)
+
+    # pos 15: not a page boundary, but page idx 1 (tokens 4..7) just slid
+    # fully behind the window (15+1-8 = 8) -> recycle with a full stash
+    st = st._replace(seq_lens=jnp.array([15], jnp.int32))
+    frees_before = int(st.alloc.free_count[0])
+    nk = rng.randn(1, 1, 1, 4).astype(np.float32)
+    st, stats = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk),
+                              window=8)
+    assert int(stats.bursts) == 1               # the flush rode a burst
+    assert int(stats.frees) == 1
+    assert int(st.alloc.free_count[0]) == frees_before + 1
+    assert int(st.stash.depth[0]) == cfg.stash_size   # stash untouched
+    validate_paged_kv(cfg, st)
+
+
+def test_release_reclaims_stashed_pages(rng):
+    """FREE_ALL release returns stashed pages (owner-mapped to the lane) to
+    the central stack and clears the stash row."""
+    cfg = make_cfg()
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 8, rng)
+    st, _, _, _ = run_decode(cfg, st, 6, rng)
+    assert int(st.stash.depth[0]) > 0           # stashed pages exist
+    st, _ = release_lanes(cfg, st, jnp.array([True, False]))
+    assert int(live_pages(st)) == 0
+    assert int(st.stash.depth[0]) == 0
+    assert (np.asarray(st.stash.pages[0]) == NO_BLOCK).all()
+    a = st.alloc
+    assert int(a.alloc_count[0]) == int(a.free_count[0])   # conservation
+    assert int(a.free_top[0]) == cfg.num_pages
+    validate_paged_kv(cfg, st)
+
+
+def test_stash_off_bit_identical_and_gated(rng):
+    """Stash-off stays a supported config: decode behaves exactly as the
+    ungated path, and an all-NOP step (satellite fast-path) both skips the
+    burst AND leaves the allocator state bit-identical to running the
+    support-core on an empty queue."""
+    cfg = make_cfg(stash_size=0)
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 6, rng)
+    nk = rng.randn(cfg.max_lanes, 1, 1, 4).astype(np.float32)
+
+    # mid-page step: no malloc needed anywhere -> all-NOP queue -> no burst
+    st1, stats = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk))
+    assert int(stats.bursts) == 0
+    assert int(stats.stash_hits) == 0
+    # the skipped step's alloc state == support-core on an all-NOP queue
+    ref_alloc, _, _ = support_core_step(st.alloc, empty_queue(cfg.max_lanes))
+    for f in st1.alloc._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(st1.alloc, f)),
+                                      np.asarray(getattr(ref_alloc, f)), f)
+
+    # boundary step: live packet -> burst fires, page allocated centrally
+    st1 = st1._replace(seq_lens=jnp.where(st1.active, 8, 0))
+    st2, stats2 = decode_append(cfg, st1, jnp.asarray(nk), jnp.asarray(nk))
+    assert int(stats2.bursts) == 1
+    assert int(stats2.stash_misses) == 1        # central malloc, stash off
+    assert int(stats2.mallocs) == 1
+    validate_freelist(st2.alloc)
+
+
+def test_stash_pop_push_unit():
+    stash = init_stash(3, 4)
+    want = jnp.array([True, False, True])
+    stash, pushed = stash_push(stash, jnp.array([7, 8, 9], jnp.int32), want)
+    assert pushed.tolist() == [True, False, True]
+    assert stash.depth.tolist() == [1, 0, 1]
+    stash, pages, got = stash_pop(stash, jnp.array([True, True, False]))
+    assert pages.tolist() == [7, NO_BLOCK, NO_BLOCK]
+    assert got.tolist() == [True, False, False]
+    assert stash.depth.tolist() == [0, 0, 1]
+    # popping an empty stash misses; the survivor keeps its page
+    stash, pages, got = stash_pop(stash, jnp.array([True, True, True]))
+    assert got.tolist() == [False, False, True]
+    assert pages.tolist() == [NO_BLOCK, NO_BLOCK, 9]
+
+
+def test_i5_catches_corruption(rng):
+    """The I5 validator actually detects a page in two places at once."""
+    cfg = make_cfg()
+    st, _ = admit(cfg, init_paged_kv(cfg), 0, 8, rng)
+    validate_paged_kv(cfg, st)
+    # corrupt: duplicate a stashed page onto the central stack top
+    bad_alloc = st.alloc._replace(
+        free_stack=st.alloc.free_stack.at[0, int(st.alloc.free_top[0]) - 1]
+        .set(st.stash.pages[0, 0]))
+    with pytest.raises(AssertionError):
+        validate_paged_kv(cfg, st._replace(alloc=bad_alloc))
+
+
+def test_pool_exhaustion_with_stash_fails_gracefully(rng):
+    """Emergency mallocs win over refills under scarcity: decode progress
+    continues while refills fail, and nothing corrupts."""
+    cfg = make_cfg(max_lanes=2, num_pages=7, max_pages_per_lane=8,
+                   stash_size=8, stash_watermark=2, stash_refill=4)
+    st = init_paged_kv(cfg)
+    for lane in (0, 1):
+        st, _ = admit(cfg, st, lane, 8, rng)    # 2 pages + up to 4 pre-charge
+    fails = refill_fails = 0
+    for _ in range(26):                         # enough to drain the stash
+        nk = rng.randn(2, 1, 1, 4).astype(np.float32)
+        st, stats = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk))
+        fails += int(stats.failed)
+        refill_fails += int(stats.refill_failed)
+        validate_freelist(st.alloc)
+    assert int(st.alloc.used[0]) <= cfg.num_pages
+    assert fails > 0          # on-path scarcity surfaced once the stash dried
+    assert refill_fails > 0   # benign refill failures tracked separately
+
+
+def test_emergency_malloc_beats_other_lanes_refill(rng):
+    """Refill packets carry OP_REFILL (lower HMQ priority than any plain
+    malloc): with exactly one page left, lane 1's boundary emergency wins
+    over lane 0's 4-page refill — even though lane 0 has the lower id."""
+    from repro.core.lane_stash import LaneStashState
+
+    cfg = make_cfg(max_lanes=2, num_pages=9, max_pages_per_lane=8,
+                   stash_size=8, stash_watermark=2, stash_refill=4)
+    st = init_paged_kv(cfg)
+    st, _ = admit(cfg, st, 0, 8, rng)           # 2 pages + 4 pre-charged
+    st, _ = admit(cfg, st, 1, 8, rng)           # 2 pages, pre-charge failed
+    assert int(st.alloc.free_top[0]) == 1       # exactly one page left
+    assert int(st.stash.depth[1]) == 0
+    # drain lane 0's stash below the watermark so it wants a refill, and
+    # return the drained pages to keep the allocator metadata consistent
+    drained = st.stash.pages[0, 1:4]
+    alloc = st.alloc._replace(
+        free_stack=st.alloc.free_stack.at[0, 1:4].set(drained),
+        free_top=st.alloc.free_top.at[0].add(3),
+        owner=st.alloc.owner.at[0, drained].set(-1),
+        used=st.alloc.used.at[0].add(-3),
+        free_count=st.alloc.free_count.at[0].add(3))
+    stash = LaneStashState(
+        pages=st.stash.pages.at[0, 1:].set(-1),
+        depth=st.stash.depth.at[0].set(1))
+    st = st._replace(alloc=alloc, stash=stash)
+    validate_paged_kv(cfg, st)
+    assert int(st.alloc.free_top[0]) == 4       # < refill_batch + 1
+
+    # both lanes at a page boundary: lane 0 pops its stash AND requests a
+    # 4-page refill; lane 1 stash-misses and needs an emergency page
+    st = st._replace(seq_lens=jnp.array([8, 8], jnp.int32))
+    nk = rng.randn(2, 1, 1, 4).astype(np.float32)
+    st, stats = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk))
+    assert int(stats.failed) == 0               # lane 1 got its page
+    # both lanes' refills lost to the emergency (each wanted 4, 3 remained)
+    assert int(stats.refill_failed) == 2
+    assert st.seq_lens.tolist() == [9, 9]       # both lanes progressed
+    validate_paged_kv(cfg, st)

@@ -36,7 +36,7 @@ def kvcfg_state():
 def _assert_states_equal(a, b):
     for f in a._fields:
         fa, fb = getattr(a, f), getattr(b, f)
-        if f == "alloc":
+        if hasattr(fa, "_fields"):        # nested state (alloc, stash)
             for g in fa._fields:
                 assert jnp.array_equal(getattr(fa, g), getattr(fb, g)), (f, g)
         else:

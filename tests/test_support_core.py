@@ -7,10 +7,11 @@ import pytest
 
 from _hypothesis_compat import given, needs_hypothesis, settings, st
 
-from repro.core.freelist import init_freelist, validate_freelist
+from repro.core.freelist import FreeListState, init_freelist, validate_freelist
+from repro.core.hmq import schedule
 from repro.core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
-                                OP_NOP, make_queue)
-from repro.core.support_core import support_core_step
+                                OP_NOP, OP_REFILL, ResponseQueue, make_queue)
+from repro.core.support_core import StepStats, support_core_step
 
 
 def test_basic_alloc_and_stats():
@@ -65,6 +66,223 @@ def test_double_free_is_noop():
     st3, _, stats = support_core_step(st2, q2)
     assert int(stats.blocks_freed) == 1
     validate_freelist(st3)
+
+
+# --------------------------------------------------------------------------
+# Dense-mask reference: the pre-scatter free phase, kept verbatim as the
+# differential-test oracle for the O(Q·R + C·N) scatter free path.  It
+# materializes the [Q, C, N] comparison grid the production step no longer
+# builds; both must produce bit-identical FreeListState transitions.
+# --------------------------------------------------------------------------
+
+def dense_reference_step(state, queue, max_blocks_per_req=1):
+    C, N = state.num_classes, state.max_capacity
+    Q, R = queue.capacity, max_blocks_per_req
+
+    sched, unperm = schedule(queue)
+    # OP_REFILL grants like a malloc (the shared `schedule` already ordered
+    # refills after plain mallocs), so the reference covers it too.
+    is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+    is_free = sched.op == OP_FREE
+    want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)
+    want = jnp.where(want <= R, want, 0)
+    cls = jnp.clip(sched.size_class, 0, C - 1)
+    onehot = (jnp.arange(C, dtype=jnp.int32)[None, :] == cls[:, None])
+
+    def grant_body(consumed, xs):
+        want_i, onehot_i, is_m_i = xs
+        my = jnp.sum(onehot_i * consumed)
+        av = jnp.sum(onehot_i * state.free_top)
+        ok_i = is_m_i & (want_i > 0) & (my + want_i <= av)
+        consumed = consumed + jnp.where(ok_i, want_i, 0) * onehot_i
+        return consumed, (ok_i, my)
+
+    _, (ok, my_goff) = jax.lax.scan(
+        grant_body, jnp.zeros((C,), jnp.int32),
+        (want, onehot.astype(jnp.int32), is_malloc))
+    fail = is_malloc & ~ok
+    granted = jnp.where(ok, want, 0)
+    granted_c = granted[:, None] * onehot
+
+    j = jnp.arange(R, dtype=jnp.int32)[None, :]
+    top_i = jnp.sum(jnp.where(onehot, state.free_top[None, :], 0), 1)
+    pos = top_i[:, None] - 1 - my_goff[:, None] - j
+    take = ok[:, None] & (j < granted[:, None])
+    safe_pos = jnp.where(take, pos, 0)
+    blocks = state.free_stack[cls[:, None], safe_pos]
+    blocks = jnp.where(take, blocks, NO_BLOCK)
+
+    flat_cls = jnp.broadcast_to(cls[:, None], (Q, R)).reshape(-1)
+    flat_blk = blocks.reshape(-1)
+    flat_lane = jnp.broadcast_to(sched.lane[:, None], (Q, R)).reshape(-1)
+    flat_take = take.reshape(-1)
+    upd_idx_c = jnp.where(flat_take, flat_cls, C)
+    upd_idx_b = jnp.where(flat_take, flat_blk, N)
+    owner = state.owner.at[upd_idx_c, upd_idx_b].set(flat_lane, mode="drop")
+
+    taken_per_class = jnp.sum(granted_c, axis=0)
+    top_after_alloc = state.free_top - taken_per_class
+    used_after_alloc = state.used + taken_per_class
+    peak = jnp.maximum(state.peak_used, used_after_alloc)
+
+    # dense [Q, C, N] free mask (the part the scatter rewrite replaces)
+    blk_ids = jnp.arange(N, dtype=jnp.int32)[None, None, :]
+    req_cls = cls[:, None, None]
+    class_grid = jnp.arange(C, dtype=jnp.int32)[None, :, None]
+    single = is_free[:, None, None] & (sched.arg[:, None, None] >= 0) \
+        & (class_grid == req_cls) & (blk_ids == sched.arg[:, None, None])
+    whole_lane = is_free[:, None, None] & (sched.arg[:, None, None] == FREE_ALL) \
+        & (class_grid == req_cls) \
+        & (owner[None, :, :] == sched.lane[:, None, None])
+    free_mask = jnp.any(single | whole_lane, axis=0)
+    free_mask = free_mask & (owner >= 0)
+
+    freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
+    dest = top_after_alloc[:, None] + jnp.cumsum(free_mask, axis=1) - free_mask
+    dest = jnp.where(free_mask, dest, N)
+    class_rows = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
+    new_stack = state.free_stack.at[class_rows.reshape(-1), dest.reshape(-1)].set(
+        jnp.broadcast_to(blk_ids[0], (C, N)).reshape(-1), mode="drop")
+    owner = jnp.where(free_mask, -1, owner)
+
+    new_top = top_after_alloc + freed_per_class
+    used = used_after_alloc - freed_per_class
+
+    new_state = FreeListState(
+        free_stack=new_stack,
+        free_top=new_top,
+        owner=owner,
+        capacity=state.capacity,
+        alloc_count=state.alloc_count + taken_per_class,
+        free_count=state.free_count + freed_per_class,
+        fail_count=state.fail_count + jnp.sum(fail[:, None] * onehot, 0),
+        used=used,
+        peak_used=peak,
+    )
+    resp_blocks = blocks[unperm]
+    status_sched = jnp.where(is_malloc, ok.astype(jnp.int32),
+                             (sched.op != 0).astype(jnp.int32))
+    resp_status = status_sched[unperm]
+    stats = StepStats(
+        mallocs=jnp.sum(is_malloc).astype(jnp.int32),
+        frees=jnp.sum(is_free).astype(jnp.int32),
+        failed=jnp.sum(fail).astype(jnp.int32),
+        blocks_allocated=jnp.sum(granted).astype(jnp.int32),
+        blocks_freed=jnp.sum(freed_per_class).astype(jnp.int32),
+    )
+    return new_state, ResponseQueue(blocks=resp_blocks, status=resp_status), stats
+
+
+def _assert_freelist_bit_identical(a: FreeListState, b: FreeListState, ctx=""):
+    for field in FreeListState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=f"{ctx}: field {field}")
+
+
+def _differential_trace(caps, steps, max_per_req):
+    """Run scatter and dense-reference steps in lockstep; assert bitwise
+    identical FreeListState transitions, responses, and stats."""
+    state_s = init_freelist(caps)
+    state_d = init_freelist(caps)
+    for si, reqs in enumerate(steps):
+        q = make_queue([r[0] for r in reqs], [r[1] for r in reqs],
+                       [r[2] for r in reqs], [r[3] for r in reqs])
+        state_s, resp_s, st_s = support_core_step(
+            state_s, q, max_blocks_per_req=max_per_req)
+        state_d, resp_d, st_d = dense_reference_step(
+            state_d, q, max_blocks_per_req=max_per_req)
+        _assert_freelist_bit_identical(state_s, state_d, ctx=f"step {si}")
+        np.testing.assert_array_equal(np.asarray(resp_s.blocks),
+                                      np.asarray(resp_d.blocks))
+        np.testing.assert_array_equal(np.asarray(resp_s.status),
+                                      np.asarray(resp_d.status))
+        for f in StepStats._fields:
+            assert int(getattr(st_s, f)) == int(getattr(st_d, f)), (si, f)
+        validate_freelist(state_s)
+
+
+def _random_steps(rng, n_classes, caps, n_steps, max_per_req):
+    """Adversarial queue mix: overwide mallocs, refill-priority mallocs,
+    double frees, frees of never-allocated / out-of-range blocks, FREE_ALL
+    of empty lanes."""
+    steps = []
+    for _ in range(n_steps):
+        reqs = []
+        for _ in range(rng.randint(1, 10)):
+            op = rng.choice([OP_MALLOC, OP_REFILL, OP_FREE, OP_FREE, OP_NOP])
+            lane = int(rng.randint(0, 5))
+            cls = int(rng.randint(0, n_classes))
+            if op in (OP_MALLOC, OP_REFILL):
+                arg = int(rng.randint(1, max_per_req + 2))  # incl. overwide
+            else:
+                # FREE_ALL, plausible ids, and out-of-range ids
+                arg = int(rng.choice([FREE_ALL, FREE_ALL,
+                                      rng.randint(0, max(caps) + 2)]))
+            reqs.append((int(op), lane, cls, arg))
+        steps.append(reqs)
+    return steps
+
+
+def test_scatter_free_matches_dense_reference_seeded():
+    """Differential test (always-on randomized sweep): the scatter-based
+    free path is bit-identical to the dense-mask reference, including
+    FREE_ALL, double-free, and overflow/scarcity cases."""
+    rng = np.random.RandomState(1234)
+    for trial in range(8):
+        n_classes = int(rng.randint(1, 4))
+        caps = [int(rng.randint(2, 10)) for _ in range(n_classes)]
+        steps = _random_steps(rng, n_classes, caps, n_steps=4, max_per_req=3)
+        _differential_trace(caps, steps, max_per_req=3)
+
+
+def test_scatter_free_matches_dense_directed_cases():
+    """Directed corners: same-step alloc+FREE_ALL, repeated FREE_ALL,
+    double-free of one id, free of an unowned id, exhaustion."""
+    caps = [3, 2]
+    steps = [
+        # exhaust class 0; lane 1 overwide (fails); same-step free-all
+        [(OP_MALLOC, 0, 0, 2), (OP_MALLOC, 1, 0, 4), (OP_MALLOC, 2, 0, 2),
+         (OP_FREE, 0, 0, FREE_ALL)],
+        # double-free one id + free unowned id + FREE_ALL of empty lane
+        [(OP_FREE, 0, 0, 2), (OP_FREE, 0, 0, 2), (OP_FREE, 3, 0, 1),
+         (OP_FREE, 4, 1, FREE_ALL)],
+        # cross-class FREE_ALL for the same lane, plus fresh mallocs
+        [(OP_MALLOC, 2, 1, 2), (OP_FREE, 2, 0, FREE_ALL),
+         (OP_FREE, 2, 1, FREE_ALL)],
+        # refill-priority malloc loses to a plain malloc under scarcity,
+        # then the refill-granted lane is FREE_ALL'd in the same step
+        [(OP_REFILL, 1, 0, 3), (OP_MALLOC, 0, 0, 1),
+         (OP_FREE, 1, 0, FREE_ALL)],
+    ]
+    _differential_trace(caps, steps, max_per_req=3)
+
+
+@needs_hypothesis
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_scatter_free_matches_dense_reference_hypothesis(data):
+    """Hypothesis-generated request queues: scatter free path bit-identical
+    to the dense-mask reference across multi-step traces."""
+    n_classes = data.draw(st.integers(1, 3))
+    caps = [data.draw(st.integers(2, 10)) for _ in range(n_classes)]
+    n_steps = data.draw(st.integers(1, 4))
+    steps = []
+    for _ in range(n_steps):
+        reqs = []
+        for _ in range(data.draw(st.integers(1, 8))):
+            op = data.draw(st.sampled_from(
+                [OP_MALLOC, OP_REFILL, OP_FREE, OP_NOP]))
+            lane = data.draw(st.integers(0, 4))
+            cls = data.draw(st.integers(0, n_classes - 1))
+            if op in (OP_MALLOC, OP_REFILL):
+                arg = data.draw(st.integers(1, 4))    # incl. overwide (>3)
+            else:
+                arg = data.draw(st.sampled_from(
+                    [FREE_ALL, 0, 1, max(caps), max(caps) + 1]))
+            reqs.append((op, lane, cls, arg))
+        steps.append(reqs)
+    _differential_trace(caps, steps, max_per_req=3)
 
 
 class PyOracle:
