@@ -7,13 +7,20 @@ two-tier refactor buys on the decode hot path: stash hit rate, HMQ bursts
 per 1k decode steps (pre-stash baseline: 1000 — one support-core batch every
 step), and the before/after steady-state decode-step latency.  Admission
 telemetry (bursts per admitted sequence, prefill compiles) rides along.
-Writes ``BENCH_serving.json`` so the perf trajectory is machine-readable
-across PRs.
+
+A ``support_core_step_us`` microbench times one HMQ burst per allocator
+backend (DESIGN.md §8: ``jnp`` vs the fused Pallas kernel; on CPU hosts the
+kernel runs through the Pallas interpreter, so the entry tracks the
+kernel-vs-jnp burst cost across PRs and becomes the real measurement on
+TPU, where ``kernel`` replaces ``kernel-interpret``).  Writes
+``BENCH_serving.json`` so the perf trajectory is machine-readable across
+PRs.
 """
 import json
 import time
 from pathlib import Path
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -28,12 +35,57 @@ from .common import csv_row
 BENCH_JSON = Path("BENCH_serving.json")
 
 STASH = dict(stash_size=8, stash_watermark=2, stash_refill=4)
+NO_STASH = dict(stash_size=0, stash_watermark=2, stash_refill=4)
+
+
+def _bench_support_core_step(backends=None, iters: int = 8) -> dict:
+    """Steady-state µs per support-core HMQ burst, per backend.
+
+    Representative decode-burst shape: 16 lanes × (malloc + refill + free)
+    slots against a 2-class pool — the queue `decode_append` issues.
+
+    On a TPU host the kernel entry is the COMPILED fused launch
+    (``"kernel"``); elsewhere the Pallas interpreter stands in
+    (``"kernel-interpret"``).  The json keys name whichever variant ran, so
+    the cross-PR trajectory never silently mixes interpreter and compiled
+    timings.
+    """
+    from repro.core.freelist import init_freelist
+    from repro.core.packets import (FREE_ALL, OP_FREE, OP_MALLOC, OP_REFILL,
+                                    RequestQueue)
+    from repro.core.support_core import support_core_step
+
+    if backends is None:
+        kernel = "kernel" if jax.default_backend() == "tpu" \
+            else "kernel-interpret"
+        backends = ("jnp", kernel)
+    L, R = 16, 4
+    lanes = jnp.tile(jnp.arange(L, dtype=jnp.int32), 3)
+    ops = jnp.concatenate([jnp.full((L,), OP_MALLOC, jnp.int32),
+                           jnp.full((L,), OP_REFILL, jnp.int32),
+                           jnp.full((L,), OP_FREE, jnp.int32)])
+    args = jnp.concatenate([jnp.ones((L,), jnp.int32),
+                            jnp.full((L,), R, jnp.int32),
+                            jnp.full((L,), FREE_ALL, jnp.int32)])
+    queue = RequestQueue(op=ops, lane=lanes,
+                         size_class=jnp.zeros((3 * L,), jnp.int32), arg=args)
+    state = init_freelist([1024, 64])
+
+    out = {}
+    for backend in backends:
+        step = jax.jit(lambda s, q, b=backend: support_core_step(s, q, R, b))
+        jax.block_until_ready(step(state, queue))      # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(step(state, queue))
+        out[backend] = (time.perf_counter() - t0) / iters * 1e6
+    return out
 
 
 def _run_once(cfg, params, stash: bool) -> dict:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
-                              dtype=jnp.float32, **(STASH if stash else {}))
+                              dtype=jnp.float32, **(STASH if stash else NO_STASH))
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
     eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg)
 
@@ -73,6 +125,7 @@ def run() -> list[str]:
     # engine's prefill/decode compiles, so requests_per_s stays end-to-end.
     before = _run_once(cfg, params, stash=False)   # central-only reference
     after = _run_once(cfg, params, stash=True)     # the two-tier allocator
+    burst_us = _bench_support_core_step()
 
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
@@ -91,6 +144,9 @@ def run() -> list[str]:
         "stash_hit_rate": s.stash_hit_rate,
         "decode_steps": s.decode_steps,
         "decode_bursts": s.decode_bursts,
+        "stash_depth_hist": s.stash_depth_hist,
+        # --- support-core burst cost per allocator backend (DESIGN.md §8) ---
+        "support_core_step_us": burst_us,
         # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
         "admitted": s.admitted,
@@ -115,4 +171,8 @@ def run() -> list[str]:
         csv_row("serving/throughput", after["wall_s"] * 1e6,
                 f"requests_per_s={metrics['requests_per_s']:.2f} "
                 f"(json: {BENCH_JSON})"),
+        csv_row("serving/support_core_step", burst_us["jnp"],
+                "us per HMQ burst, jnp backend ("
+                + " ".join(f"{k}={v:.0f}us" for k, v in burst_us.items())
+                + ")"),
     ]

@@ -1,0 +1,30 @@
+import sys; sys.path.insert(0, "/root/repo/src")
+import jax.numpy as jnp
+import numpy as np
+from repro.core.freelist import FreeListState, init_freelist
+from repro.core.packets import FREE_ALL, OP_FREE, OP_MALLOC, OP_NOP, OP_REFILL, make_queue
+from repro.core.support_core import support_core_step
+
+rng = np.random.RandomState(2)
+for (C, cap_hi, R, steps) in [(2, 8, 3, 4), (4, 32, 8, 3), (1, 4, 2, 6)]:
+    caps = [int(rng.randint(2, cap_hi + 1)) for _ in range(C)]
+    sj = init_freelist(caps)
+    sk = init_freelist(caps)
+    for _ in range(steps):
+        reqs = []
+        for _ in range(rng.randint(1, 12)):
+            op = int(rng.choice([OP_MALLOC, OP_REFILL, OP_FREE, OP_NOP]))
+            arg = int(rng.randint(1, R + 2)) if op in (OP_MALLOC, OP_REFILL) \
+                else int(rng.choice([FREE_ALL, rng.randint(0, max(caps) + 2)]))
+            reqs.append((op, int(rng.randint(0, 5)), int(rng.randint(0, C)), arg))
+        q = make_queue([r[0] for r in reqs], [r[1] for r in reqs],
+                       [r[2] for r in reqs], [r[3] for r in reqs])
+        sj, rj, _ = support_core_step(sj, q, R, backend="jnp")
+        sk, rk, _ = support_core_step(sk, q, R, backend="kernel-interpret")
+        for f in FreeListState._fields:
+            np.testing.assert_array_equal(np.asarray(getattr(sj, f)),
+                                          np.asarray(getattr(sk, f)), err_msg=f)
+        np.testing.assert_array_equal(np.asarray(rj.blocks), np.asarray(rk.blocks))
+        np.testing.assert_array_equal(np.asarray(rj.status), np.asarray(rk.status))
+    print(f"C={C} caps={caps} R={R}: fused kernel == jnp over {steps} steps OK")
+print("FUSED SUPPORT-CORE KERNEL OK")

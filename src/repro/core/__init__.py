@@ -8,28 +8,31 @@
 """
 from .freelist import FreeListState, init_freelist, num_free, validate_freelist
 from .hmq import max_safe_lanes, queue_occupancy, round_robin_rank, schedule
-from .lane_stash import (LaneStashState, below_watermark, init_stash,
-                         stash_clear, stash_pop, stash_push, stash_push_batch,
-                         validate_stash_params)
+from .lane_stash import (LaneStashState, autotune_stash, below_watermark,
+                         init_stash, stash_clear, stash_pop, stash_push,
+                         stash_push_batch, validate_stash_params)
 from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
                       RequestQueue, ResponseQueue, empty_queue, make_queue)
 from .paged_kv import (KV_CLASS, STATE_CLASS, DecodeStats, PagedKVConfig,
                        PagedKVState, admit_prefill, admit_prefill_many,
-                       decode_append, gather_kv, init_paged_kv,
-                       kv_pages_in_use, live_pages, release_lanes,
-                       release_packets, validate_paged_kv)
-from .support_core import StepStats, support_core_step
+                       decode_append, empty_decode_stats, gather_kv,
+                       init_paged_kv, kv_pages_in_use, live_pages,
+                       release_lanes, release_packets, stash_depth_histogram,
+                       validate_paged_kv)
+from .support_core import ALLOC_BACKENDS, StepStats, support_core_step
 
 __all__ = [
     "FreeListState", "init_freelist", "num_free", "validate_freelist",
     "max_safe_lanes", "queue_occupancy", "round_robin_rank", "schedule",
-    "LaneStashState", "below_watermark", "init_stash", "stash_clear",
-    "stash_pop", "stash_push", "stash_push_batch", "validate_stash_params",
+    "LaneStashState", "autotune_stash", "below_watermark", "init_stash",
+    "stash_clear", "stash_pop", "stash_push", "stash_push_batch",
+    "validate_stash_params",
     "FREE_ALL", "NO_BLOCK", "NO_LANE", "OP_FREE", "OP_MALLOC", "OP_NOP",
     "RequestQueue", "ResponseQueue", "empty_queue", "make_queue",
     "KV_CLASS", "STATE_CLASS", "DecodeStats", "PagedKVConfig", "PagedKVState",
-    "admit_prefill", "admit_prefill_many", "decode_append", "gather_kv",
-    "init_paged_kv", "kv_pages_in_use", "live_pages", "release_lanes",
-    "release_packets", "validate_paged_kv",
-    "StepStats", "support_core_step",
+    "admit_prefill", "admit_prefill_many", "decode_append",
+    "empty_decode_stats", "gather_kv", "init_paged_kv", "kv_pages_in_use",
+    "live_pages", "release_lanes", "release_packets",
+    "stash_depth_histogram", "validate_paged_kv",
+    "ALLOC_BACKENDS", "StepStats", "support_core_step",
 ]

@@ -82,6 +82,53 @@ def validate_stash_params(size: int, watermark: int, refill: int) -> None:
             f"below-watermark lane could overflow the stash")
 
 
+def autotune_stash(page_size: int, window: int | None, num_lanes: int,
+                   pool_pages: int) -> tuple[int, int, int]:
+    """Derive ``(stash_size, stash_watermark, stash_refill)`` from boundary
+    cadence (ROADMAP item; the default when stash knobs are unset in
+    ``make_paged_config``).
+
+    A lane crosses a page boundary — and thus pops its stash — once every
+    ``page_size`` decode tokens, so the refill batch is what sets the
+    central-allocator cadence: one HMQ burst per ``refill · page_size``
+    tokens per lane (the sim's ``speedmalloc_stash`` policy models exactly
+    this: ``shared_trips = boundary_mallocs / refill``).  The derivation:
+
+    * **budget** — stashed pages are speculatively *claimed* from the pool,
+      so the front tier may hold at most a quarter of the pool across all
+      lanes (``pool_pages // (4 · num_lanes)`` per lane); pools too small to
+      fund the smallest viable stash (watermark 1 + refill 2) disable the
+      tier rather than starve admission.
+    * **windowless lanes** only consume pages, so the refill batch takes the
+      whole per-lane budget (capped at 8 — beyond that the amortization
+      gain per extra page is < 1/64 burst per boundary).
+    * **SWA lanes** are self-sustaining in steady state (one dead page
+      recycles per boundary), so the stash only rides the warmup ramp of
+      ``ceil(window / page_size)`` live pages: half a ramp per refill keeps
+      warmup at ~2 bursts without hoarding pages the recycle loop will
+      provide anyway.
+    * ``stash_size = watermark + refill`` — the smallest stash satisfying
+      :func:`validate_stash_params`' all-or-nothing refill invariant.
+
+    Returns ``(0, 2, 4)`` (tier disabled, benign config defaults) when the
+    pool cannot fund a stash.
+    """
+    if num_lanes <= 0 or pool_pages <= 0 or page_size <= 0:
+        return 0, 2, 4
+    budget = pool_pages // (4 * num_lanes)
+    if budget < 3:                       # watermark 1 + refill 2 won't fit
+        return 0, 2, 4
+    if window:
+        ramp = -(-window // page_size)
+        refill = max(2, min(ramp // 2, budget - 1, 8))
+    else:
+        refill = min(8, budget - 1)
+    watermark = min(2, budget - refill)  # >= 1 because refill <= budget - 1
+    size = watermark + refill
+    validate_stash_params(size, watermark, refill)
+    return size, watermark, refill
+
+
 def init_stash(max_lanes: int, size: int) -> LaneStashState:
     return LaneStashState(
         pages=jnp.full((max_lanes, max(size, 1)), NO_BLOCK, jnp.int32),

@@ -104,6 +104,10 @@ class DecodeStats(NamedTuple):
     counts only *on-path* failures (a boundary lane that got no page);
     failed speculative refills are benign and tracked separately in
     ``refill_failed`` (``core.failed`` still holds the raw total).
+    ``stash_depth_hist[d]`` counts ACTIVE lanes whose end-of-step stash
+    depth is d (shape ``[stash_size + 1]``) — a per-lane depth histogram
+    that localizes refill storms under mixed-length traffic: a healthy
+    steady state masses near the top bins, a storm piles lanes at 0..1.
     """
 
     core: StepStats
@@ -112,6 +116,7 @@ class DecodeStats(NamedTuple):
     stash_hits: jnp.ndarray      # boundary pages served by the stash
     stash_misses: jnp.ndarray    # boundary pages that needed a central malloc
     bursts: jnp.ndarray          # 0/1 support-core steps issued
+    stash_depth_hist: jnp.ndarray  # [stash_size + 1] int32 active-lane histogram
 
     # forwarders so DecodeStats reads like the StepStats it extends
     @property
@@ -151,6 +156,7 @@ def _gated_support_core_step(
     alloc: FreeListState,
     queue: RequestQueue,
     max_blocks_per_req: int,
+    backend: Optional[str] = None,
 ) -> tuple[FreeListState, ResponseQueue, StepStats, jnp.ndarray]:
     """Run the support-core step only when the queue has a live packet.
 
@@ -164,7 +170,8 @@ def _gated_support_core_step(
 
     def run(_):
         return support_core_step(alloc, queue,
-                                 max_blocks_per_req=max_blocks_per_req)
+                                 max_blocks_per_req=max_blocks_per_req,
+                                 backend=backend)
 
     def skip(_):
         q = queue.capacity
@@ -191,6 +198,7 @@ def admit_prefill_many(
     k: jnp.ndarray,               # [B, L, T, kv_heads, head_dim]
     v: jnp.ndarray,
     lengths: jnp.ndarray,         # [B] int32, each <= T
+    backend: Optional[str] = None,
 ) -> tuple[PagedKVState, StepStats]:
     """Admit B prefilled sequences with a single support-core step.
 
@@ -247,7 +255,8 @@ def admit_prefill_many(
         arg=jnp.concatenate(args),
     )
     alloc, resp, stats = support_core_step(state.alloc, queue,
-                                           max_blocks_per_req=resp_width)
+                                           max_blocks_per_req=resp_width,
+                                           backend=backend)
     if cfg.stash_size:
         # `failed` should mean "admission packets that failed": a failed
         # pre-charge is benign (the lane just starts with an empty stash)
@@ -324,11 +333,13 @@ def admit_prefill(
     k: jnp.ndarray,               # [L, T, kv_heads, head_dim]
     v: jnp.ndarray,
     length: jnp.ndarray,          # scalar int32, <= T
+    backend: Optional[str] = None,
 ) -> tuple[PagedKVState, StepStats]:
     """Admit one prefilled sequence (batch-of-one :func:`admit_prefill_many`)."""
     lanes = jnp.asarray(lane, jnp.int32).reshape(1)
     lengths = jnp.asarray(length, jnp.int32).reshape(1)
-    return admit_prefill_many(cfg, state, lanes, k[None], v[None], lengths)
+    return admit_prefill_many(cfg, state, lanes, k[None], v[None], lengths,
+                              backend=backend)
 
 
 # --------------------------------------------------------------------------
@@ -341,6 +352,7 @@ def decode_append(
     new_k: jnp.ndarray,           # [max_lanes, L, kv_heads, head_dim]
     new_v: jnp.ndarray,
     window: Optional[int] = None,  # SWA window (tokens); enables page recycling
+    backend: Optional[str] = None,
 ) -> tuple[PagedKVState, DecodeStats]:
     """Append one token per active lane through the two-tier allocator.
 
@@ -423,7 +435,9 @@ def decode_append(
     classes = jnp.zeros_like(ops)
     queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
     alloc, resp, stats, live = _gated_support_core_step(
-        state.alloc, queue, max_blocks_per_req=max(1, cfg.stash_refill if S else 1))
+        state.alloc, queue,
+        max_blocks_per_req=max(1, cfg.stash_refill if S else 1),
+        backend=backend)
 
     # --- install newly obtained pages into block tables (stash pop wins;
     # emergency grants cover the misses)
@@ -471,8 +485,34 @@ def decode_append(
         stash_hits=jnp.sum(got_stash).astype(jnp.int32),
         stash_misses=jnp.sum(missed).astype(jnp.int32),
         bursts=live.astype(jnp.int32),
+        stash_depth_hist=stash_depth_histogram(cfg, stash, state.active),
     )
     return new, dstats
+
+
+def stash_depth_histogram(cfg: PagedKVConfig, stash: LaneStashState,
+                          active: jnp.ndarray) -> jnp.ndarray:
+    """``[stash_size + 1]`` int32 histogram of active lanes' stash depth.
+
+    Bin d counts active lanes sitting at depth d; inactive lanes are
+    dropped (positive OOB sentinel).  With the stash disabled this is one
+    bin holding the active-lane count.
+    """
+    bins = cfg.stash_size + 1
+    depth = jnp.clip(stash.depth, 0, cfg.stash_size)
+    return jnp.zeros((bins,), jnp.int32).at[
+        jnp.where(active, depth, bins)].add(1, mode="drop")
+
+
+def empty_decode_stats(cfg: PagedKVConfig) -> DecodeStats:
+    """All-zero DecodeStats matching this config's histogram shape (the
+    attention-free decode branch and other no-allocator steps)."""
+    z = jnp.zeros((), jnp.int32)
+    return DecodeStats(core=StepStats(z, z, z, z, z),
+                       failed=z, refill_failed=z,
+                       stash_hits=z, stash_misses=z, bursts=z,
+                       stash_depth_hist=jnp.zeros((cfg.stash_size + 1,),
+                                                  jnp.int32))
 
 
 # --------------------------------------------------------------------------
@@ -484,6 +524,7 @@ def release_packets(
     cfg: PagedKVConfig,
     state: PagedKVState,
     lane_ids: jnp.ndarray,        # [K] int32 packet slots; NO_LANE = empty slot
+    backend: Optional[str] = None,
 ) -> tuple[PagedKVState, StepStats]:
     """Release lanes through FREE_ALL request packets in one support-core step.
 
@@ -510,7 +551,8 @@ def release_packets(
     else:
         lanes, classes = safe, jnp.full((K,), KV_CLASS, jnp.int32)
     queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
-    alloc, _, stats = support_core_step(state.alloc, queue, max_blocks_per_req=1)
+    alloc, _, stats = support_core_step(state.alloc, queue,
+                                        max_blocks_per_req=1, backend=backend)
     release_mask = jnp.zeros((cfg.max_lanes,), bool).at[
         jnp.where(valid, safe, cfg.max_lanes)].set(True, mode="drop")
     keep = ~release_mask
@@ -531,11 +573,12 @@ def release_lanes(
     cfg: PagedKVConfig,
     state: PagedKVState,
     release_mask: jnp.ndarray,    # [max_lanes] bool
+    backend: Optional[str] = None,
 ) -> tuple[PagedKVState, StepStats]:
     """Dense-mask release (legacy shape; routed through the packet path)."""
     lane_ids = jnp.where(release_mask,
                          jnp.arange(cfg.max_lanes, dtype=jnp.int32), NO_LANE)
-    return release_packets(cfg, state, lane_ids)
+    return release_packets(cfg, state, lane_ids, backend=backend)
 
 
 # --------------------------------------------------------------------------

@@ -31,18 +31,44 @@ TPU, so the entire batch is processed with prefix sums:
 The result is semantically identical to the paper's serial HMQ (same
 ordering, same fairness, same failure set) but costs O(Q + C·N) vector work
 instead of Q dependent iterations.
+
+Backends (DESIGN.md §8)
+-----------------------
+The scheduled-step body is implemented twice and selected per call:
+
+* ``"jnp"`` (default) — the plain-jnp path below: each phase is a separate
+  XLA op over HBM-resident metadata.  Always available; it is the
+  differential reference for the fused kernel (alongside the dense test-only
+  reference in ``tests/test_support_core.py``).
+* ``"kernel"`` — one fused VPU-only Pallas launch
+  (:mod:`repro.kernels.support_core`) with the entire segregated metadata
+  resident in VMEM for the whole burst — the TPU-native translation of the
+  paper's integer-only support-core whose metadata lives in its private L1.
+  Requires TPU (Mosaic) lowering.
+* ``"kernel-interpret"`` — the same kernel through the Pallas interpreter;
+  runs anywhere (test/CI parity path), never the silent production default.
+
+``backend=None`` resolves from the ``REPRO_ALLOC_BACKEND`` env knob
+(:mod:`repro.perf_flags`).  HMQ scheduling (the priority/round-robin sort)
+and response routing back to caller order stay OUTSIDE the backends — both
+paths consume an already-``schedule``\\ d queue and return scheduled-order
+results, so the dispatch wrapper computes identical responses and stats for
+every backend.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from .freelist import FreeListState
 from .hmq import schedule
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
-                      RequestQueue, ResponseQueue)
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
+                      OP_REFILL, RequestQueue, ResponseQueue)
+
+#: Valid values for the ``backend`` argument / ``REPRO_ALLOC_BACKEND`` knob.
+ALLOC_BACKENDS = ("jnp", "kernel", "kernel-interpret")
 
 
 class StepStats(NamedTuple):
@@ -55,26 +81,21 @@ class StepStats(NamedTuple):
     blocks_freed: jnp.ndarray
 
 
-def support_core_step(
+def _step_scheduled_jnp(
     state: FreeListState,
-    queue: RequestQueue,
-    max_blocks_per_req: int = 1,
-) -> tuple[FreeListState, ResponseQueue, StepStats]:
-    """Process one HMQ batch against the segregated free lists.
+    sched: RequestQueue,
+    max_blocks_per_req: int,
+) -> tuple[FreeListState, jnp.ndarray, jnp.ndarray]:
+    """Process an already-``hmq.schedule``d queue with plain jnp ops.
 
-    Args:
-      state: segregated allocator metadata.
-      queue: request batch (any order; will be HMQ-scheduled internally).
-      max_blocks_per_req: response width R — the largest ``arg`` a malloc may
-        carry.  Requests asking for more than R blocks fail.
-
-    Returns:
-      (new_state, responses_in_caller_order, stats)
+    Returns ``(new_state, blocks [Q, R], ok [Q])`` in SCHEDULED order — the
+    shared contract of every allocator backend (the fused Pallas kernel
+    implements the same function body in one launch; the two are
+    differential-tested bit-identical).
     """
     C, N = state.num_classes, state.max_capacity
-    Q, R = queue.capacity, max_blocks_per_req
+    Q, R = sched.capacity, max_blocks_per_req
 
-    sched, unperm = schedule(queue)
     # OP_REFILL is a malloc with refill priority: identical grant semantics,
     # but `schedule` already placed every refill after every plain malloc.
     is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
@@ -188,17 +209,61 @@ def support_core_step(
         used=used,
         peak_used=peak,
     )
+    return new_state, blocks, ok.astype(jnp.int32)
+
+
+def support_core_step(
+    state: FreeListState,
+    queue: RequestQueue,
+    max_blocks_per_req: int = 1,
+    backend: Optional[str] = None,
+) -> tuple[FreeListState, ResponseQueue, StepStats]:
+    """Process one HMQ batch against the segregated free lists.
+
+    Args:
+      state: segregated allocator metadata.
+      queue: request batch (any order; will be HMQ-scheduled internally).
+      max_blocks_per_req: response width R — the largest ``arg`` a malloc may
+        carry.  Requests asking for more than R blocks fail.
+      backend: ``"jnp"`` | ``"kernel"`` | ``"kernel-interpret"`` (see module
+        docstring); ``None`` resolves ``REPRO_ALLOC_BACKEND``.  Static — the
+        choice is baked in at trace time.
+
+    Returns:
+      (new_state, responses_in_caller_order, stats)
+    """
+    if backend is None:
+        from ..perf_flags import current_flags
+        backend = current_flags().alloc_backend
+    if backend not in ALLOC_BACKENDS:
+        raise ValueError(
+            f"unknown alloc backend {backend!r}; expected one of {ALLOC_BACKENDS}")
+
+    sched, unperm = schedule(queue)
+    if backend == "jnp":
+        new_state, blocks, ok = _step_scheduled_jnp(
+            state, sched, max_blocks_per_req)
+    else:
+        from ..kernels.support_core.ops import support_core_burst
+        new_state, blocks, ok = support_core_burst(
+            state, sched, max_blocks_per_req=max_blocks_per_req,
+            interpret=(backend == "kernel-interpret"))
 
     # ---- response routing back to caller order (Fig. 7 response queue) ----
-    resp_blocks = blocks[unperm]                                        # [Q, R]
-    status_sched = jnp.where(is_malloc, ok.astype(jnp.int32),
-                             (sched.op != 0).astype(jnp.int32))
-    resp_status = status_sched[unperm]
+    # Shared across backends: both return scheduled-order (blocks, ok), so
+    # responses and stats are identical by construction given identical
+    # backend outputs (the bit-identity the differential suite proves).
+    is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+    is_free = sched.op == OP_FREE
+    status_sched = jnp.where(is_malloc, ok,
+                             (sched.op != OP_NOP).astype(jnp.int32))
+    resp = ResponseQueue(blocks=blocks[unperm], status=status_sched[unperm])
     stats = StepStats(
         mallocs=jnp.sum(is_malloc).astype(jnp.int32),
         frees=jnp.sum(is_free).astype(jnp.int32),
-        failed=jnp.sum(fail).astype(jnp.int32),
-        blocks_allocated=jnp.sum(granted).astype(jnp.int32),
-        blocks_freed=jnp.sum(freed_per_class).astype(jnp.int32),
+        failed=jnp.sum(is_malloc & (ok == 0)).astype(jnp.int32),
+        blocks_allocated=jnp.sum(blocks != NO_BLOCK).astype(jnp.int32),
+        blocks_freed=jnp.sum(new_state.free_count - state.free_count)
+        .astype(jnp.int32),
     )
-    return new_state, ResponseQueue(blocks=resp_blocks, status=resp_status), stats
+    return new_state, resp, stats

@@ -1,0 +1,2 @@
+"""Fused support-core burst kernel: one Pallas launch per HMQ batch."""
+from .ops import support_core_burst  # noqa: F401

@@ -1,0 +1,20 @@
+"""Oracle for the fused support-core kernel: the ``"jnp"`` backend's
+scheduled-step body, restricted — exactly like the kernel — to an
+already-``hmq.schedule``d queue.  This subsumes the old
+``kernels/hmq_alloc`` malloc-only reference: the fused kernel covers the
+whole burst (grants + owner map + frees + counters), so its oracle is the
+whole scheduled step rather than the malloc phase alone."""
+from __future__ import annotations
+
+from ...core.freelist import FreeListState
+from ...core.packets import RequestQueue
+from ...core.support_core import _step_scheduled_jnp
+
+
+def support_core_burst_ref(
+    state: FreeListState,
+    sched: RequestQueue,
+    max_blocks_per_req: int = 1,
+):
+    """(new_state, blocks [Q, R], ok [Q]) for a scheduled HMQ burst."""
+    return _step_scheduled_jnp(state, sched, max_blocks_per_req)

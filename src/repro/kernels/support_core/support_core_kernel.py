@@ -1,0 +1,233 @@
+"""Fused support-core step — the ENTIRE HMQ burst as one Pallas kernel.
+
+The paper's support-core is a deliberately *lightweight* core: integer-only,
+no FP/vector units (§2.4), with the whole segregated metadata in its private
+L1 (§5.1).  The TPU-native analogue is a single VPU-only kernel — zero MXU
+work — with ``free_stack [C, N]`` and ``owner [C, N]`` (plus the [C] counter
+vectors) resident in VMEM for the whole burst, playing the role of the
+support-core's L1: one grid step services a whole scheduled HMQ batch, and
+the metadata makes exactly one HBM→VMEM→HBM round trip per burst instead of
+one per XLA op (the ``"jnp"`` backend's scan + gathers + scatters each
+re-touch HBM).
+
+Scope (DESIGN.md §8): everything in
+:func:`repro.core.support_core._step_scheduled_jnp` for an
+already-``hmq.schedule``d queue —
+
+  * sequential-skip malloc grants (the [C]-state scan over the queue),
+  * the batched stack gather + owner-map update,
+  * scatter-based single-block frees,
+  * the FREE_ALL owner sweep (an accumulated masked-OR over the queue's
+    FREE_ALL packets — the host path's sorted-lane-list binary search exists
+    to avoid materializing [Q, C, N] in HBM, which a VMEM-resident kernel
+    never does, so the simpler O(Q·C·N/vector-width) sweep wins here),
+  * the deferred-free compaction + stack append,
+  * all counters (used / peak_used / alloc_count / free_count / fail_count).
+
+HMQ scheduling (the priority/round-robin sort) and response unpermutation
+stay in the host-side dispatcher — they are queue bookkeeping, not metadata
+mutation.  The grant recurrence stays a `lax.scan`: a request's grant
+depends on which EARLIER requests of its class were granted (failures
+consume nothing), a true prefix recurrence with [C]-vector state that no
+fixed number of cumsum passes can replace.
+
+Shapes: Q requests, C size classes, N stack capacity, R max blocks/request.
+VMEM: free_stack + owner dominate at 2·C·N·4 bytes in + the same out
+(C=8, N=64k → 4 MB in + 4 MB out); queue and counters are O(Q + C).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ...core.packets import FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL
+
+
+def _kernel(
+    # --- scheduled queue (in) ---
+    op_ref,         # [Q] int32
+    lane_ref,       # [Q] int32
+    cls_ref,        # [Q] int32
+    arg_ref,        # [Q] int32
+    # --- segregated metadata (in) ---
+    stack_ref,      # [C, N] int32
+    top_ref,        # [C, 1] int32
+    owner_ref,      # [C, N] int32
+    alloc_cnt_ref,  # [C, 1] int32
+    free_cnt_ref,   # [C, 1] int32
+    fail_cnt_ref,   # [C, 1] int32
+    used_ref,       # [C, 1] int32
+    peak_ref,       # [C, 1] int32
+    # --- segregated metadata (out) ---
+    new_stack_ref,  # [C, N] int32
+    new_top_ref,    # [C, 1] int32
+    new_owner_ref,  # [C, N] int32
+    new_alloc_ref,  # [C, 1] int32
+    new_free_ref,   # [C, 1] int32
+    new_fail_ref,   # [C, 1] int32
+    new_used_ref,   # [C, 1] int32
+    new_peak_ref,   # [C, 1] int32
+    # --- responses (out, scheduled order) ---
+    blocks_ref,     # [Q, R] int32
+    ok_ref,         # [Q] int32
+    *,
+    num_classes: int,
+    max_per_req: int,
+):
+    C = num_classes
+    R = max_per_req
+
+    op = op_ref[...]
+    lane = lane_ref[...]
+    Q = op.shape[0]
+    cls = jnp.clip(cls_ref[...], 0, C - 1)
+    arg = arg_ref[...]
+    is_malloc = (op == OP_MALLOC) | (op == OP_REFILL)
+    is_free = op == OP_FREE
+    want = jnp.where(is_malloc, jnp.maximum(arg, 0), 0)
+    want = jnp.where(want <= R, want, 0)                    # overwide -> fail
+
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, (Q, C), 1)
+              == cls[:, None]).astype(jnp.int32)            # [Q, C]
+    tops = top_ref[:, 0]                                    # [C]
+
+    # ---- malloc phase: sequential-skip grants (see module docstring on why
+    # this stays a scan) ----
+    def grant_body(consumed, xs):
+        want_i, onehot_i, is_m_i = xs
+        my = jnp.sum(onehot_i * consumed)
+        av = jnp.sum(onehot_i * tops)
+        ok_i = is_m_i & (want_i > 0) & (my + want_i <= av)
+        consumed = consumed + jnp.where(ok_i, want_i, 0) * onehot_i
+        return consumed, (ok_i, my)
+
+    _, (ok, my_goff) = jax.lax.scan(
+        grant_body, jnp.zeros((C,), jnp.int32), (want, onehot, is_malloc))
+    fail = is_malloc & ~ok
+    granted = jnp.where(ok, want, 0)
+    granted_c = granted[:, None] * onehot
+
+    # Stack gather: request i takes stack[c, top-1-my_goff-j] for j < granted.
+    j = jax.lax.broadcasted_iota(jnp.int32, (Q, R), 1)
+    top_i = jnp.sum(onehot * tops[None, :], axis=1)         # [Q]
+    pos = top_i[:, None] - 1 - my_goff[:, None] - j         # [Q, R]
+    take = ok[:, None] & (j < granted[:, None])
+    safe_pos = jnp.where(take, pos, 0)
+    stack = stack_ref[...]
+    blocks = jnp.where(take, stack[cls[:, None], safe_pos], NO_BLOCK)
+    blocks_ref[...] = blocks
+    ok_ref[...] = ok.astype(jnp.int32)
+
+    # Owner-map update (positive OOB sentinels drop masked slots — JAX wraps
+    # negative indices even under mode="drop").
+    N = stack.shape[1]
+    flat_cls = jnp.broadcast_to(cls[:, None], (Q, R)).reshape(-1)
+    flat_blk = blocks.reshape(-1)
+    flat_lane = jnp.broadcast_to(lane[:, None], (Q, R)).reshape(-1)
+    flat_take = take.reshape(-1)
+    upd_idx_c = jnp.where(flat_take, flat_cls, C)
+    upd_idx_b = jnp.where(flat_take, flat_blk, N)
+    owner = owner_ref[...].at[upd_idx_c, upd_idx_b].set(flat_lane, mode="drop")
+
+    taken_per_class = jnp.sum(granted_c, axis=0)            # [C]
+    top_after_alloc = tops - taken_per_class
+    used_after_alloc = used_ref[:, 0] + taken_per_class
+    new_peak_ref[...] = jnp.maximum(peak_ref[:, 0], used_after_alloc)[:, None]
+
+    # ---- free phase (deferred append) ----
+    # Single-block frees scatter (class, arg) hits directly.
+    is_single = is_free & (arg >= 0)
+    sgl_c = jnp.where(is_single, cls, C)
+    sgl_b = jnp.where(is_single & (arg < N), arg, N)
+    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
+
+    # FREE_ALL owner sweep: accumulated masked-OR over the queue's FREE_ALL
+    # packets — whole VMEM-resident [C, N] vector op per packet, no sort.
+    is_fa = (is_free & (arg == FREE_ALL)).astype(jnp.int32)
+    class_grid = jax.lax.broadcasted_iota(jnp.int32, (C, N), 0)
+
+    def fa_body(i, whole):
+        fa_i = jax.lax.dynamic_index_in_dim(is_fa, i, keepdims=False)
+        cls_i = jax.lax.dynamic_index_in_dim(cls, i, keepdims=False)
+        lane_i = jax.lax.dynamic_index_in_dim(lane, i, keepdims=False)
+        hit = (fa_i > 0) & (class_grid == cls_i) & (owner == lane_i)
+        return whole | hit
+
+    whole_lane = jax.lax.fori_loop(0, Q, fa_body, jnp.zeros((C, N), bool))
+
+    # Only currently-owned blocks free (double-free of a free block is a
+    # nop); post-alloc owner map, so a block granted this step can be freed
+    # this step.
+    free_mask = (single | whole_lane) & (owner >= 0)
+
+    # Compact freed ids per class and append to the stack.
+    blk_ids = jax.lax.broadcasted_iota(jnp.int32, (C, N), 1)
+    freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
+    dest = top_after_alloc[:, None] + jnp.cumsum(free_mask, axis=1) - free_mask
+    dest = jnp.where(free_mask, dest, N)                    # OOB -> dropped
+    new_stack_ref[...] = stack.at[class_grid.reshape(-1), dest.reshape(-1)].set(
+        blk_ids.reshape(-1), mode="drop")
+    new_owner_ref[...] = jnp.where(free_mask, -1, owner)
+
+    # ---- counters ----
+    new_top_ref[...] = (top_after_alloc + freed_per_class)[:, None]
+    new_used_ref[...] = (used_after_alloc - freed_per_class)[:, None]
+    new_alloc_ref[...] = (alloc_cnt_ref[:, 0] + taken_per_class)[:, None]
+    new_free_ref[...] = (free_cnt_ref[:, 0] + freed_per_class)[:, None]
+    new_fail_ref[...] = (fail_cnt_ref[:, 0]
+                         + jnp.sum(fail[:, None] * onehot, axis=0))[:, None]
+
+
+def fused_step_kernel(
+    op: jnp.ndarray,          # [Q] int32 — SCHEDULED queue
+    lane: jnp.ndarray,        # [Q] int32
+    size_class: jnp.ndarray,  # [Q] int32
+    arg: jnp.ndarray,         # [Q] int32
+    free_stack: jnp.ndarray,  # [C, N] int32
+    free_top: jnp.ndarray,    # [C] int32
+    owner: jnp.ndarray,       # [C, N] int32
+    alloc_count: jnp.ndarray,  # [C] int32
+    free_count: jnp.ndarray,   # [C] int32
+    fail_count: jnp.ndarray,   # [C] int32
+    used: jnp.ndarray,         # [C] int32
+    peak_used: jnp.ndarray,    # [C] int32
+    *,
+    max_per_req: int,
+    interpret: bool = False,
+):
+    """One fused launch for a whole scheduled HMQ burst.
+
+    Returns ``(new_stack [C,N], new_top [C,1], new_owner [C,N],
+    new_alloc [C,1], new_free [C,1], new_fail [C,1], new_used [C,1],
+    new_peak [C,1], blocks [Q,R], ok [Q])``.
+    """
+    Q = op.shape[0]
+    C, N = free_stack.shape
+    R = max_per_req
+    kernel = functools.partial(_kernel, num_classes=C, max_per_req=R)
+    q_spec = pl.BlockSpec((Q,), lambda i: (0,))
+    cn_spec = pl.BlockSpec((C, N), lambda i: (0, 0))
+    c1_spec = pl.BlockSpec((C, 1), lambda i: (0, 0))
+    cn_shape = jax.ShapeDtypeStruct((C, N), jnp.int32)
+    c1_shape = jax.ShapeDtypeStruct((C, 1), jnp.int32)
+    return pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[q_spec, q_spec, q_spec, q_spec,
+                  cn_spec, c1_spec, cn_spec,
+                  c1_spec, c1_spec, c1_spec, c1_spec, c1_spec],
+        out_specs=[cn_spec, c1_spec, cn_spec,
+                   c1_spec, c1_spec, c1_spec, c1_spec, c1_spec,
+                   pl.BlockSpec((Q, R), lambda i: (0, 0)), q_spec],
+        out_shape=[cn_shape, c1_shape, cn_shape,
+                   c1_shape, c1_shape, c1_shape, c1_shape, c1_shape,
+                   jax.ShapeDtypeStruct((Q, R), jnp.int32),
+                   jax.ShapeDtypeStruct((Q,), jnp.int32)],
+        interpret=interpret,
+    )(op, lane, size_class, arg,
+      free_stack, free_top[:, None], owner,
+      alloc_count[:, None], free_count[:, None], fail_count[:, None],
+      used[:, None], peak_used[:, None])

@@ -18,6 +18,7 @@ import numpy as np
 
 from ..configs.base import ARCH_IDS, smoke_config
 from ..core.paged_kv import live_pages
+from ..core.support_core import ALLOC_BACKENDS
 from ..models import init_params, make_paged_config
 from ..serve.engine import AdmissionItem, ServingEngine
 from ..serve.scheduler import Request, Scheduler, make_scheduler_config
@@ -98,8 +99,15 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--page-size", type=int, default=8)
-    ap.add_argument("--stash-size", type=int, default=8,
-                    help="per-lane page-stash size (0 disables the front tier)")
+    ap.add_argument("--stash-size", type=int, default=None,
+                    help="per-lane page-stash size (0 disables the front "
+                         "tier; default: autotuned from boundary cadence)")
+    ap.add_argument("--alloc-backend", default=None,
+                    choices=list(ALLOC_BACKENDS),
+                    help="support-core step implementation (default: "
+                         "REPRO_ALLOC_BACKEND env or 'jnp'; 'kernel' is the "
+                         "fused Pallas burst, TPU only; 'kernel-interpret' "
+                         "runs it through the Pallas interpreter)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -110,7 +118,8 @@ def main() -> None:
                               stash_size=args.stash_size)
     params = init_params(cfg, dtype=jnp.float32)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
-    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg)
+    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg,
+                        alloc_backend=args.alloc_backend)
     sched = Scheduler(scfg)
 
     requests = synth_requests(cfg, args.requests, rng)
@@ -121,6 +130,9 @@ def main() -> None:
     if sched.failed:
         print(f"FAILED: {len(sched.failed)} request(s) rejected by the allocator")
     print(f"served {len(sched.finished)} requests in {steps} decode steps | "
+          f"alloc_backend={eng.alloc_backend} "
+          f"stash={kvcfg.stash_size}/{kvcfg.stash_watermark}"
+          f"/{kvcfg.stash_refill} | "
           f"allocs={int(a.alloc_count[0])} frees={int(a.free_count[0])} "
           f"fails={int(a.fail_count[0])} peak_pages={int(a.peak_used[0])} "
           f"live={int(live_pages(eng.state.paged))} | "
@@ -128,7 +140,8 @@ def main() -> None:
           f"({s.hmq_admit_bursts / max(s.admitted, 1):.2f}/seq) "
           f"prefill_compiles={s.prefill_compiles} | "
           f"stash_hit_rate={s.stash_hit_rate:.2f} "
-          f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f}")
+          f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f} "
+          f"stash_depth_hist={s.stash_depth_hist}")
 
 
 if __name__ == "__main__":

@@ -133,15 +133,21 @@ def make_paged_config(
     page_size: int = DEFAULT_PAGE_SIZE,
     dtype=jnp.bfloat16,
     slack_pages: int = 8,
-    stash_size: int = 0,
-    stash_watermark: int = 2,
-    stash_refill: int = 4,
+    stash_size: int | None = None,
+    stash_watermark: int | None = None,
+    stash_refill: int | None = None,
 ) -> PagedKVConfig:
     """Size the page pool for `lanes` sequences of up to `seq_len` tokens.
 
     For bounded-window archs the pool only needs ``window``-worth of live
     pages per lane (the support-core recycles dead pages — DESIGN.md §2), but
     the block table still addresses the full sequence range.
+
+    Stash knobs left unset (None) are derived from boundary cadence by
+    :func:`repro.core.lane_stash.autotune_stash` (pass ``stash_size=0`` to
+    force the front tier off).  The autotune budget is the pre-stash pool —
+    the stash's own claim is added on top below, so autotuned stashes never
+    shrink the live-page capacity they were sized against.
     """
     pages_per_lane_addr = math.ceil((seq_len + 1) / page_size)
     if cfg.attn_pattern in ("swa", "local_global") and cfg.window:
@@ -151,6 +157,35 @@ def make_paged_config(
             math.ceil(cfg.window / page_size) + 2)
     else:
         live_pages = pages_per_lane_addr
+    if stash_size is None or stash_watermark is None or stash_refill is None:
+        from ..core.lane_stash import autotune_stash
+        recycle = cfg.window if cfg.attn_pattern == "swa" and cfg.window else None
+        pool0 = lanes * live_pages + slack_pages
+        a_size, a_wm, a_rf = autotune_stash(page_size, recycle, lanes, pool0)
+        size_derived = stash_size is None
+        if size_derived:
+            stash_size = a_size
+        if stash_size == 0:
+            # tier off (explicitly, or the pool cannot fund it): derived
+            # knobs take benign defaults, pinned ones ride along unused
+            if stash_watermark is None:
+                stash_watermark = 2
+            if stash_refill is None:
+                stash_refill = 4
+        else:
+            # Derived knobs reconcile AROUND pinned ones so a partial pin
+            # never hands an inconsistent triple to validation: with a
+            # pinned size the derived watermark/refill shrink to fit it;
+            # with a derived size, pinned watermark/refill win and the
+            # stash grows to hold a full refill above the watermark.
+            if stash_watermark is None:
+                stash_watermark = a_wm if size_derived else \
+                    max(1, min(2, stash_size - 2))
+            if stash_refill is None:
+                stash_refill = a_rf if size_derived else \
+                    min(4, stash_size - stash_watermark)
+            if size_derived:
+                stash_size = max(stash_size, stash_watermark + stash_refill)
     n_kv_layers = max(cfg.num_attn_layers, 1)
     # Round the pool up to a multiple of 512 so the page dim shards evenly
     # over any (pod x data) combination of the production meshes.  A lane's

@@ -21,6 +21,14 @@ before -> after for every flag.
                             indexed dims become fully local (no pool-sized
                             collectives); the per-layer read pays a small
                             dp all-reduce instead
+  REPRO_ALLOC_BACKEND=      'jnp' (baseline: the support-core step as plain
+                            XLA ops over HBM-resident metadata) |
+                            'kernel' — ONE fused VPU-only Pallas launch per
+                            HMQ burst with free_stack/owner resident in VMEM
+                            (DESIGN.md §8; needs TPU) |
+                            'kernel-interpret' — same kernel through the
+                            Pallas interpreter (test/CI parity; runs
+                            anywhere, never a production default)
 """
 from __future__ import annotations
 
@@ -34,6 +42,7 @@ class PerfFlags:
     kv_gather_shard: str = "lanes"    # lanes | auto
     moe_local_dispatch: bool = False
     pool_layout: str = "pages"        # pages | layers | pages_hd
+    alloc_backend: str = "jnp"        # jnp | kernel | kernel-interpret
 
     @classmethod
     def from_env(cls) -> "PerfFlags":
@@ -42,6 +51,7 @@ class PerfFlags:
             kv_gather_shard=os.environ.get("REPRO_KV_GATHER_SHARD", "lanes"),
             moe_local_dispatch=os.environ.get("REPRO_MOE_LOCAL_DISPATCH", "0") == "1",
             pool_layout=os.environ.get("REPRO_POOL_LAYOUT", "pages"),
+            alloc_backend=os.environ.get("REPRO_ALLOC_BACKEND", "jnp"),
         )
 
 

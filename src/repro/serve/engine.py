@@ -41,6 +41,9 @@ class EngineStats:
     decode_bursts: int = 0         # decode steps that issued a support-core batch
     stash_hits: int = 0            # boundary pages served by the lane stash
     stash_misses: int = 0          # boundary pages that needed a central malloc
+    # stash_depth_hist[d] = lane-steps an active lane spent at stash depth d
+    # (summed per-step histograms; localizes refill storms — DecodeStats)
+    stash_depth_hist: list = dataclasses.field(default_factory=list)
 
     @property
     def stash_hit_rate(self) -> float:
@@ -71,18 +74,28 @@ class ServingEngine:
 
     def __init__(self, cfg: ArchConfig, kvcfg: PagedKVConfig, params: dict,
                  dtype=jnp.float32,
-                 sched_cfg: Optional[SchedulerConfig] = None):
+                 sched_cfg: Optional[SchedulerConfig] = None,
+                 alloc_backend: Optional[str] = None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
         self.dtype = dtype
         self.sched_cfg = sched_cfg or make_scheduler_config(cfg, kvcfg)
+        # Support-core implementation for every allocator touch this engine
+        # makes (admission, decode burst, release): jnp | kernel |
+        # kernel-interpret.  Resolved ONCE here (env knob
+        # REPRO_ALLOC_BACKEND) so the jitted decode step bakes it in.
+        if alloc_backend is None:
+            from ..perf_flags import current_flags
+            alloc_backend = current_flags().alloc_backend
+        self.alloc_backend = alloc_backend
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
         # fresh empty state: deactivate the synthetic lanes
         self.state = self.state._replace(
             paged=pkv.init_paged_kv(kvcfg),
             tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
-        self._decode = jax.jit(make_decode_step(cfg, kvcfg))
+        self._decode = jax.jit(make_decode_step(cfg, kvcfg,
+                                                alloc_backend=alloc_backend))
         # recurrent admission seeds decode from the last prompt token, so the
         # vocab projection would be dead weight in the jitted prefill
         self._family_prefill = make_family_prefill(
@@ -205,7 +218,7 @@ class ServingEngine:
             kv_lens = jnp.asarray(np.asarray(all_kv_len, np.int32)[order])
             paged, stats = pkv.admit_prefill_many(
                 self.kvcfg, self.state.paged, lanes_arr,
-                ks[perm], vs[perm], kv_lens)
+                ks[perm], vs[perm], kv_lens, backend=self.alloc_backend)
             self.stats.hmq_admit_bursts += 1
             self.stats.alloc_failures += int(stats.failed)
         else:
@@ -269,6 +282,11 @@ class ServingEngine:
         self.stats.decode_bursts += int(stats.bursts)
         self.stats.stash_hits += int(stats.stash_hits)
         self.stats.stash_misses += int(stats.stash_misses)
+        hist = np.asarray(stats.stash_depth_hist)
+        if not self.stats.stash_depth_hist:
+            self.stats.stash_depth_hist = [0] * hist.shape[0]
+        self.stats.stash_depth_hist = [
+            a + int(b) for a, b in zip(self.stats.stash_depth_hist, hist)]
         return np.asarray(self.state.tokens)
 
     # ---------------- completion ----------------
@@ -282,7 +300,8 @@ class ServingEngine:
         """
         pkts = release_packet_array(list(lanes), self.kvcfg.max_lanes)
         paged, _ = pkv.release_packets(self.kvcfg, self.state.paged,
-                                       jnp.asarray(pkts))
+                                       jnp.asarray(pkts),
+                                       backend=self.alloc_backend)
         self.state = self.state._replace(paged=paged)
         if completed:
             self.stats.completed += len(lanes)

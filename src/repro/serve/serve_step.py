@@ -14,10 +14,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.paged_kv import (DecodeStats, PagedKVConfig, PagedKVState,
-                             decode_append, init_paged_kv)
+from ..core.paged_kv import (PagedKVConfig, PagedKVState, decode_append,
+                             empty_decode_stats, init_paged_kv)
 from ..distributed.hints import use_hints
-from ..core.support_core import StepStats
 from ..models.decode import (RecurrentState, decode_hidden, decode_logits,
                              init_recurrent_state)
 from ..models.model_zoo import make_paged_config
@@ -106,8 +105,14 @@ def abstract_serve_state(cfg: ArchConfig, kvcfg: PagedKVConfig, lanes: int,
 
 
 def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
-                     hints=None, unroll: bool = False):
-    """Returns serve_step(params, state) -> (state, logits, DecodeStats)."""
+                     hints=None, unroll: bool = False,
+                     alloc_backend: Optional[str] = None):
+    """Returns serve_step(params, state) -> (state, logits, DecodeStats).
+
+    ``alloc_backend`` selects the support-core implementation for the
+    decode burst (``jnp`` | ``kernel`` | ``kernel-interpret``; None resolves
+    ``REPRO_ALLOC_BACKEND`` at trace time — see DESIGN.md §8).
+    """
     window = recycle_window(cfg)
 
     def _serve_step(params: dict, state: ServeState):
@@ -122,15 +127,12 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
             paged, stats = decode_append(
                 kvcfg, state.paged,
                 new_k.astype(kvcfg.dtype), new_v.astype(kvcfg.dtype),
-                window=window)
+                window=window, backend=alloc_backend)
         else:
             # attention-free (rwkv6): no pages; still advance lane clocks
             paged = state.paged._replace(
                 seq_lens=state.paged.seq_lens + state.paged.active.astype(jnp.int32))
-            z = jnp.zeros((), jnp.int32)
-            stats = DecodeStats(core=StepStats(z, z, z, z, z),
-                                failed=z, refill_failed=z,
-                                stash_hits=z, stash_misses=z, bursts=z)
+            stats = empty_decode_stats(kvcfg)
 
         new_state = ServeState(
             paged=paged, rec=new_rec, tokens=next_tokens,

@@ -4,10 +4,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.packets import OP_MALLOC, OP_NOP
+from repro.core.freelist import FreeListState, init_freelist
+from repro.core.hmq import schedule
+from repro.core.packets import (FREE_ALL, OP_FREE, OP_MALLOC, OP_NOP,
+                                OP_REFILL, RequestQueue)
 from repro.kernels.flash_attention.ops import flash_attention_op
-from repro.kernels.hmq_alloc.ops import hmq_alloc_op
 from repro.kernels.paged_attention.ops import paged_decode_attention_op
+from repro.kernels.support_core.ops import support_core_burst
+from repro.kernels.support_core.ref import support_core_burst_ref
 
 
 @pytest.mark.parametrize("B,KV,G,hd,ps,P,dtype", [
@@ -56,14 +60,41 @@ def test_flash_attention_kernel(rng, Tq, Tk, H, KV, hd, bq, bk, causal,
 @pytest.mark.parametrize("Q,C,N,R,scarce", [
     (16, 2, 32, 4, False), (64, 4, 128, 8, False), (32, 3, 16, 4, True),
 ])
-def test_hmq_alloc_kernel(rng, Q, C, N, R, scarce):
-    op = jnp.asarray(np.where(rng.rand(Q) < 0.7, OP_MALLOC, OP_NOP), jnp.int32)
-    cls = jnp.asarray(rng.randint(0, C, Q), jnp.int32)
-    want = jnp.asarray(rng.randint(1, R + 1, Q), jnp.int32)
-    stack = jnp.asarray(np.stack([rng.permutation(N) for _ in range(C)]), jnp.int32)
-    top = jnp.asarray(rng.randint(2 if scarce else N // 2,
-                                  N // 4 if scarce else N, C), jnp.int32)
-    outs_k = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R)
-    outs_r = hmq_alloc_op(op, cls, want, stack, top, max_per_req=R, impl="ref")
-    for a, b in zip(outs_k, outs_r):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+def test_fused_support_core_kernel(rng, Q, C, N, R, scarce):
+    """The fused burst kernel (interpret) vs its jnp scheduled-step oracle:
+    bit-identical metadata, grants, and grant flags on a mixed queue
+    (mallocs, refills, single frees, FREE_ALL, nops) against a warmed-up
+    pool.  The full multi-step differential suite lives in
+    tests/test_support_core_kernel.py; this is the kernels-layer parity
+    smoke alongside the other Pallas kernels."""
+    caps = [int(c) for c in (rng.randint(2, max(3, N // 4), C) if scarce
+                             else rng.randint(N // 2, N + 1, C))]
+    state = init_freelist(caps)
+    # Warm the pool up through the oracle so frees hit owned blocks.
+    warm = RequestQueue(
+        op=jnp.full((Q,), OP_MALLOC, jnp.int32),
+        lane=jnp.asarray(rng.randint(0, 8, Q), jnp.int32),
+        size_class=jnp.asarray(rng.randint(0, C, Q), jnp.int32),
+        arg=jnp.asarray(rng.randint(1, R + 1, Q), jnp.int32))
+    warm, _ = schedule(warm)
+    state, _, _ = support_core_burst_ref(state, warm, max_blocks_per_req=R)
+
+    ops = rng.choice([OP_MALLOC, OP_REFILL, OP_FREE, OP_FREE, OP_NOP], Q)
+    args = np.where(ops == OP_FREE,
+                    np.where(rng.rand(Q) < 0.5, FREE_ALL, rng.randint(0, N, Q)),
+                    rng.randint(1, R + 2, Q))           # incl. overwide
+    queue = RequestQueue(op=jnp.asarray(ops, jnp.int32),
+                         lane=jnp.asarray(rng.randint(0, 8, Q), jnp.int32),
+                         size_class=jnp.asarray(rng.randint(0, C, Q), jnp.int32),
+                         arg=jnp.asarray(args, jnp.int32))
+    sched, _ = schedule(queue)
+    st_k, blk_k, ok_k = support_core_burst(state, sched, max_blocks_per_req=R,
+                                           interpret=True)
+    st_r, blk_r, ok_r = support_core_burst_ref(state, sched,
+                                               max_blocks_per_req=R)
+    for field in FreeListState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(st_k, field)),
+                                      np.asarray(getattr(st_r, field)),
+                                      err_msg=field)
+    np.testing.assert_array_equal(np.asarray(blk_k), np.asarray(blk_r))
+    np.testing.assert_array_equal(np.asarray(ok_k), np.asarray(ok_r))

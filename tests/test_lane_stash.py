@@ -8,8 +8,8 @@ import pytest
 
 import repro.core.paged_kv as pkv
 from repro.core.freelist import validate_freelist
-from repro.core.lane_stash import (init_stash, stash_pop, stash_push,
-                                   validate_stash_params)
+from repro.core.lane_stash import (autotune_stash, init_stash, stash_pop,
+                                   stash_push, validate_stash_params)
 from repro.core.packets import NO_BLOCK, OP_NOP, empty_queue
 from repro.core.paged_kv import (PagedKVConfig, admit_prefill, decode_append,
                                  init_paged_kv, live_pages, release_lanes,
@@ -282,3 +282,99 @@ def test_emergency_malloc_beats_other_lanes_refill(rng):
     assert int(stats.refill_failed) == 2
     assert st.seq_lens.tolist() == [9, 9]       # both lanes progressed
     validate_paged_kv(cfg, st)
+
+
+# --------------------------------------------------------------------------
+# Stash autotuning (ROADMAP item): knobs derived from boundary cadence,
+# validated against the sim's speedmalloc_stash sweep.
+# --------------------------------------------------------------------------
+
+def test_autotune_stash_valid_and_budgeted():
+    """Autotuned knobs always satisfy the all-or-nothing refill invariant
+    and never claim more than a quarter of the pool across all lanes."""
+    for ps in (4, 8, 16):
+        for window in (None, 24, 128):
+            for lanes in (1, 4, 16):
+                for pool in (8, 64, 512, 4096):
+                    size, wm, rf = autotune_stash(ps, window, lanes, pool)
+                    validate_stash_params(size, wm, rf)
+                    assert lanes * size <= max(pool // 4 + lanes, lanes * 3), \
+                        (ps, window, lanes, pool, size)
+                    if size:
+                        assert wm >= 1 and rf >= 2
+
+
+def test_autotune_stash_tiny_pool_disables_tier():
+    size, wm, rf = autotune_stash(8, None, 8, 32)     # budget 1 < 3
+    assert size == 0
+    validate_stash_params(size, wm, rf)               # benign defaults
+
+
+def test_autotune_stash_sim_sweep():
+    """The sim's speedmalloc_stash policy models central trips as
+    boundaries/refill: the autotuned refill must actually amortize (>= 4x
+    fewer trips than refill-every-boundary) under both lane profiles."""
+    from repro.sim.engine import run_trace_counts
+    from repro.sim.policies import speedmalloc_stash
+
+    n = 64
+    trace = {"thread": np.zeros(n, np.int32), "op": np.ones(n, np.int32),
+             "size_class": np.zeros(n, np.int32),
+             "foreign": np.zeros(n, np.int32)}
+    for window in (None, 64):
+        size, wm, rf = autotune_stash(8, window, 4, 512)
+        assert size > 0
+        tuned = run_trace_counts(speedmalloc_stash(size, rf), trace, 1)
+        naive = run_trace_counts(speedmalloc_stash(size, 1), trace, 1)
+        assert float(tuned.shared_trips) == n / rf
+        assert float(tuned.shared_trips) * 4 <= float(naive.shared_trips)
+        assert float(tuned.fast_hits) == n - n / rf
+
+
+def test_make_paged_config_autotunes_unset_knobs():
+    """make_paged_config derives stash knobs when unset; explicit knobs are
+    untouched; stash_size=0 forces the tier off."""
+    from repro.configs import smoke_config
+    from repro.models import make_paged_config
+
+    cfg = smoke_config("deepseek-7b")
+    auto = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                             dtype=jnp.float32)
+    import math
+    pool0 = 4 * math.ceil(129 / 8) + 8
+    exp = autotune_stash(8, None, 4, pool0)
+    assert (auto.stash_size, auto.stash_watermark, auto.stash_refill) == exp
+    assert auto.stash_size > 0
+    validate_stash_params(auto.stash_size, auto.stash_watermark,
+                          auto.stash_refill)
+    off = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                            dtype=jnp.float32, stash_size=0)
+    assert off.stash_size == 0
+    pinned = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                               dtype=jnp.float32, stash_size=8,
+                               stash_watermark=3, stash_refill=5)
+    assert (pinned.stash_size, pinned.stash_watermark,
+            pinned.stash_refill) == (8, 3, 5)
+    # partial pins reconcile instead of crashing: a pinned watermark wider
+    # than the autotuned stash grows the (derived) size to fit it...
+    part = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                             dtype=jnp.float32, stash_watermark=5)
+    assert part.stash_watermark == 5
+    assert part.stash_size >= 5 + part.stash_refill
+    validate_stash_params(part.stash_size, part.stash_watermark,
+                          part.stash_refill)
+    # ...and derived watermark/refill shrink to fit a pinned size
+    small = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                              dtype=jnp.float32, stash_size=4)
+    assert small.stash_size == 4
+    validate_stash_params(small.stash_size, small.stash_watermark,
+                          small.stash_refill)
+
+
+def test_autotune_swa_rides_warmup_ramp():
+    """SWA lanes are self-sustaining in steady state: the autotuned refill
+    tracks the window ramp, not the full windowless batch."""
+    size_w, _, rf_w = autotune_stash(8, 32, 4, 4096)
+    size_n, _, rf_n = autotune_stash(8, None, 4, 4096)
+    assert rf_w <= rf_n
+    assert size_w <= size_n

@@ -1,0 +1,229 @@
+"""Fused support-core Pallas kernel (DESIGN.md §8): the ``kernel-interpret``
+backend must be bit-identical to the ``jnp`` backend on the full allocator
+surface — FreeListState transitions (stack contents, owner map, every
+counter), ResponseQueue (grants + status), and StepStats — across Q/C/N/R
+shapes, FREE_ALL, double-free, refill-priority, overwide-want, and
+full-stack overflow cases; plus a full-engine equivalence run."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, needs_hypothesis, settings, st
+
+from repro.core.freelist import FreeListState, init_freelist, validate_freelist
+from repro.core.packets import (FREE_ALL, OP_FREE, OP_MALLOC, OP_NOP,
+                                OP_REFILL, make_queue)
+from repro.core.support_core import StepStats, support_core_step
+
+KERNEL = "kernel-interpret"
+
+
+def _assert_step_identical(a, b, ctx=""):
+    sa, ra, ta = a
+    sb, rb, tb = b
+    for field in FreeListState._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(sa, field)),
+                                      np.asarray(getattr(sb, field)),
+                                      err_msg=f"{ctx}: state field {field}")
+    np.testing.assert_array_equal(np.asarray(ra.blocks), np.asarray(rb.blocks),
+                                  err_msg=f"{ctx}: response blocks")
+    np.testing.assert_array_equal(np.asarray(ra.status), np.asarray(rb.status),
+                                  err_msg=f"{ctx}: response status")
+    for f in StepStats._fields:
+        assert int(getattr(ta, f)) == int(getattr(tb, f)), (ctx, f)
+
+
+def _differential_trace(caps, steps, max_per_req):
+    """Run both backends in lockstep over a multi-step trace; assert bitwise
+    identical transitions and validate the invariants on the kernel state."""
+    state_j = init_freelist(caps)
+    state_k = init_freelist(caps)
+    for si, reqs in enumerate(steps):
+        q = make_queue([r[0] for r in reqs], [r[1] for r in reqs],
+                       [r[2] for r in reqs], [r[3] for r in reqs])
+        out_j = support_core_step(state_j, q, max_per_req, backend="jnp")
+        out_k = support_core_step(state_k, q, max_per_req, backend=KERNEL)
+        _assert_step_identical(out_k, out_j, ctx=f"step {si}")
+        state_j, state_k = out_j[0], out_k[0]
+        validate_freelist(state_k)
+
+
+def _random_steps(rng, n_classes, caps, n_steps, max_per_req):
+    """Adversarial queue mix: overwide mallocs, refill-priority mallocs,
+    double frees, frees of never-allocated / out-of-range blocks, FREE_ALL
+    of empty lanes (mirrors the jnp-vs-dense generator in
+    test_support_core.py)."""
+    steps = []
+    for _ in range(n_steps):
+        reqs = []
+        for _ in range(rng.randint(1, 10)):
+            op = rng.choice([OP_MALLOC, OP_REFILL, OP_FREE, OP_FREE, OP_NOP])
+            lane = int(rng.randint(0, 5))
+            cls = int(rng.randint(0, n_classes))
+            if op in (OP_MALLOC, OP_REFILL):
+                arg = int(rng.randint(1, max_per_req + 2))  # incl. overwide
+            else:
+                arg = int(rng.choice([FREE_ALL, FREE_ALL,
+                                      rng.randint(0, max(caps) + 2)]))
+            reqs.append((int(op), lane, cls, arg))
+        steps.append(reqs)
+    return steps
+
+
+def test_kernel_matches_jnp_seeded():
+    """Always-on randomized sweep across Q/C/N/R shapes."""
+    rng = np.random.RandomState(4321)
+    for trial in range(6):
+        n_classes = int(rng.randint(1, 4))
+        caps = [int(rng.randint(2, 12)) for _ in range(n_classes)]
+        r = int(rng.randint(1, 5))
+        steps = _random_steps(rng, n_classes, caps, n_steps=4, max_per_req=r)
+        _differential_trace(caps, steps, max_per_req=r)
+
+
+def test_kernel_matches_jnp_directed_cases():
+    """Directed corners: refill loses to malloc under scarcity, same-step
+    alloc+FREE_ALL, double-free, overwide want, free of unowned/OOB ids."""
+    caps = [3, 2]
+    steps = [
+        # exhaust class 0; lane 1 overwide (fails); same-step free-all
+        [(OP_MALLOC, 0, 0, 2), (OP_MALLOC, 1, 0, 4), (OP_MALLOC, 2, 0, 2),
+         (OP_FREE, 0, 0, FREE_ALL)],
+        # double-free one id + free unowned id + FREE_ALL of empty lane
+        [(OP_FREE, 0, 0, 2), (OP_FREE, 0, 0, 2), (OP_FREE, 3, 0, 1),
+         (OP_FREE, 4, 1, FREE_ALL)],
+        # cross-class FREE_ALL for the same lane, plus fresh mallocs
+        [(OP_MALLOC, 2, 1, 2), (OP_FREE, 2, 0, FREE_ALL),
+         (OP_FREE, 2, 1, FREE_ALL)],
+        # refill-priority malloc loses to a plain malloc under scarcity,
+        # then the refill-granted lane is FREE_ALL'd in the same step
+        [(OP_REFILL, 1, 0, 3), (OP_MALLOC, 0, 0, 1),
+         (OP_FREE, 1, 0, FREE_ALL)],
+    ]
+    _differential_trace(caps, steps, max_per_req=3)
+
+
+def test_kernel_matches_jnp_full_stack_overflow():
+    """Full-stack case: drain the pool completely, free EVERYTHING back in
+    one step (stack returns to brim-full), then overdraw again — the
+    compaction scatter must land every id without clobbering the stack."""
+    caps = [4, 6]
+    steps = [
+        # drain both classes completely across lanes
+        [(OP_MALLOC, 0, 0, 2), (OP_MALLOC, 1, 0, 2),
+         (OP_MALLOC, 0, 1, 3), (OP_MALLOC, 1, 1, 3)],
+        # overdraw the now-empty pools (all fail)
+        [(OP_MALLOC, 2, 0, 1), (OP_MALLOC, 2, 1, 1)],
+        # free everything in ONE step: stack tops return to capacity
+        [(OP_FREE, 0, 0, FREE_ALL), (OP_FREE, 1, 0, FREE_ALL),
+         (OP_FREE, 0, 1, FREE_ALL), (OP_FREE, 1, 1, FREE_ALL)],
+        # and the brim-full stack serves a fresh burst
+        [(OP_MALLOC, 3, 0, 4), (OP_MALLOC, 3, 1, 4)],
+    ]
+    _differential_trace(caps, steps, max_per_req=4)
+
+
+def test_kernel_matches_jnp_wide_responses():
+    """R wider than any class capacity: grants clamp to availability via
+    failure, never via partial grants."""
+    caps = [2]
+    steps = [[(OP_MALLOC, 0, 0, 2), (OP_MALLOC, 1, 0, 8)],
+             [(OP_FREE, 0, 0, FREE_ALL)],
+             [(OP_MALLOC, 1, 0, 2)]]
+    _differential_trace(caps, steps, max_per_req=8)
+
+
+@needs_hypothesis
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_kernel_matches_jnp_hypothesis(data):
+    """Hypothesis-generated request queues: fused kernel bit-identical to
+    the jnp backend across multi-step traces."""
+    n_classes = data.draw(st.integers(1, 3))
+    caps = [data.draw(st.integers(2, 10)) for _ in range(n_classes)]
+    r = data.draw(st.integers(1, 4))
+    n_steps = data.draw(st.integers(1, 4))
+    steps = []
+    for _ in range(n_steps):
+        reqs = []
+        for _ in range(data.draw(st.integers(1, 8))):
+            op = data.draw(st.sampled_from(
+                [OP_MALLOC, OP_REFILL, OP_FREE, OP_NOP]))
+            lane = data.draw(st.integers(0, 4))
+            cls = data.draw(st.integers(0, n_classes - 1))
+            if op in (OP_MALLOC, OP_REFILL):
+                arg = data.draw(st.integers(1, r + 1))     # incl. overwide
+            else:
+                arg = data.draw(st.sampled_from(
+                    [FREE_ALL, 0, 1, max(caps), max(caps) + 1]))
+            reqs.append((op, lane, cls, arg))
+        steps.append(reqs)
+    _differential_trace(caps, steps, max_per_req=r)
+
+
+# --------------------------------------------------------------------------
+# Full-engine equivalence: the serve loop under backend="kernel-interpret"
+# must be bit-identical to backend="jnp" — admission, every decode burst,
+# and packet-routed release all dispatch through the kernel.
+# --------------------------------------------------------------------------
+
+def test_engine_equivalence_kernel_backend(rng):
+    from repro.configs import smoke_config
+    from repro.models import init_params, make_paged_config
+    from repro.serve.engine import ServingEngine
+
+    cfg = smoke_config("deepseek-7b")
+    params = init_params(cfg, dtype=jnp.float32)
+    kvcfg = make_paged_config(cfg, seq_len=48, lanes=2, page_size=4,
+                              dtype=jnp.float32, stash_size=4,
+                              stash_watermark=1, stash_refill=2)
+    engines = {b: ServingEngine(cfg, kvcfg, params, dtype=jnp.float32,
+                                alloc_backend=b)
+               for b in ("jnp", KERNEL)}
+    prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
+               for n in (7, 5)]
+    for b, eng in engines.items():
+        assert eng.alloc_backend == b
+        for lane, p in enumerate(prompts):
+            assert eng.admit(lane, p)
+    for step in range(6):
+        toks = {b: eng.step() for b, eng in engines.items()}
+        np.testing.assert_array_equal(toks["jnp"], toks[KERNEL],
+                                      err_msg=f"decode step {step}")
+    for eng in engines.values():
+        eng.release([0])
+    pj, pk = (engines[b].state.paged for b in ("jnp", KERNEL))
+    for field in FreeListState._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(pj.alloc, field)),
+            np.asarray(getattr(pk.alloc, field)), err_msg=field)
+    np.testing.assert_array_equal(np.asarray(pj.block_tables),
+                                  np.asarray(pk.block_tables))
+    np.testing.assert_array_equal(np.asarray(pj.stash.pages),
+                                  np.asarray(pk.stash.pages))
+    np.testing.assert_array_equal(np.asarray(pj.stash.depth),
+                                  np.asarray(pk.stash.depth))
+    validate_freelist(pk.alloc)
+    sj, sk = engines["jnp"].stats, engines[KERNEL].stats
+    assert (sj.decode_bursts, sj.stash_hits, sj.stash_misses,
+            sj.alloc_failures, sj.stash_depth_hist) == \
+           (sk.decode_bursts, sk.stash_hits, sk.stash_misses,
+            sk.alloc_failures, sk.stash_depth_hist)
+
+
+def test_unknown_backend_rejected():
+    state = init_freelist([4])
+    q = make_queue([OP_MALLOC], [0], [0], [1])
+    with pytest.raises(ValueError, match="alloc backend"):
+        support_core_step(state, q, 1, backend="magic")
+
+
+def test_env_knob_resolves_backend(monkeypatch):
+    """REPRO_ALLOC_BACKEND drives the default dispatch (and stays
+    bit-identical to an explicit backend=)."""
+    state = init_freelist([4, 4])
+    q = make_queue([OP_MALLOC, OP_FREE], [0, 1], [0, 1], [2, FREE_ALL])
+    monkeypatch.setenv("REPRO_ALLOC_BACKEND", KERNEL)
+    out_env = support_core_step(state, q, 2)
+    out_exp = support_core_step(state, q, 2, backend=KERNEL)
+    _assert_step_identical(out_env, out_exp, ctx="env knob")
