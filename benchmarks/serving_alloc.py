@@ -12,7 +12,14 @@ A ``support_core_step_us`` microbench times one HMQ burst per allocator
 backend (DESIGN.md §8: ``jnp`` vs the fused Pallas kernel; on CPU hosts the
 kernel runs through the Pallas interpreter, so the entry tracks the
 kernel-vs-jnp burst cost across PRs and becomes the real measurement on
-TPU, where ``kernel`` replaces ``kernel-interpret``).  Writes
+TPU, where ``kernel`` replaces ``kernel-interpret``).
+
+Multi-tenant telemetry (DESIGN.md §9): every run reports the per-tenant
+StepStats breakdown (``per_tenant``) and HMQ ``burst_occupancy``; a third
+run on a hybrid arch (zamba2) drives THREE tenants — KV pages, state slots,
+and the scratch workspace — through the one support-core, and a
+``support_core_step_us_per_tenant`` microbench times a single-tenant burst
+per tenant through the AllocService client API.  Writes
 ``BENCH_serving.json`` so the perf trajectory is machine-readable across
 PRs.
 """
@@ -82,6 +89,39 @@ def _bench_support_core_step(backends=None, iters: int = 8) -> dict:
     return out
 
 
+def _bench_per_tenant_step(iters: int = 8) -> dict:
+    """µs per single-tenant HMQ burst through the AllocService client API.
+
+    Times the same 16-lane malloc+free_all burst once per tenant (jnp
+    backend), so the per-tenant cost of sharing one support-core is tracked
+    across PRs alongside the aggregate ``support_core_step_us``.
+    """
+    from repro.alloc import AllocService
+
+    svc = AllocService(backend="jnp")
+    svc.register_tenant("kv_pages", capacity=1024)
+    svc.register_tenant("state_slots", capacity=64)
+    svc.register_tenant("scratch", capacity=64)
+    state = svc.init_state()
+    lanes = jnp.arange(16, dtype=jnp.int32)
+
+    out = {}
+    for tenant in svc.tenants:
+        def step(s, t=tenant):
+            b = svc.new_burst()
+            b.malloc(t, lanes, 1)
+            b.free_all(t, lanes)
+            return svc.commit(s, b, max_blocks_per_req=1)[0]
+
+        fn = jax.jit(step)
+        jax.block_until_ready(fn(state))               # compile
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            jax.block_until_ready(fn(state))
+        out[tenant.name] = (time.perf_counter() - t0) / iters * 1e6
+    return out
+
+
 def _run_once(cfg, params, stash: bool) -> dict:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
@@ -105,6 +145,16 @@ def _run_once(cfg, params, stash: bool) -> dict:
     a = eng.state.paged.alloc
     # first decode step includes the decode compile; report steady state
     steady_us = float(np.mean(decode_us[1:])) if len(decode_us) > 1 else 0.0
+    # per-tenant: merge the cumulative burst breakdown (EngineStats) with
+    # the end-state occupancy/counter snapshot (AllocService report)
+    per_tenant = {}
+    for name, rep in eng.tenant_report().items():
+        acc = s.tenants.get(name, {})
+        per_tenant[name] = {**rep,
+                            "burst_mallocs": acc.get("mallocs", 0),
+                            "burst_failed": acc.get("failed", 0),
+                            "blocks_allocated": acc.get("blocks_allocated", 0),
+                            "blocks_freed": acc.get("blocks_freed", 0)}
     return {
         "finished": len(sched.finished),
         "unserved": len(sched.waiting),
@@ -113,6 +163,8 @@ def _run_once(cfg, params, stash: bool) -> dict:
         "steady_us": steady_us,
         "stats": s,
         "alloc": a,
+        "per_tenant": per_tenant,
+        "burst_occupancy": s.burst_occupancy,
     }
 
 
@@ -126,6 +178,13 @@ def run() -> list[str]:
     before = _run_once(cfg, params, stash=False)   # central-only reference
     after = _run_once(cfg, params, stash=True)     # the two-tier allocator
     burst_us = _bench_support_core_step()
+    tenant_us = _bench_per_tenant_step()
+
+    # THREE tenants through one support-core: a hybrid arch carries KV
+    # pages + recurrent-state slots + the scratch workspace (DESIGN.md §9).
+    cfg3 = smoke_config("zamba2-1.2b")
+    params3 = init_params(cfg3, dtype=jnp.float32)
+    three = _run_once(cfg3, params3, stash=True)
 
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
@@ -147,6 +206,16 @@ def run() -> list[str]:
         "stash_depth_hist": s.stash_depth_hist,
         # --- support-core burst cost per allocator backend (DESIGN.md §8) ---
         "support_core_step_us": burst_us,
+        # --- multi-tenant client API (DESIGN.md §9) ---
+        "support_core_step_us_per_tenant": tenant_us,
+        "per_tenant": after["per_tenant"],
+        "burst_occupancy": after["burst_occupancy"],
+        "multi_tenant_zamba2": {
+            "arch": "zamba2-1.2b",
+            "requests": three["finished"],
+            "per_tenant": three["per_tenant"],
+            "burst_occupancy": three["burst_occupancy"],
+        },
         # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
         "admitted": s.admitted,
@@ -175,4 +244,10 @@ def run() -> list[str]:
                 "us per HMQ burst, jnp backend ("
                 + " ".join(f"{k}={v:.0f}us" for k, v in burst_us.items())
                 + ")"),
+        csv_row("serving/multi_tenant", len(three["per_tenant"]),
+                "tenants on one support-core (zamba2): "
+                + " ".join(f"{n}={d['used']}/{d['quota']}used,"
+                           f"{d['alloc_count']}allocs"
+                           for n, d in three["per_tenant"].items())
+                + f" occupancy={three['burst_occupancy']:.2f}"),
     ]

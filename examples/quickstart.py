@@ -1,8 +1,10 @@
 """Quickstart: the SpeedMalloc support-core, end to end, in 60 seconds.
 
-1. drive the batched allocator directly (HMQ semantics),
+1. drive the support-core through its client API (`repro.alloc`):
+   named tenants, typed burst ops, ticket resolution, pluggable policies,
 2. train a tiny LM a few steps,
-3. serve it through the SpeedMalloc paged-KV engine.
+3. serve it through the SpeedMalloc paged-KV engine (three tenants on one
+   support-core).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -15,19 +17,40 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# --- 1. the support-core itself -------------------------------------------
-from repro.core import (FREE_ALL, OP_FREE, OP_MALLOC, init_freelist,
-                        make_queue, support_core_step)
+# --- 1. the support-core, through the client API (DESIGN.md §9) -----------
+from repro.alloc import AllocService
 
-state = init_freelist([8, 16])          # two size classes (Fig. 6 style)
-queue = make_queue(                     # one HMQ batch: 3 mallocs + 1 free
-    ops=[OP_MALLOC, OP_MALLOC, OP_MALLOC, OP_FREE],
-    lanes=[0, 1, 0, 1], size_classes=[0, 0, 1, 0], args=[2, 1, 4, FREE_ALL])
-state, resp, stats = support_core_step(state, queue, max_blocks_per_req=4)
-print("support-core: blocks granted per request:")
-print(np.asarray(resp.blocks))
-print(f"  mallocs={int(stats.mallocs)} frees={int(stats.frees)} "
-      f"failed={int(stats.failed)}\n")
+svc = AllocService()                       # policy/backend from env knobs
+kv = svc.register_tenant("kv_pages", capacity=8)
+ws = svc.register_tenant("workspace", capacity=16)
+state = svc.init_state()                   # segregated metadata, all tenants
+
+burst = svc.new_burst()                    # ONE HMQ batch: 3 mallocs + 1 free
+t_a = burst.malloc(kv, lane=0, n=2)
+t_b = burst.malloc(kv, lane=1, n=1)
+t_w = burst.malloc(ws, lane=0, n=4)
+t_f = burst.free_all(kv, lane=1)           # deferred: allocatable next burst
+state, res = svc.commit(state, burst, max_blocks_per_req=4)
+
+print("support-core: blocks granted per ticket:")
+print("  lane0 kv:", np.asarray(res.blocks_for(t_a))[0].tolist(),
+      " lane1 kv:", np.asarray(res.blocks_for(t_b))[0].tolist(),
+      " lane0 ws:", np.asarray(res.blocks_for(t_w))[0].tolist())
+s = res.stats
+print(f"  mallocs={int(s.mallocs)} frees={int(s.frees)} "
+      f"failed={int(s.failed)}")
+print(f"  per-tenant used: "
+      f"{ {t.name: int(s.per_tenant.used[t.size_class]) for t in svc.tenants} }")
+
+# the same burst under a different central design: address-ordered first fit
+bm = AllocService(policy="bitmap")
+bm_kv = bm.register_tenant("kv_pages", capacity=8)
+b2 = bm.new_burst()
+t2 = b2.malloc(bm_kv, lane=0, n=2)
+_, res2 = bm.commit(bm.init_state(), b2, max_blocks_per_req=4)
+print(f"  same client code, bitmap policy grants "
+      f"{np.asarray(res2.blocks_for(t2))[0].tolist()} "
+      f"(freelist granted {np.asarray(res.blocks_for(t_a))[0].tolist()})\n")
 
 # --- 2. train a reduced model a few steps ----------------------------------
 from repro.configs import smoke_config
@@ -59,3 +82,7 @@ a = eng.state.paged.alloc
 print(f"\nserved 8 tokens: {out}")
 print(f"allocator: allocs={int(a.alloc_count[0])} live_pages={int(a.used[0])} "
       f"peak={int(a.peak_used[0])}")
+print("engine tenants on the one support-core:")
+for name, rep in eng.tenant_report().items():
+    print(f"  {name}: used={rep['used']}/{rep['quota']} "
+          f"allocs={rep['alloc_count']}")

@@ -2,9 +2,14 @@
 paged KV cache with Poisson-ish arrivals and Pareto lengths (Larson-style
 server pattern).  Requests flow through the request-lifecycle scheduler:
 waiting queue -> prefill buckets -> running lanes -> packet-routed release,
-with one support-core HMQ burst per admission batch (DESIGN.md §3).
+with one support-core HMQ burst per admission batch (DESIGN.md §3).  Every
+allocator touch goes through the `repro.alloc` client API — the final
+telemetry includes the per-tenant breakdown (KV pages, state slots, scratch
+workspace sharing the one support-core — DESIGN.md §9).
 
 Run:  PYTHONPATH=src python examples/serve_paged.py [--arch mixtral-8x7b]
+      (try --arch zamba2-1.2b for all three tenants, or
+       --alloc-policy bitmap for the first-fit AllocatorPolicy)
 """
 import sys
 from pathlib import Path

@@ -1,0 +1,18 @@
+"""`repro.alloc`: the first-class multi-tenant client API of the
+SpeedMalloc support-core (DESIGN.md §9).
+
+- :mod:`repro.alloc.service`  -- AllocService / BurstBuilder / tickets / tenants
+- :mod:`repro.alloc.policies` -- AllocatorPolicy protocol + free-list and
+  bitmap central designs (``REPRO_ALLOC_POLICY``)
+"""
+from .policies import (ALLOC_POLICIES, AllocatorPolicy, BitmapPolicy,
+                       FreeListPolicy, get_policy, register_policy)
+from .service import (AllocService, BurstBuilder, BurstResult, BurstStats,
+                      TenantHandle, TenantStats, Ticket, empty_burst_stats)
+
+__all__ = [
+    "ALLOC_POLICIES", "AllocatorPolicy", "BitmapPolicy", "FreeListPolicy",
+    "get_policy", "register_policy",
+    "AllocService", "BurstBuilder", "BurstResult", "BurstStats",
+    "TenantHandle", "TenantStats", "Ticket", "empty_burst_stats",
+]

@@ -1,0 +1,234 @@
+"""Pluggable central-allocator policies behind one protocol (DESIGN.md §9).
+
+The paper argues a *general-purpose* support-core can "adopt new allocator
+designs" without touching clients — unlike fixed-function accelerators
+(Mallacc, Memento).  This module is that claim made executable: every client
+talks to the support-core through :class:`repro.alloc.AllocService`, and the
+service runs whichever :class:`AllocatorPolicy` it was built with.  A policy
+owns ONLY the scheduled-step body — how an already-``hmq.schedule``\\ d burst
+of grants and frees transforms the segregated metadata.  HMQ scheduling,
+response routing, gating, ticket resolution, and telemetry all live in the
+service and are policy-independent.
+
+Two implementations prove the seam is real:
+
+* :class:`FreeListPolicy` — the paper design: per-class LIFO free stacks
+  (§5.1, Fig. 6), batched with prefix sums.  This is the PR-3 scheduled-step
+  body unchanged, satisfied by BOTH backends: the plain-jnp phase pipeline
+  and the fused VMEM-resident Pallas kernel (``kernel`` /
+  ``kernel-interpret``), which are differential-tested bit-identical.
+* :class:`BitmapPolicy` — a deliberately different central design in the
+  spirit of non-blocking-buddy / bitmap allocators (Marotta et al.): the
+  free set is the ``owner < 0`` bitmap, allocation is *address-ordered
+  first fit* (each grant takes the lowest free ids of its class), and the
+  free stack is rebuilt ascending from the bitmap each burst.  Same grant /
+  fail / counter semantics as the free-list policy — the grant scan depends
+  only on per-class availability — but a different block-id discipline, so
+  any client code that secretly assumed LIFO ids breaks loudly under the
+  ``policy-parity`` CI leg.
+
+Policies must preserve the shared burst contract::
+
+    step_scheduled(state, sched, max_blocks_per_req, backend)
+        -> (new_state, blocks [Q, R], ok [Q])      # in SCHEDULED order
+
+with the :class:`~repro.core.freelist.FreeListState` invariants I1–I4 intact
+after every step, identical grant/fail sets for identical availability, and
+the deferred-free semantics of §5.2 (this step's frees serve next step's
+mallocs).  ``REPRO_ALLOC_POLICY`` selects the process default
+(:mod:`repro.perf_flags`).
+"""
+from __future__ import annotations
+
+from typing import Protocol, Sequence, runtime_checkable
+
+import jax.numpy as jnp
+
+from ..core.freelist import FreeListState, init_freelist
+from ..core.packets import (NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
+                            RequestQueue)
+from ..core.support_core import deferred_free_mask, grant_scan
+
+#: Valid values for the ``policy`` argument / ``REPRO_ALLOC_POLICY`` knob.
+ALLOC_POLICIES = ("freelist", "bitmap")
+
+
+@runtime_checkable
+class AllocatorPolicy(Protocol):
+    """The central-allocator seam: one scheduled HMQ burst over the metadata.
+
+    ``backends`` lists the accepted ``backend`` values (a policy may have
+    hardware-specialized implementations; the free-list policy has the fused
+    Pallas kernel, the bitmap policy is jnp-only).
+    """
+
+    name: str
+    backends: tuple[str, ...]
+
+    def init(self, capacities: Sequence[int]) -> FreeListState:
+        """Fresh metadata for the given per-class (per-tenant) capacities."""
+        ...
+
+    def step_scheduled(
+        self,
+        state: FreeListState,
+        sched: RequestQueue,
+        max_blocks_per_req: int,
+        backend: str,
+    ) -> tuple[FreeListState, jnp.ndarray, jnp.ndarray]:
+        """Process an already-scheduled queue; returns scheduled-order
+        ``(new_state, blocks [Q, R], ok [Q])``."""
+        ...
+
+
+class FreeListPolicy:
+    """Per-class LIFO free stacks (the paper's design, §5.1).
+
+    The scheduled-step body formerly hard-wired into
+    ``core.support_core.support_core_step`` — now one policy among several.
+    Backend ``jnp`` is the plain phase pipeline; ``kernel`` /
+    ``kernel-interpret`` run the whole burst as ONE fused VPU-only Pallas
+    launch with the metadata VMEM-resident (DESIGN.md §8).
+    """
+
+    name = "freelist"
+    backends = ("jnp", "kernel", "kernel-interpret")
+
+    def init(self, capacities: Sequence[int]) -> FreeListState:
+        return init_freelist(capacities)
+
+    def step_scheduled(self, state, sched, max_blocks_per_req, backend):
+        if backend == "jnp":
+            from ..core.support_core import _step_scheduled_jnp
+            return _step_scheduled_jnp(state, sched, max_blocks_per_req)
+        from ..kernels.support_core.ops import support_core_burst
+        return support_core_burst(
+            state, sched, max_blocks_per_req=max_blocks_per_req,
+            interpret=(backend == "kernel-interpret"))
+
+
+class BitmapPolicy:
+    """Address-ordered first-fit over the owner bitmap (jnp only).
+
+    The free set of class ``c`` is ``owner[c] < 0`` restricted to real ids
+    (``id < capacity[c]``); a granted request takes the LOWEST free ids of
+    its class, and the free stack is rebuilt in ascending id order after the
+    free phase — the stack is a cache of the bitmap, not the source of
+    truth.  Grant/fail sets, counters, and deferred-free semantics are
+    identical to :class:`FreeListPolicy` (the grant scan sees the same
+    per-class availability); only the block-id discipline differs
+    (first-fit vs LIFO), which is exactly what the differential client-API
+    suite checks: same semantics through the same service, different ids.
+    """
+
+    name = "bitmap"
+    backends = ("jnp",)
+
+    def init(self, capacities: Sequence[int]) -> FreeListState:
+        # Ascending stack == the bitmap's first-fit order from step one.
+        return init_freelist(capacities)
+
+    def step_scheduled(self, state, sched, max_blocks_per_req, backend):
+        if backend != "jnp":
+            raise ValueError(
+                f"policy 'bitmap' has no {backend!r} backend (jnp only)")
+        C, N = state.num_classes, state.max_capacity
+        Q, R = sched.capacity, max_blocks_per_req
+
+        is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+        is_free = sched.op == OP_FREE
+        want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)
+        want = jnp.where(want <= R, want, 0)
+        cls = jnp.clip(sched.size_class, 0, C - 1)
+        onehot = (jnp.arange(C, dtype=jnp.int32)[None, :] == cls[:, None])
+
+        # ---- free bitmap -> ascending rank table ----
+        blk_ids = jnp.arange(N, dtype=jnp.int32)
+        real = blk_ids[None, :] < state.capacity[:, None]                # [C, N]
+        free_bm = (state.owner < 0) & real
+        rank = jnp.cumsum(free_bm, axis=1, dtype=jnp.int32) - free_bm
+        class_rows = jnp.broadcast_to(
+            jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
+        # nth_free[c, r] = r-th lowest free id of class c
+        nth_free = jnp.full((C, N), NO_BLOCK, jnp.int32).at[
+            class_rows.reshape(-1),
+            jnp.where(free_bm, rank, N).reshape(-1)].set(
+            jnp.broadcast_to(blk_ids[None, :], (C, N)).reshape(-1),
+            mode="drop")
+
+        # ---- grant scan: the SHARED recurrence (availability free_top ==
+        # popcount(free_bm) by invariant I3, so the ok/fail pattern is
+        # policy-independent by construction, not by copy-paste) ----
+        ok, my_goff = grant_scan(state.free_top, want, onehot, is_malloc)
+        fail = is_malloc & ~ok
+        granted = jnp.where(ok, want, 0)
+
+        # First fit: request i takes ranks [my_goff, my_goff + granted).
+        j = jnp.arange(R, dtype=jnp.int32)[None, :]
+        take = ok[:, None] & (j < granted[:, None])                      # [Q, R]
+        pos = jnp.where(take, my_goff[:, None] + j, 0)
+        blocks = nth_free[cls[:, None], pos]
+        blocks = jnp.where(take, blocks, NO_BLOCK)
+
+        flat_cls = jnp.broadcast_to(cls[:, None], (Q, R)).reshape(-1)
+        flat_take = take.reshape(-1)
+        owner = state.owner.at[
+            jnp.where(flat_take, flat_cls, C),
+            jnp.where(flat_take, blocks.reshape(-1), N)].set(
+            jnp.broadcast_to(sched.lane[:, None], (Q, R)).reshape(-1),
+            mode="drop")
+
+        taken_per_class = jnp.sum(granted[:, None] * onehot, axis=0)
+        top_after_alloc = state.free_top - taken_per_class
+        used_after_alloc = state.used + taken_per_class
+        peak = jnp.maximum(state.peak_used, used_after_alloc)
+
+        # ---- free phase: the SHARED deferred free mask ----
+        free_mask = deferred_free_mask(sched, owner, cls, onehot, is_free)
+        freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
+        owner = jnp.where(free_mask, -1, owner)
+
+        # ---- rebuild the stack ascending from the post-free bitmap ----
+        final_free = (owner < 0) & real
+        final_rank = jnp.cumsum(final_free, axis=1, dtype=jnp.int32) - final_free
+        new_stack = jnp.full((C, N), NO_BLOCK, jnp.int32).at[
+            class_rows.reshape(-1),
+            jnp.where(final_free, final_rank, N).reshape(-1)].set(
+            jnp.broadcast_to(blk_ids[None, :], (C, N)).reshape(-1),
+            mode="drop")
+
+        new_state = FreeListState(
+            free_stack=new_stack,
+            free_top=top_after_alloc + freed_per_class,
+            owner=owner,
+            capacity=state.capacity,
+            alloc_count=state.alloc_count + taken_per_class,
+            free_count=state.free_count + freed_per_class,
+            fail_count=state.fail_count + jnp.sum(
+                fail[:, None] * onehot, axis=0),
+            used=used_after_alloc - freed_per_class,
+            peak_used=peak,
+        )
+        return new_state, blocks, ok.astype(jnp.int32)
+
+
+_POLICIES: dict[str, AllocatorPolicy] = {
+    "freelist": FreeListPolicy(),
+    "bitmap": BitmapPolicy(),
+}
+
+
+def get_policy(name: str) -> AllocatorPolicy:
+    """Resolve a policy by name (built-ins plus ``register_policy`` entries)."""
+    try:
+        return _POLICIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown alloc policy {name!r}; expected one of "
+            f"{tuple(_POLICIES)}") from None
+
+
+def register_policy(policy: AllocatorPolicy) -> None:
+    """Register a custom :class:`AllocatorPolicy` (the adopt-new-designs
+    extension point; replaces an existing entry with the same name)."""
+    _POLICIES[policy.name] = policy

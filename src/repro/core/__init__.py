@@ -5,34 +5,44 @@
 - :mod:`repro.core.freelist`     -- segregated free-list metadata (§5.1, Fig. 6)
 - :mod:`repro.core.support_core` -- centralized batched allocator step (§3-5)
 - :mod:`repro.core.paged_kv`     -- paged KV cache on the support-core (DESIGN §2)
+
+Clients should talk to the support-core through :mod:`repro.alloc` (the
+AllocService / BurstBuilder / tenant API — DESIGN.md §9); the raw
+``support_core_step`` entry point here is a deprecated thin wrapper over it.
 """
-from .freelist import FreeListState, init_freelist, num_free, validate_freelist
+from .freelist import (FreeListState, FreelistInvariantError, init_freelist,
+                       num_free, validate_freelist)
 from .hmq import max_safe_lanes, queue_occupancy, round_robin_rank, schedule
 from .lane_stash import (LaneStashState, autotune_stash, below_watermark,
                          init_stash, stash_clear, stash_pop, stash_push,
                          stash_push_batch, validate_stash_params)
 from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
                       RequestQueue, ResponseQueue, empty_queue, make_queue)
-from .paged_kv import (KV_CLASS, STATE_CLASS, DecodeStats, PagedKVConfig,
+from .paged_kv import (KV_CLASS, KV_TENANT, SCRATCH_TENANT, STATE_CLASS,
+                       STATE_TENANT, DecodeStats, PagedKVConfig,
                        PagedKVState, admit_prefill, admit_prefill_many,
                        decode_append, empty_decode_stats, gather_kv,
                        init_paged_kv, kv_pages_in_use, live_pages,
-                       release_lanes, release_packets, stash_depth_histogram,
+                       num_alloc_classes, paged_service, release_lanes,
+                       release_packets, stash_depth_histogram,
                        validate_paged_kv)
 from .support_core import ALLOC_BACKENDS, StepStats, support_core_step
 
 __all__ = [
-    "FreeListState", "init_freelist", "num_free", "validate_freelist",
+    "FreeListState", "FreelistInvariantError", "init_freelist", "num_free",
+    "validate_freelist",
     "max_safe_lanes", "queue_occupancy", "round_robin_rank", "schedule",
     "LaneStashState", "autotune_stash", "below_watermark", "init_stash",
     "stash_clear", "stash_pop", "stash_push", "stash_push_batch",
     "validate_stash_params",
     "FREE_ALL", "NO_BLOCK", "NO_LANE", "OP_FREE", "OP_MALLOC", "OP_NOP",
     "RequestQueue", "ResponseQueue", "empty_queue", "make_queue",
-    "KV_CLASS", "STATE_CLASS", "DecodeStats", "PagedKVConfig", "PagedKVState",
+    "KV_CLASS", "STATE_CLASS", "KV_TENANT", "STATE_TENANT", "SCRATCH_TENANT",
+    "DecodeStats", "PagedKVConfig", "PagedKVState",
     "admit_prefill", "admit_prefill_many", "decode_append",
     "empty_decode_stats", "gather_kv", "init_paged_kv", "kv_pages_in_use",
-    "live_pages", "release_lanes", "release_packets",
+    "live_pages", "num_alloc_classes", "paged_service",
+    "release_lanes", "release_packets",
     "stash_depth_histogram", "validate_paged_kv",
     "ALLOC_BACKENDS", "StepStats", "support_core_step",
 ]

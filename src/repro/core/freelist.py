@@ -56,6 +56,40 @@ class FreeListState(NamedTuple):
     def max_capacity(self) -> int:
         return self.free_stack.shape[1]
 
+    def debug_summary(self, tenant_names: Sequence[str] | None = None,
+                      stash_depth=None) -> str:
+        """Human-readable per-class (per-tenant) metadata snapshot.
+
+        One line per size class with capacity / free / used / peak and the
+        lifetime counters, so an invariant or tenant-quota failure reads as
+        a report instead of a bare assert.  ``tenant_names`` labels the
+        classes (from ``AllocService.tenant_names()``); ``stash_depth`` is
+        the optional ``[max_lanes]`` lane-stash depth vector, summarized as
+        total stashed blocks.
+        """
+        ft = np.asarray(self.free_top)
+        caps = np.asarray(self.capacity)
+        used = np.asarray(self.used)
+        peak = np.asarray(self.peak_used)
+        ac = np.asarray(self.alloc_count)
+        fc = np.asarray(self.free_count)
+        xc = np.asarray(self.fail_count)
+        owner = np.asarray(self.owner)
+        lines = []
+        for c in range(self.num_classes):
+            name = tenant_names[c] if tenant_names and c < len(tenant_names) \
+                else f"class{c}"
+            owned = int((owner[c, :caps[c]] >= 0).sum())
+            lines.append(
+                f"  [{c}] {name}: used {used[c]}/{caps[c]} (quota), "
+                f"free_top={ft[c]} owned={owned} peak={peak[c]} | "
+                f"allocs={ac[c]} frees={fc[c]} fails={xc[c]}")
+        if stash_depth is not None:
+            sd = np.asarray(stash_depth)
+            lines.append(f"  lane stash: {int(sd.sum())} blocks across "
+                         f"{int((sd > 0).sum())} lanes (max depth {int(sd.max(initial=0))})")
+        return "\n".join(lines)
+
 
 def init_freelist(capacities: Sequence[int]) -> FreeListState:
     """Create a fresh free list with the given per-class block capacities.
@@ -89,12 +123,23 @@ def num_free(state: FreeListState) -> jnp.ndarray:
     return state.free_top
 
 
+class FreelistInvariantError(AssertionError):
+    """An allocator invariant (I1–I5) failed.
+
+    Subclasses ``AssertionError`` for backward compatibility with callers
+    that catch the old bare asserts, but carries WHICH invariant failed and
+    the full :meth:`FreeListState.debug_summary` snapshot, so a tenant-quota
+    or partition bug fails with a readable report.
+    """
+
+
 def validate_freelist(
     state: FreeListState,
     stash_pages=None,
     stash_depth=None,
     in_use=None,
     stash_class: int = 0,
+    tenant_names: Sequence[str] | None = None,
 ) -> None:
     """Host-side invariant check (tests / debugging only; not jittable).
 
@@ -111,23 +156,60 @@ def validate_freelist(
     arrays of :class:`repro.core.lane_stash.LaneStashState`.  ``in_use`` is an
     optional ``[N]`` bool of blocks referenced by consumers (e.g. block
     tables); when given, the three-way partition is checked exactly.
+
+    Failures raise :class:`FreelistInvariantError` naming the invariant and
+    attaching the per-tenant :meth:`FreeListState.debug_summary` (labelled
+    with ``tenant_names`` when given).
     """
+    def fail(msg: str):
+        raise FreelistInvariantError(
+            f"{msg}\nallocator state at failure:\n"
+            + state.debug_summary(tenant_names=tenant_names,
+                                  stash_depth=stash_depth))
+
+    def check(cond, msg: str):
+        if not cond:
+            fail(msg)
+
     fs = np.asarray(state.free_stack)
     ft = np.asarray(state.free_top)
     owner = np.asarray(state.owner)
     caps = np.asarray(state.capacity)
     used = np.asarray(state.used)
+
+    def cname(c: int) -> str:
+        if tenant_names and c < len(tenant_names):
+            return f"class {c} ({tenant_names[c]})"
+        return f"class {c}"
+
     for c in range(fs.shape[0]):
         top, cap = int(ft[c]), int(caps[c])
-        assert 0 <= top <= cap, f"I1 violated: class {c} top={top} cap={cap}"
+        check(0 <= top <= cap,
+              f"I1 (stack pointer in range) violated: {cname(c)} "
+              f"free_top={top} outside [0, capacity={cap}]")
         live = fs[c, :top]
-        assert len(np.unique(live)) == top, f"I2 dup in free stack class {c}"
-        assert live.min(initial=0) >= 0 and live.max(initial=0) < cap, f"I2 range class {c}"
-        assert (owner[c, live] == -1).all(), f"I2 free block owned, class {c}"
-        assert used[c] == cap - top, f"I3 used mismatch class {c}: {used[c]} != {cap - top}"
+        check(len(np.unique(live)) == top,
+              f"I2 (free stack hygiene) violated: duplicate ids below "
+              f"free_top in {cname(c)}")
+        check(live.min(initial=0) >= 0 and live.max(initial=0) < cap,
+              f"I2 (free stack hygiene) violated: out-of-range id in "
+              f"{cname(c)} free stack (capacity {cap})")
+        bad = live[owner[c, live] != -1] if top else np.zeros((0,), np.int64)
+        check(bad.size == 0,
+              f"I2 (free stack hygiene) violated: free block(s) "
+              f"{bad[:8].tolist()} of {cname(c)} still owner-mapped "
+              f"(owners {owner[c, bad[:8]].tolist()})")
+        check(used[c] == cap - top,
+              f"I3 (occupancy accounting) violated: {cname(c)} "
+              f"used={used[c]} but capacity - free_top = {cap - top} "
+              f"(quota bookkeeping would drift)")
         owned = np.where(owner[c, :cap] >= 0)[0]
-        assert len(owned) + top == cap, f"I4 accounting, class {c}"
-        assert not np.intersect1d(owned, live).size, f"I4 overlap, class {c}"
+        check(len(owned) + top == cap,
+              f"I4 (block conservation) violated: {cname(c)} has "
+              f"{len(owned)} owned + {top} free != capacity {cap}")
+        check(not np.intersect1d(owned, live).size,
+              f"I4 (block conservation) violated: {cname(c)} block(s) "
+              f"{np.intersect1d(owned, live)[:8].tolist()} both owned and free")
 
     if stash_pages is None:
         return
@@ -139,26 +221,42 @@ def validate_freelist(
     stashed_all = []
     for lane in range(sp.shape[0]):
         d = int(sd[lane])
-        assert 0 <= d <= sp.shape[1], f"I5 stash depth range, lane {lane}"
+        check(0 <= d <= sp.shape[1],
+              f"I5 (stash partition) violated: lane {lane} stash depth {d} "
+              f"outside [0, {sp.shape[1]}]")
         row = sp[lane, :d]
-        assert (sp[lane, d:] == -1).all(), f"I5 stash hygiene, lane {lane}"
+        check((sp[lane, d:] == -1).all(),
+              f"I5 (stash partition) violated: lane {lane} has live entries "
+              f"above its stash depth {d}")
         if d == 0:
             continue
-        assert row.min() >= 0 and row.max() < cap, f"I5 stash id range, lane {lane}"
-        assert (owner[c, row] == lane).all(), \
-            f"I5 stashed block not owner-mapped to its lane, lane {lane}"
+        check(row.min() >= 0 and row.max() < cap,
+              f"I5 (stash partition) violated: lane {lane} stashed "
+              f"out-of-range id (capacity {cap})")
+        check((owner[c, row] == lane).all(),
+              f"I5 (stash partition) violated: lane {lane} stashed block(s) "
+              f"{row[owner[c, row] != lane][:8].tolist()} not owner-mapped "
+              f"to it")
         stashed_all.append(row)
     stashed = np.concatenate(stashed_all) if stashed_all else \
         np.zeros((0,), np.int32)
-    assert len(np.unique(stashed)) == len(stashed), "I5 dup across stashes"
-    assert not np.intersect1d(stashed, stack_ids).size, \
-        "I5 block on both central stack and a stash"
+    check(len(np.unique(stashed)) == len(stashed),
+          "I5 (stash partition) violated: block stashed by two lanes at once")
+    dup = np.intersect1d(stashed, stack_ids)
+    check(not dup.size,
+          f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} of "
+          f"{cname(c)} on both the central stack and a lane stash")
     if in_use is not None:
         used_ids = np.where(np.asarray(in_use)[:cap])[0]
-        assert not np.intersect1d(used_ids, stashed).size, \
-            "I5 block both stashed and in use"
-        assert not np.intersect1d(used_ids, stack_ids).size, \
-            "I5 block both free and in use"
-        assert len(stack_ids) + len(stashed) + len(used_ids) == cap, \
-            (f"I5 partition: stack {len(stack_ids)} + stash {len(stashed)} "
-             f"+ in-use {len(used_ids)} != capacity {cap}")
+        dup = np.intersect1d(used_ids, stashed)
+        check(not dup.size,
+              f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} "
+              f"both stashed and in use")
+        dup = np.intersect1d(used_ids, stack_ids)
+        check(not dup.size,
+              f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} "
+              f"both free and in use")
+        check(len(stack_ids) + len(stashed) + len(used_ids) == cap,
+              f"I5 (stash partition) violated: stack {len(stack_ids)} + "
+              f"stash {len(stashed)} + in-use {len(used_ids)} != capacity "
+              f"{cap} for {cname(c)}")

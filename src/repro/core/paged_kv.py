@@ -35,21 +35,35 @@ below-watermark lane and flushes overflow.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+import functools
+from typing import TYPE_CHECKING, NamedTuple, Optional
 
 import jax.numpy as jnp
-from jax import lax
 
-from .freelist import FreeListState, init_freelist
+if TYPE_CHECKING:  # runtime import is lazy: repro.alloc <-> repro.core would
+    # otherwise cycle through the repro.core package __init__
+    from ..alloc.service import AllocService, BurstStats, TenantStats
+from .freelist import FreeListState
 from .lane_stash import (LaneStashState, below_watermark, init_stash,
                          stash_clear, stash_pop, stash_push, stash_push_batch,
                          stash_set_rows, validate_stash_params)
-from .packets import (FREE_ALL, NO_BLOCK, NO_LANE, OP_FREE, OP_MALLOC, OP_NOP,
-                      OP_REFILL, RequestQueue, ResponseQueue)
-from .support_core import StepStats, support_core_step
+from .packets import NO_BLOCK, NO_LANE
+# support_core_step is re-exported for legacy importers (tests drive raw
+# queues through it); paged_kv itself talks to the support-core only through
+# the AllocService client API.
+from .support_core import StepStats, support_core_step  # noqa: F401
 
 KV_CLASS = 0
 STATE_CLASS = 1
+
+#: Tenant names the paged-KV allocator registers on its AllocService.  The
+#: registration ORDER fixes the size-class indices: kv_pages is always class
+#: 0 (KV_CLASS) and state_slots — when configured — class 1 (STATE_CLASS),
+#: preserving the historical constants; the scratch tenant takes the next
+#: free class.
+KV_TENANT = "kv_pages"
+STATE_TENANT = "state_slots"
+SCRATCH_TENANT = "scratch"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,6 +79,12 @@ class PagedKVConfig:
     # SSM/hybrid lane-state slots (0 disables the extra size class)
     state_slots: int = 0
     state_dim: int = 0
+    # Per-lane prefill/decode workspace slots — the third tenant sharing the
+    # one support-core (0 disables it).  Each admitted lane mallocs one
+    # workspace block in the admission burst and frees it in its release
+    # burst, so scratch traffic rides the same HMQ batches as KV pages and
+    # state slots (the paper's many-clients-one-core claim, exercised).
+    scratch_slots: int = 0
     # Per-lane page-stash front-end (DESIGN.md §7).  stash_size == 0 disables
     # the tier (decode then issues its HMQ burst exactly as before, still
     # gated behind the any-live-packet predicate).  When enabled, a lane
@@ -94,6 +114,7 @@ class PagedKVState(NamedTuple):
     state_slot: jnp.ndarray       # [max_lanes] int32 (NO_BLOCK if none)
     lane_state: jnp.ndarray       # [state_slots, state_dim] recurrent state storage
     stash: LaneStashState         # per-lane page-stash front-end (DESIGN.md §7)
+    scratch_slot: jnp.ndarray     # [max_lanes] int32 workspace block (NO_BLOCK if none)
 
 
 class DecodeStats(NamedTuple):
@@ -108,15 +129,20 @@ class DecodeStats(NamedTuple):
     depth is d (shape ``[stash_size + 1]``) — a per-lane depth histogram
     that localizes refill storms under mixed-length traffic: a healthy
     steady state masses near the top bins, a storm piles lanes at 0..1.
+    ``tenant`` is the per-tenant (per size class) breakdown of the burst;
+    ``queue_live`` / ``queue_capacity`` its slot occupancy (DESIGN.md §9).
     """
 
     core: StepStats
+    tenant: TenantStats          # [C]-shaped per-tenant burst breakdown
     failed: jnp.ndarray          # on-path (emergency) malloc failures
     refill_failed: jnp.ndarray   # benign speculative-refill failures
     stash_hits: jnp.ndarray      # boundary pages served by the stash
     stash_misses: jnp.ndarray    # boundary pages that needed a central malloc
     bursts: jnp.ndarray          # 0/1 support-core steps issued
     stash_depth_hist: jnp.ndarray  # [stash_size + 1] int32 active-lane histogram
+    queue_live: jnp.ndarray      # non-NOP slots in this step's burst queue
+    queue_capacity: jnp.ndarray  # static burst queue capacity (traced const)
 
     # forwarders so DecodeStats reads like the StepStats it extends
     @property
@@ -136,11 +162,40 @@ class DecodeStats(NamedTuple):
         return self.core.blocks_freed
 
 
-def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
-    caps = [cfg.num_pages] + ([cfg.state_slots] if cfg.state_slots else [])
+@functools.lru_cache(maxsize=None)
+def paged_service(cfg: PagedKVConfig) -> "AllocService":
+    """The AllocService every paged-KV allocator touch goes through.
+
+    One service per config (cached — the service is static host-side
+    configuration, safe to share across jitted traces).  Tenants register in
+    the order that pins the historical class constants: ``kv_pages`` ->
+    KV_CLASS, ``state_slots`` -> STATE_CLASS, then ``scratch``.  Policy and
+    backend stay per-commit arguments, threaded from the engine exactly like
+    the old ``backend=`` plumbing.
+    """
+    from ..alloc.service import AllocService
+    svc = AllocService()
+    svc.register_tenant(KV_TENANT, capacity=cfg.num_pages)
+    if cfg.state_slots:
+        svc.register_tenant(STATE_TENANT, capacity=cfg.state_slots)
+    if cfg.scratch_slots:
+        svc.register_tenant(SCRATCH_TENANT, capacity=cfg.scratch_slots)
+    return svc
+
+
+def num_alloc_classes(cfg: PagedKVConfig) -> int:
+    """Size classes (== tenants) this config's allocator carries."""
+    return paged_service(cfg).num_classes
+
+
+def init_paged_kv(cfg: PagedKVConfig,
+                  policy: Optional[str] = None) -> PagedKVState:
+    """Fresh paged-KV state.  ``policy`` must name the allocator policy the
+    engine will run (a policy may have a custom ``init``); ``None`` resolves
+    the ``REPRO_ALLOC_POLICY`` env knob, like every burst."""
     shape = (cfg.num_pages, cfg.num_kv_layers, cfg.page_size, cfg.kv_heads, cfg.head_dim)
     return PagedKVState(
-        alloc=init_freelist(caps),
+        alloc=paged_service(cfg).init_state(policy=policy),
         block_tables=jnp.full((cfg.max_lanes, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32),
         seq_lens=jnp.zeros((cfg.max_lanes,), jnp.int32),
         active=jnp.zeros((cfg.max_lanes,), bool),
@@ -149,40 +204,8 @@ def init_paged_kv(cfg: PagedKVConfig) -> PagedKVState:
         state_slot=jnp.full((cfg.max_lanes,), NO_BLOCK, jnp.int32),
         lane_state=jnp.zeros((max(cfg.state_slots, 1), max(cfg.state_dim, 1)), jnp.float32),
         stash=init_stash(cfg.max_lanes, cfg.stash_size),
+        scratch_slot=jnp.full((cfg.max_lanes,), NO_BLOCK, jnp.int32),
     )
-
-
-def _gated_support_core_step(
-    alloc: FreeListState,
-    queue: RequestQueue,
-    max_blocks_per_req: int,
-    backend: Optional[str] = None,
-) -> tuple[FreeListState, ResponseQueue, StepStats, jnp.ndarray]:
-    """Run the support-core step only when the queue has a live packet.
-
-    An all-NOP queue is a no-op for the allocator (bit-identical state, all
-    responses failed/empty), so the whole metadata pass is skipped with a
-    ``lax.cond`` — the fast path that makes stash-served (and idle) decode
-    steps cost zero central-allocator work.  Returns the extra ``live`` flag
-    (0/1) for burst telemetry.
-    """
-    live = jnp.any(queue.op != OP_NOP)
-
-    def run(_):
-        return support_core_step(alloc, queue,
-                                 max_blocks_per_req=max_blocks_per_req,
-                                 backend=backend)
-
-    def skip(_):
-        q = queue.capacity
-        z = jnp.zeros((), jnp.int32)
-        resp = ResponseQueue(
-            blocks=jnp.full((q, max_blocks_per_req), NO_BLOCK, jnp.int32),
-            status=jnp.zeros((q,), jnp.int32))
-        return alloc, resp, StepStats(z, z, z, z, z)
-
-    new_alloc, resp, stats = lax.cond(live, run, skip, 0)
-    return new_alloc, resp, stats, live
 
 
 # --------------------------------------------------------------------------
@@ -199,15 +222,18 @@ def admit_prefill_many(
     v: jnp.ndarray,
     lengths: jnp.ndarray,         # [B] int32, each <= T
     backend: Optional[str] = None,
-) -> tuple[PagedKVState, StepStats]:
+    policy: Optional[str] = None,
+) -> tuple[PagedKVState, BurstStats]:
     """Admit B prefilled sequences with a single support-core step.
 
-    The request queue carries one KV-page malloc per lane (plus one
-    recurrent-state-slot malloc when the config has a state class), so the
-    whole admission batch costs exactly one HMQ burst.  With ``lanes`` in
-    ascending order the block assignment is bit-identical to B sequential
-    :func:`admit_prefill` calls: the HMQ arbiter serves round-0 mallocs in
-    lane order, from the same LIFO free stack.
+    The burst carries one KV-page malloc per lane — plus one
+    recurrent-state-slot malloc and one scratch-workspace malloc when the
+    config carries those tenants — staged through the service's
+    :class:`~repro.alloc.BurstBuilder`, so the whole admission batch costs
+    exactly one HMQ burst and every packet group resolves through its own
+    ticket.  With ``lanes`` in ascending order the block assignment is
+    bit-identical to B sequential :func:`admit_prefill` calls: the HMQ
+    arbiter serves round-0 mallocs in lane order, from the same free pool.
 
     Lanes must be distinct (one request packet per lane).
     """
@@ -217,25 +243,26 @@ def admit_prefill_many(
     lanes = lanes.astype(jnp.int32)
     n_pages = (lengths.astype(jnp.int32) + ps - 1) // ps                # [B]
     # A sequence whose pages would overflow its block-table row can never be
-    # addressed: force BOTH of its packets to fail (overwide arg) instead of
-    # leaking unreferenced pages or a stranded state slot.  The admission
-    # then reports it in `failed`.
+    # addressed: force ALL of its packets to fail (overwide arg) instead of
+    # leaking unreferenced pages or a stranded state/scratch slot.  The
+    # admission then reports it in `failed`.
     fits = n_pages <= cfg.max_pages_per_lane
     # forced-fail must exceed the response width R (overwide -> fail), which
     # the stash pre-charge packets may widen beyond max_pages.
     pre = cfg.stash_refill if cfg.stash_size else 0
     resp_width = max(max_pages, pre)
     forced_fail = jnp.int32(resp_width + 1)
-    kv_args = jnp.where(fits, n_pages, forced_fail)
-    st_args = jnp.where(fits, jnp.int32(1), forced_fail)
 
-    kv_ops = jnp.full((B,), OP_MALLOC, jnp.int32)
-    st_ops = jnp.full((B,), OP_MALLOC if cfg.state_slots else OP_NOP, jnp.int32)
-    ops = [kv_ops, st_ops]
-    req_lanes = [lanes, lanes]
-    classes = [jnp.full((B,), KV_CLASS, jnp.int32),
-               jnp.full((B,), STATE_CLASS, jnp.int32)]
-    args = [kv_args, st_args]
+    svc = paged_service(cfg)
+    burst = svc.new_burst()
+    t_kv = burst.malloc(svc.tenant(KV_TENANT), lanes,
+                        n=jnp.where(fits, n_pages, forced_fail))
+    t_state = burst.malloc(svc.tenant(STATE_TENANT), lanes,
+                           n=jnp.where(fits, jnp.int32(1), forced_fail)) \
+        if cfg.state_slots else None
+    t_scratch = burst.malloc(svc.tenant(SCRATCH_TENANT), lanes,
+                             n=jnp.where(fits, jnp.int32(1), forced_fail)) \
+        if cfg.scratch_slots else None
     if cfg.stash_size:
         # Stash pre-charge: one extra malloc packet per lane fills the
         # admitted lane's stash with a refill batch, so early decode steps
@@ -244,39 +271,39 @@ def admit_prefill_many(
         # after every plain malloc), so under scarcity the pre-charge fails
         # first and admission itself is unaffected (an empty stash is
         # benign).
-        ops.append(jnp.full((B,), OP_REFILL, jnp.int32))
-        req_lanes.append(lanes)
-        classes.append(jnp.full((B,), KV_CLASS, jnp.int32))
-        args.append(jnp.where(fits, jnp.int32(pre), forced_fail))
-    queue = RequestQueue(
-        op=jnp.concatenate(ops),
-        lane=jnp.concatenate(req_lanes),
-        size_class=jnp.concatenate(classes),
-        arg=jnp.concatenate(args),
-    )
-    alloc, resp, stats = support_core_step(state.alloc, queue,
-                                           max_blocks_per_req=resp_width,
-                                           backend=backend)
+        t_pre = burst.refill(svc.tenant(KV_TENANT), lanes,
+                             n=jnp.where(fits, jnp.int32(pre), forced_fail))
+    alloc, res = svc.commit(state.alloc, burst,
+                            max_blocks_per_req=resp_width,
+                            backend=backend, policy=policy)
+    stats = res.stats
     if cfg.stash_size:
         # `failed` should mean "admission packets that failed": a failed
         # pre-charge is benign (the lane just starts with an empty stash)
         # and must not read as an allocation failure in engine telemetry.
-        required = jnp.sum(resp.status[:B] == 0).astype(jnp.int32)
-        if cfg.state_slots:
-            required = required + jnp.sum(
-                resp.status[B:2 * B] == 0).astype(jnp.int32)
-        stats = stats._replace(failed=required)
+        # The per-tenant kv_pages breakdown is corrected the same way, so
+        # aggregate and per-tenant admission-failure counts always agree.
+        kv_required = jnp.sum(~res.ok_for(t_kv)).astype(jnp.int32)
+        required = kv_required
+        for t in (t_state, t_scratch):
+            if t is not None:
+                required = required + jnp.sum(~res.ok_for(t)).astype(jnp.int32)
+        pt = stats.per_tenant
+        pt = pt._replace(failed=pt.failed.at[KV_CLASS].set(kv_required))
+        stats = stats._replace(core=stats.core._replace(failed=required),
+                               per_tenant=pt)
 
-    pages = resp.blocks[:B, :max_pages]                      # [B, max_pages]
+    pages = res.blocks_for(t_kv)[:, :max_pages]              # [B, max_pages]
     # A lane is admitted only if EVERY packet it needs succeeded; under pool
-    # scarcity one class can still succeed while the other fails — those
+    # scarcity one tenant can still succeed while another fails — those
     # orphaned grants stay owned by the (inactive) lane until FREE_ALL
     # releases it (ServingEngine.admit_many reclaims failed lanes itself).
     # The stash pre-charge packet is NOT required: admission stands even
     # when the pre-charge failed (the lane just starts with an empty stash).
-    got = resp.status[:B] == 1                               # [B]
-    if cfg.state_slots:
-        got = got & (resp.status[B:2 * B] == 1)
+    got = res.ok_for(t_kv)                                   # [B]
+    for t in (t_state, t_scratch):
+        if t is not None:
+            got = got & res.ok_for(t)
     # Block table rows for the admitted lanes.
     p_lim = min(max_pages, cfg.max_pages_per_lane)
     rows = jnp.full((B, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32)
@@ -300,8 +327,10 @@ def admit_prefill_many(
     v_pages = state.v_pages.at[dst.reshape(-1)].set(
         vp.reshape(flat).astype(cfg.dtype), mode="drop")
 
-    slots = jnp.where(got, resp.blocks[B:2 * B, 0], NO_BLOCK) if cfg.state_slots \
-        else jnp.full((B,), NO_BLOCK, jnp.int32)
+    slots = jnp.where(got, res.blocks_for(t_state)[:, 0], NO_BLOCK) \
+        if t_state is not None else jnp.full((B,), NO_BLOCK, jnp.int32)
+    scratch = jnp.where(got, res.blocks_for(t_scratch)[:, 0], NO_BLOCK) \
+        if t_scratch is not None else jnp.full((B,), NO_BLOCK, jnp.int32)
     stash = state.stash
     if cfg.stash_size:
         # Install the pre-charge grants.  Recorded whenever the pre-charge
@@ -309,8 +338,8 @@ def admit_prefill_many(
         # the pages are owner-mapped to the lane either way, and the
         # engine's failure path releases the lane with FREE_ALL — clearing
         # the stash row keeps the I5 partition exact).
-        pc_got = resp.status[2 * B:] == 1
-        stash = stash_set_rows(stash, lanes, resp.blocks[2 * B:, :pre],
+        pc_got = res.ok_for(t_pre)
+        stash = stash_set_rows(stash, lanes, res.blocks_for(t_pre)[:, :pre],
                                pre, pc_got)
     new = state._replace(
         alloc=alloc,
@@ -322,6 +351,7 @@ def admit_prefill_many(
         v_pages=v_pages,
         state_slot=state.state_slot.at[lanes].set(slots),
         stash=stash,
+        scratch_slot=state.scratch_slot.at[lanes].set(scratch),
     )
     return new, stats
 
@@ -334,12 +364,13 @@ def admit_prefill(
     v: jnp.ndarray,
     length: jnp.ndarray,          # scalar int32, <= T
     backend: Optional[str] = None,
-) -> tuple[PagedKVState, StepStats]:
+    policy: Optional[str] = None,
+) -> tuple[PagedKVState, BurstStats]:
     """Admit one prefilled sequence (batch-of-one :func:`admit_prefill_many`)."""
     lanes = jnp.asarray(lane, jnp.int32).reshape(1)
     lengths = jnp.asarray(length, jnp.int32).reshape(1)
     return admit_prefill_many(cfg, state, lanes, k[None], v[None], lengths,
-                              backend=backend)
+                              backend=backend, policy=policy)
 
 
 # --------------------------------------------------------------------------
@@ -353,20 +384,22 @@ def decode_append(
     new_v: jnp.ndarray,
     window: Optional[int] = None,  # SWA window (tokens); enables page recycling
     backend: Optional[str] = None,
+    policy: Optional[str] = None,
 ) -> tuple[PagedKVState, DecodeStats]:
     """Append one token per active lane through the two-tier allocator.
 
     Tier 1 (stash, when ``cfg.stash_size > 0``): page-boundary lanes pop
     their new page from the per-lane stash with pure vector ops, and
     SWA-recycled dead pages push back to the stash first.  Tier 2 (central
-    support-core): ONE bulk HMQ burst carries (a) emergency 1-page mallocs
-    for lanes whose stash pop missed, (b) ``stash_refill``-page refills for
-    every below-watermark lane, and (c) ``OP_FREE`` flushes for recycled
-    pages that found the stash full — and the whole burst is skipped via
-    ``lax.cond`` when no packet is live, so steady-state stash-served steps
-    never touch the central allocator.  With the stash disabled the queue is
-    exactly the pre-stash one (bit-identical behaviour), still gated by the
-    same all-NOP predicate.
+    support-core): ONE bulk HMQ burst — staged as typed ``BurstBuilder``
+    ops with per-lane ``where`` masks — carries (a) emergency 1-page
+    mallocs for lanes whose stash pop missed, (b) ``stash_refill``-page
+    refills for every below-watermark lane, and (c) ``free`` flushes for
+    recycled pages that found the stash full; ``commit(gated=True)`` skips
+    the whole step when no packet is live, so steady-state stash-served
+    steps never touch the central allocator.  With the stash disabled the
+    burst is exactly the pre-stash one (bit-identical behaviour), still
+    gated by the same all-NOP predicate.
     """
     ps = cfg.page_size
     L = cfg.max_lanes
@@ -404,45 +437,36 @@ def decode_append(
             overflow = recycle & ~pushed                     # stash full: flush
         else:
             overflow = recycle
-        f_ops = jnp.where(overflow, OP_FREE, OP_NOP).astype(jnp.int32)
-        f_args = jnp.where(overflow, dead_block, 0)
-        free_slots = (f_ops, lane_ids, f_args)
         # the dead page leaves the table whether it was stashed or flushed
         block_tables = state.block_tables.at[
             jnp.where(recycle, lane_ids, L), safe_idx
         ].set(NO_BLOCK, mode="drop")
     else:
-        free_slots = None
+        overflow = None
         block_tables = state.block_tables
 
     # --- tier 2: one bulk HMQ burst (emergency + refill + flush), gated.
-    m_ops = jnp.where(missed, OP_MALLOC, OP_NOP).astype(jnp.int32)
-    m_args = jnp.ones((L,), jnp.int32)
-    slots = [(m_ops, lane_ids, m_args)]
+    svc = paged_service(cfg)
+    kv = svc.tenant(KV_TENANT)
+    burst = svc.new_burst()
+    t_malloc = burst.malloc(kv, lane_ids, 1, where=missed)
     if S:
-        # OP_REFILL: scheduled after every plain malloc in the batch, so a
-        # bulk refill can never starve another lane's boundary allocation.
+        # refill priority: scheduled after every plain malloc in the batch,
+        # so a bulk refill can never starve another lane's boundary
+        # allocation.
         below = below_watermark(stash, state.active, cfg.stash_watermark)
-        r_ops = jnp.where(below, OP_REFILL, OP_NOP).astype(jnp.int32)
-        r_args = jnp.full((L,), cfg.stash_refill, jnp.int32)
-        slots.append((r_ops, lane_ids, r_args))
-    if free_slots is not None:
-        slots.append(free_slots)
-    ops = jnp.concatenate([s[0] for s in slots])
-    lanes = jnp.concatenate([s[1] for s in slots])
-    args = jnp.concatenate([s[2] for s in slots])
-
-    classes = jnp.zeros_like(ops)
-    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
-    alloc, resp, stats, live = _gated_support_core_step(
-        state.alloc, queue,
+        t_refill = burst.refill(kv, lane_ids, cfg.stash_refill, where=below)
+    if overflow is not None:
+        burst.free(kv, lane_ids, dead_block, where=overflow)
+    alloc, res = svc.commit(
+        state.alloc, burst,
         max_blocks_per_req=max(1, cfg.stash_refill if S else 1),
-        backend=backend)
+        backend=backend, policy=policy, gated=True)
 
     # --- install newly obtained pages into block tables (stash pop wins;
     # emergency grants cover the misses)
-    new_blocks = resp.blocks[:L, 0]                          # [lanes]
-    e_got = (resp.status[:L] == 1) & missed
+    new_blocks = res.blocks_for(t_malloc)[:, 0]              # [lanes]
+    e_got = res.ok_for(t_malloc) & missed
     got = got_stash | e_got
     page_for_lane = jnp.where(got_stash, popped, new_blocks)
     tbl_idx = jnp.clip(pos // ps, 0, cfg.max_pages_per_lane - 1)
@@ -452,8 +476,9 @@ def decode_append(
 
     # --- install bulk-refill grants into the stash
     if S:
-        r_got = (resp.status[L:2 * L] == 1) & below
-        stash = stash_push_batch(stash, resp.blocks[L:2 * L, :cfg.stash_refill],
+        r_got = res.ok_for(t_refill) & below
+        stash = stash_push_batch(stash,
+                                 res.blocks_for(t_refill)[:, :cfg.stash_refill],
                                  cfg.stash_refill, r_got)
         refill_failed = jnp.sum(below & ~r_got).astype(jnp.int32)
     else:
@@ -479,13 +504,16 @@ def decode_append(
         stash=stash,
     )
     dstats = DecodeStats(
-        core=stats,
+        core=res.stats.core,
+        tenant=res.stats.per_tenant,
         failed=jnp.sum(missed & ~e_got).astype(jnp.int32),
         refill_failed=refill_failed,
         stash_hits=jnp.sum(got_stash).astype(jnp.int32),
         stash_misses=jnp.sum(missed).astype(jnp.int32),
-        bursts=live.astype(jnp.int32),
+        bursts=res.live,
         stash_depth_hist=stash_depth_histogram(cfg, stash, state.active),
+        queue_live=res.stats.queue_live,
+        queue_capacity=res.stats.queue_capacity,
     )
     return new, dstats
 
@@ -505,14 +533,17 @@ def stash_depth_histogram(cfg: PagedKVConfig, stash: LaneStashState,
 
 
 def empty_decode_stats(cfg: PagedKVConfig) -> DecodeStats:
-    """All-zero DecodeStats matching this config's histogram shape (the
-    attention-free decode branch and other no-allocator steps)."""
+    """All-zero DecodeStats matching this config's histogram and tenant
+    shapes (the attention-free decode branch and other no-allocator steps)."""
     z = jnp.zeros((), jnp.int32)
-    return DecodeStats(core=StepStats(z, z, z, z, z),
+    from ..alloc.service import empty_burst_stats
+    zero = empty_burst_stats(num_alloc_classes(cfg))
+    return DecodeStats(core=zero.core, tenant=zero.per_tenant,
                        failed=z, refill_failed=z,
                        stash_hits=z, stash_misses=z, bursts=z,
                        stash_depth_hist=jnp.zeros((cfg.stash_size + 1,),
-                                                  jnp.int32))
+                                                  jnp.int32),
+                       queue_live=z, queue_capacity=z)
 
 
 # --------------------------------------------------------------------------
@@ -525,34 +556,32 @@ def release_packets(
     state: PagedKVState,
     lane_ids: jnp.ndarray,        # [K] int32 packet slots; NO_LANE = empty slot
     backend: Optional[str] = None,
-) -> tuple[PagedKVState, StepStats]:
+    policy: Optional[str] = None,
+) -> tuple[PagedKVState, BurstStats]:
     """Release lanes through FREE_ALL request packets in one support-core step.
 
     ``lane_ids`` is a compact packet array (the scheduler emits one slot per
     completed lane, padded with :data:`~repro.core.packets.NO_LANE`).  Every
     block the named lanes own — KV pages and, when configured, the
-    recurrent-state slot — is freed by the support-core's deferred-free path;
-    host metadata rows (block table, seq_lens, active, state_slot) are then
-    cleared.  Lanes may appear in any order; duplicate ids are harmless
-    (FREE_ALL is idempotent within a step).
+    recurrent-state slot and the scratch workspace — is freed by the
+    support-core's deferred-free path (one ``free_all`` ticket per tenant,
+    one burst total); host metadata rows (block table, seq_lens, active,
+    state_slot, scratch_slot) are then cleared.  Lanes may appear in any
+    order; duplicate ids are harmless (FREE_ALL is idempotent within a
+    step).
     """
-    K = lane_ids.shape[0]
     lane_ids = lane_ids.astype(jnp.int32)
     valid = lane_ids >= 0
     safe = jnp.clip(lane_ids, 0, cfg.max_lanes - 1)
-    ops = jnp.where(valid, OP_FREE, OP_NOP).astype(jnp.int32)
-    args = jnp.full((K,), FREE_ALL, jnp.int32)
+    svc = paged_service(cfg)
+    burst = svc.new_burst()
+    burst.free_all(svc.tenant(KV_TENANT), safe, where=valid)
     if cfg.state_slots:
-        ops = jnp.concatenate([ops, ops])
-        lanes = jnp.concatenate([safe, safe])
-        classes = jnp.concatenate([jnp.full((K,), KV_CLASS, jnp.int32),
-                                   jnp.full((K,), STATE_CLASS, jnp.int32)])
-        args = jnp.concatenate([args, args])
-    else:
-        lanes, classes = safe, jnp.full((K,), KV_CLASS, jnp.int32)
-    queue = RequestQueue(op=ops, lane=lanes, size_class=classes, arg=args)
-    alloc, _, stats = support_core_step(state.alloc, queue,
-                                        max_blocks_per_req=1, backend=backend)
+        burst.free_all(svc.tenant(STATE_TENANT), safe, where=valid)
+    if cfg.scratch_slots:
+        burst.free_all(svc.tenant(SCRATCH_TENANT), safe, where=valid)
+    alloc, res = svc.commit(state.alloc, burst, max_blocks_per_req=1,
+                            backend=backend, policy=policy)
     release_mask = jnp.zeros((cfg.max_lanes,), bool).at[
         jnp.where(valid, safe, cfg.max_lanes)].set(True, mode="drop")
     keep = ~release_mask
@@ -565,8 +594,9 @@ def release_packets(
         # stashed pages are owner-mapped to the lane, so the FREE_ALL above
         # already returned them to the central stack; just clear the rows
         stash=stash_clear(state.stash, release_mask),
+        scratch_slot=jnp.where(keep, state.scratch_slot, NO_BLOCK),
     )
-    return new, stats
+    return new, res.stats
 
 
 def release_lanes(
@@ -574,11 +604,12 @@ def release_lanes(
     state: PagedKVState,
     release_mask: jnp.ndarray,    # [max_lanes] bool
     backend: Optional[str] = None,
-) -> tuple[PagedKVState, StepStats]:
+    policy: Optional[str] = None,
+) -> tuple[PagedKVState, BurstStats]:
     """Dense-mask release (legacy shape; routed through the packet path)."""
     lane_ids = jnp.where(release_mask,
                          jnp.arange(cfg.max_lanes, dtype=jnp.int32), NO_LANE)
-    return release_packets(cfg, state, lane_ids, backend=backend)
+    return release_packets(cfg, state, lane_ids, backend=backend, policy=policy)
 
 
 # --------------------------------------------------------------------------
@@ -661,7 +692,9 @@ def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
 def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState) -> None:
     """Host-side invariant check for the full paged-KV allocator state:
     I1–I4 on the segregated metadata plus I5 — every KV page is exactly one
-    of {central free stack, lane stash, block-table referenced}."""
+    of {central free stack, lane stash, block-table referenced}.  Failures
+    raise :class:`~repro.core.freelist.FreelistInvariantError` labelled with
+    the tenant names, so a tenant-quota bug reads as a per-tenant report."""
     from .freelist import validate_freelist
     validate_freelist(
         state.alloc,
@@ -669,4 +702,5 @@ def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState) -> None:
         stash_depth=state.stash.depth,
         in_use=kv_pages_in_use(cfg, state),
         stash_class=KV_CLASS,
+        tenant_names=paged_service(cfg).tenant_names(),
     )

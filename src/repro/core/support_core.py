@@ -54,6 +54,18 @@ and response routing back to caller order stay OUTSIDE the backends — both
 paths consume an already-``schedule``\\ d queue and return scheduled-order
 results, so the dispatch wrapper computes identical responses and stats for
 every backend.
+
+Client API (DESIGN.md §9)
+-------------------------
+Since the `repro.alloc` redesign this module holds only (a) the shared
+:class:`StepStats` telemetry type, (b) ``_step_scheduled_jnp`` — the
+scheduled-step body that is the ``jnp`` backend of the free-list
+:class:`~repro.alloc.policies.AllocatorPolicy` and the oracle for the fused
+kernel — and (c) :func:`support_core_step`, a thin DEPRECATED wrapper over
+:class:`repro.alloc.AllocService` kept for raw-queue callers and the
+old-vs-new differential suites.  Production clients (paged KV, the serving
+engine) talk to the support-core exclusively through the service API:
+registered tenants, `BurstBuilder` typed ops, and ticket resolution.
 """
 from __future__ import annotations
 
@@ -63,7 +75,6 @@ import jax
 import jax.numpy as jnp
 
 from .freelist import FreeListState
-from .hmq import schedule
 from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
                       OP_REFILL, RequestQueue, ResponseQueue)
 
@@ -79,6 +90,87 @@ class StepStats(NamedTuple):
     failed: jnp.ndarray         # malloc requests not fully served
     blocks_allocated: jnp.ndarray
     blocks_freed: jnp.ndarray
+
+
+def grant_scan(
+    free_top: jnp.ndarray,     # [C] pre-step availability per class
+    want: jnp.ndarray,         # [Q] sanitized block counts (0 for non-mallocs)
+    onehot: jnp.ndarray,       # [Q, C] bool class membership
+    is_malloc: jnp.ndarray,    # [Q] bool
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The HMQ grant recurrence, shared by every jnp policy body.
+
+    Sequential-skip semantics (faithful to the serial HMQ): a request is
+    granted iff its want fits on top of what EARLIER GRANTED requests of
+    its class consumed — a failed request consumes nothing for its
+    successors.  This is a true prefix recurrence (found by the hypothesis
+    property test: the earlier two-pass cumsum failed requests that only
+    collided with other *failed* requests), so it runs as a scan over the
+    queue with [C]-vector state — still batched across classes.
+
+    Returns ``(ok [Q] bool, my_goff [Q])`` where ``my_goff`` is how many
+    blocks earlier granted requests of the same class consumed — the
+    request's offset into its class's free pool, whatever id discipline the
+    policy then applies (stack top for LIFO, ascending rank for first fit).
+    The grant/fail pattern depends only on availability, which is what
+    makes it policy-independent.
+    """
+    C = free_top.shape[0]
+
+    def grant_body(consumed, xs):
+        want_i, onehot_i, is_m_i = xs
+        my = jnp.sum(onehot_i * consumed)
+        av = jnp.sum(onehot_i * free_top)
+        ok_i = is_m_i & (want_i > 0) & (my + want_i <= av)
+        consumed = consumed + jnp.where(ok_i, want_i, 0) * onehot_i
+        return consumed, (ok_i, my)
+
+    _, (ok, my_goff) = jax.lax.scan(
+        grant_body, jnp.zeros((C,), jnp.int32),
+        (want, onehot.astype(jnp.int32), is_malloc))
+    return ok, my_goff
+
+
+def deferred_free_mask(
+    sched: RequestQueue,
+    owner: jnp.ndarray,        # [C, N] POST-alloc owner map
+    cls: jnp.ndarray,          # [Q] clipped size classes
+    onehot: jnp.ndarray,       # [Q, C] bool
+    is_free: jnp.ndarray,      # [Q] bool
+) -> jnp.ndarray:
+    """[C, N] mask of blocks this burst frees, shared by every jnp policy.
+
+    Two free modes: single block id, or FREE_ALL (all blocks owned by lane).
+    Scatter-based construction in O(Q + C·N):
+      * single-block frees scatter (class, arg) hits directly — one [Q]
+        scatter instead of a [Q, C, N] comparison grid;
+      * FREE_ALL resolves through an owner-map sweep: the FREE_ALL
+        (class, lane) requests become a per-class sorted lane list, and
+        every owned block membership-tests its owner against its class's
+        list (binary search, O(C·N·log Q)).
+    Only currently-owned blocks can be freed (double-free of a free block is
+    a nop).  Uses the post-alloc owner map: frees are processed after
+    mallocs, so a block allocated this very step can be freed this step.
+    Semantically identical to the dense-mask reference kept in
+    tests/test_support_core.py (differential-tested bit-exact).
+    """
+    C, N = owner.shape
+    Q = sched.capacity
+    is_single = is_free & (sched.arg >= 0)
+    sgl_c = jnp.where(is_single, cls, C)                                # OOB -> drop
+    sgl_b = jnp.where(is_single & (sched.arg < N), sched.arg, N)
+    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
+
+    is_fa = is_free & (sched.arg == FREE_ALL)
+    # Per-class FREE_ALL lane lists, padded with int32 max (lane id 2**31-1
+    # is reserved as this sentinel — far above the hmq fused-key bound).
+    pad = jnp.int32(2**31 - 1)
+    fa_lanes = jnp.where(is_fa[None, :] & onehot.T, sched.lane[None, :], pad)
+    fa_sorted = jnp.sort(fa_lanes, axis=1)                              # [C, Q]
+    fa_pos = jax.vmap(jnp.searchsorted)(fa_sorted, owner)               # [C, N]
+    whole_lane = (jnp.take_along_axis(
+        fa_sorted, jnp.clip(fa_pos, 0, Q - 1), axis=1) == owner) & (owner != pad)
+    return (single | whole_lane) & (owner >= 0)
 
 
 def _step_scheduled_jnp(
@@ -106,24 +198,7 @@ def _step_scheduled_jnp(
     onehot = (jnp.arange(C, dtype=jnp.int32)[None, :] == cls[:, None])  # [Q, C]
 
     # ---- malloc phase (served from the pre-step stack; frees deferred) ----
-    # Sequential-skip semantics (faithful to the serial HMQ): a request is
-    # granted iff its want fits on top of what EARLIER GRANTED requests of
-    # its class consumed — a failed request consumes nothing for its
-    # successors.  This is a true prefix recurrence (found by the hypothesis
-    # property test: the earlier two-pass cumsum failed requests that only
-    # collided with other *failed* requests), so it runs as a scan over the
-    # queue with [C]-vector state — still batched across classes.
-    def grant_body(consumed, xs):
-        want_i, onehot_i, is_m_i = xs
-        my = jnp.sum(onehot_i * consumed)
-        av = jnp.sum(onehot_i * state.free_top)
-        ok_i = is_m_i & (want_i > 0) & (my + want_i <= av)
-        consumed = consumed + jnp.where(ok_i, want_i, 0) * onehot_i
-        return consumed, (ok_i, my)
-
-    _, (ok, my_goff) = jax.lax.scan(
-        grant_body, jnp.zeros((C,), jnp.int32),
-        (want, onehot.astype(jnp.int32), is_malloc))
+    ok, my_goff = grant_scan(state.free_top, want, onehot, is_malloc)
     fail = is_malloc & ~ok
     granted = jnp.where(ok, want, 0)
     granted_c = granted[:, None] * onehot
@@ -156,35 +231,8 @@ def _step_scheduled_jnp(
     peak = jnp.maximum(state.peak_used, used_after_alloc)
 
     # ---- free phase (deferred append; cannot serve this step's mallocs) ----
-    # Two free modes: single block id, or FREE_ALL (all blocks owned by lane).
-    # Scatter-based construction of the [C, N] free mask in O(Q + C·N):
-    #   * single-block frees scatter (class, arg) hits directly — one [Q]
-    #     scatter instead of a [Q, C, N] comparison grid;
-    #   * FREE_ALL resolves through an owner-map sweep: the FREE_ALL
-    #     (class, lane) requests become a per-class sorted lane list, and
-    #     every owned block membership-tests its owner against its class's
-    #     list (binary search, O(C·N·log Q)).
-    # Semantically identical to the dense-mask reference kept in
-    # tests/test_support_core.py (differential-tested bit-exact).
     blk_ids = jnp.arange(N, dtype=jnp.int32)                            # [N]
-    is_single = is_free & (sched.arg >= 0)
-    sgl_c = jnp.where(is_single, cls, C)                                # OOB -> drop
-    sgl_b = jnp.where(is_single & (sched.arg < N), sched.arg, N)
-    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
-
-    is_fa = is_free & (sched.arg == FREE_ALL)
-    # Per-class FREE_ALL lane lists, padded with int32 max (lane id 2**31-1
-    # is reserved as this sentinel — far above the hmq fused-key bound).
-    pad = jnp.int32(2**31 - 1)
-    fa_lanes = jnp.where(is_fa[None, :] & onehot.T, sched.lane[None, :], pad)
-    fa_sorted = jnp.sort(fa_lanes, axis=1)                              # [C, Q]
-    fa_pos = jax.vmap(jnp.searchsorted)(fa_sorted, owner)               # [C, N]
-    whole_lane = (jnp.take_along_axis(
-        fa_sorted, jnp.clip(fa_pos, 0, Q - 1), axis=1) == owner) & (owner != pad)
-    # Only currently-owned blocks can be freed (double-free of a free block is
-    # a nop).  Uses the post-alloc owner map: frees are processed after
-    # mallocs, so a block allocated this very step can be freed this step.
-    free_mask = (single | whole_lane) & (owner >= 0)
+    free_mask = deferred_free_mask(sched, owner, cls, onehot, is_free)
 
     # Compact freed ids per class and append to the stack.
     freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)      # [C]
@@ -217,8 +265,17 @@ def support_core_step(
     queue: RequestQueue,
     max_blocks_per_req: int = 1,
     backend: Optional[str] = None,
+    policy: Optional[str] = None,
 ) -> tuple[FreeListState, ResponseQueue, StepStats]:
     """Process one HMQ batch against the segregated free lists.
+
+    .. deprecated::
+        This is now a thin wrapper over the :class:`repro.alloc.AllocService`
+        client API (DESIGN.md §9) — kept so the differential suites can prove
+        the new path bit-identical to the historical one, and for raw-queue
+        callers (tests, examples, the sim).  New client code should register
+        tenants on an ``AllocService`` and drive bursts through
+        ``new_burst()`` / ``commit()`` instead of hand-building queues.
 
     Args:
       state: segregated allocator metadata.
@@ -228,42 +285,17 @@ def support_core_step(
       backend: ``"jnp"`` | ``"kernel"`` | ``"kernel-interpret"`` (see module
         docstring); ``None`` resolves ``REPRO_ALLOC_BACKEND``.  Static — the
         choice is baked in at trace time.
+      policy: allocator policy name (``repro.alloc.ALLOC_POLICIES``); ``None``
+        resolves ``REPRO_ALLOC_POLICY`` (default ``"freelist"``, the
+        historical behaviour).
 
     Returns:
-      (new_state, responses_in_caller_order, stats)
+      (new_state, responses_in_caller_order, stats) — ``stats`` is the
+      aggregate :class:`StepStats`; the per-tenant breakdown is only
+      available through the service API.
     """
-    if backend is None:
-        from ..perf_flags import current_flags
-        backend = current_flags().alloc_backend
-    if backend not in ALLOC_BACKENDS:
-        raise ValueError(
-            f"unknown alloc backend {backend!r}; expected one of {ALLOC_BACKENDS}")
-
-    sched, unperm = schedule(queue)
-    if backend == "jnp":
-        new_state, blocks, ok = _step_scheduled_jnp(
-            state, sched, max_blocks_per_req)
-    else:
-        from ..kernels.support_core.ops import support_core_burst
-        new_state, blocks, ok = support_core_burst(
-            state, sched, max_blocks_per_req=max_blocks_per_req,
-            interpret=(backend == "kernel-interpret"))
-
-    # ---- response routing back to caller order (Fig. 7 response queue) ----
-    # Shared across backends: both return scheduled-order (blocks, ok), so
-    # responses and stats are identical by construction given identical
-    # backend outputs (the bit-identity the differential suite proves).
-    is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
-    is_free = sched.op == OP_FREE
-    status_sched = jnp.where(is_malloc, ok,
-                             (sched.op != OP_NOP).astype(jnp.int32))
-    resp = ResponseQueue(blocks=blocks[unperm], status=status_sched[unperm])
-    stats = StepStats(
-        mallocs=jnp.sum(is_malloc).astype(jnp.int32),
-        frees=jnp.sum(is_free).astype(jnp.int32),
-        failed=jnp.sum(is_malloc & (ok == 0)).astype(jnp.int32),
-        blocks_allocated=jnp.sum(blocks != NO_BLOCK).astype(jnp.int32),
-        blocks_freed=jnp.sum(new_state.free_count - state.free_count)
-        .astype(jnp.int32),
-    )
-    return new_state, resp, stats
+    from ..alloc.service import AllocService
+    svc = AllocService(policy=policy, backend=backend)
+    new_state, resp, stats = svc.step(state, queue,
+                                      max_blocks_per_req=max_blocks_per_req)
+    return new_state, resp, stats.core

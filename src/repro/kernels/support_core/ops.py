@@ -1,5 +1,11 @@
 """Jitted public wrapper for the fused support-core burst kernel.
 
+This is the ``kernel`` / ``kernel-interpret`` backend of the *free-list*
+:class:`~repro.alloc.policies.AllocatorPolicy` (DESIGN.md §9): clients
+reach it through ``AllocService.commit``, which hands every policy an
+already-``hmq.schedule``\\ d queue and routes responses backend- and
+policy-independently.
+
 NOTE: ``interpret`` defaults to **False** — interpret mode is an explicit
 test/CI opt-in (the ``"kernel-interpret"`` backend), never the silent
 production path.  ``interpret=False`` requires a TPU (Mosaic) lowering.

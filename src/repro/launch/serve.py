@@ -16,6 +16,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
+from ..alloc import ALLOC_POLICIES
 from ..configs.base import ARCH_IDS, smoke_config
 from ..core.paged_kv import live_pages
 from ..core.support_core import ALLOC_BACKENDS
@@ -108,6 +109,12 @@ def main() -> None:
                          "REPRO_ALLOC_BACKEND env or 'jnp'; 'kernel' is the "
                          "fused Pallas burst, TPU only; 'kernel-interpret' "
                          "runs it through the Pallas interpreter)")
+    ap.add_argument("--alloc-policy", default=None,
+                    choices=list(ALLOC_POLICIES),
+                    help="central-allocator policy (default: "
+                         "REPRO_ALLOC_POLICY env or 'freelist'; 'bitmap' is "
+                         "the address-ordered first-fit AllocatorPolicy — "
+                         "DESIGN.md §9)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -119,7 +126,8 @@ def main() -> None:
     params = init_params(cfg, dtype=jnp.float32)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
     eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg,
-                        alloc_backend=args.alloc_backend)
+                        alloc_backend=args.alloc_backend,
+                        alloc_policy=args.alloc_policy)
     sched = Scheduler(scfg)
 
     requests = synth_requests(cfg, args.requests, rng)
@@ -130,7 +138,7 @@ def main() -> None:
     if sched.failed:
         print(f"FAILED: {len(sched.failed)} request(s) rejected by the allocator")
     print(f"served {len(sched.finished)} requests in {steps} decode steps | "
-          f"alloc_backend={eng.alloc_backend} "
+          f"alloc_backend={eng.alloc_backend} alloc_policy={eng.alloc_policy} "
           f"stash={kvcfg.stash_size}/{kvcfg.stash_watermark}"
           f"/{kvcfg.stash_refill} | "
           f"allocs={int(a.alloc_count[0])} frees={int(a.free_count[0])} "
@@ -142,6 +150,15 @@ def main() -> None:
           f"stash_hit_rate={s.stash_hit_rate:.2f} "
           f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f} "
           f"stash_depth_hist={s.stash_depth_hist}")
+    # per-tenant view: the multi-tenant support-core claim, measured
+    print(f"burst_occupancy={s.burst_occupancy:.2f} | tenants:")
+    for name, rep in eng.tenant_report().items():
+        acc = s.tenants.get(name, {})
+        print(f"  {name}: used={rep['used']}/{rep['quota']} "
+              f"peak={rep['peak_used']} allocs={rep['alloc_count']} "
+              f"frees={rep['free_count']} fails={rep['fail_count']} "
+              f"(burst mallocs={acc.get('mallocs', 0)} "
+              f"failed={acc.get('failed', 0)})")
 
 
 if __name__ == "__main__":

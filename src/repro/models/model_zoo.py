@@ -136,6 +136,7 @@ def make_paged_config(
     stash_size: int | None = None,
     stash_watermark: int | None = None,
     stash_refill: int | None = None,
+    scratch_slots: int | None = None,
 ) -> PagedKVConfig:
     """Size the page pool for `lanes` sequences of up to `seq_len` tokens.
 
@@ -148,6 +149,10 @@ def make_paged_config(
     force the front tier off).  The autotune budget is the pre-stash pool —
     the stash's own claim is added on top below, so autotuned stashes never
     shrink the live-page capacity they were sized against.
+
+    ``scratch_slots`` sizes the per-lane workspace tenant (DESIGN.md §9) —
+    the third client of the one support-core alongside KV pages and state
+    slots.  ``None`` defaults to one slot per lane; 0 disables the tenant.
     """
     pages_per_lane_addr = math.ceil((seq_len + 1) / page_size)
     if cfg.attn_pattern in ("swa", "local_global") and cfg.window:
@@ -206,4 +211,5 @@ def make_paged_config(
         stash_size=stash_size,
         stash_watermark=stash_watermark,
         stash_refill=stash_refill,
+        scratch_slots=lanes if scratch_slots is None else scratch_slots,
     )

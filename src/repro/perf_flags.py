@@ -29,6 +29,10 @@ before -> after for every flag.
                             'kernel-interpret' — same kernel through the
                             Pallas interpreter (test/CI parity; runs
                             anywhere, never a production default)
+  REPRO_ALLOC_POLICY=       'freelist' (baseline: the paper's per-class LIFO
+                            free stacks) | 'bitmap' — address-ordered
+                            first-fit AllocatorPolicy (DESIGN.md §9; jnp
+                            backend only, the policy-parity CI leg)
 """
 from __future__ import annotations
 
@@ -43,6 +47,7 @@ class PerfFlags:
     moe_local_dispatch: bool = False
     pool_layout: str = "pages"        # pages | layers | pages_hd
     alloc_backend: str = "jnp"        # jnp | kernel | kernel-interpret
+    alloc_policy: str = "freelist"    # freelist | bitmap
 
     @classmethod
     def from_env(cls) -> "PerfFlags":
@@ -52,6 +57,7 @@ class PerfFlags:
             moe_local_dispatch=os.environ.get("REPRO_MOE_LOCAL_DISPATCH", "0") == "1",
             pool_layout=os.environ.get("REPRO_POOL_LAYOUT", "pages"),
             alloc_backend=os.environ.get("REPRO_ALLOC_BACKEND", "jnp"),
+            alloc_policy=os.environ.get("REPRO_ALLOC_POLICY", "freelist"),
         )
 
 

@@ -44,6 +44,13 @@ class EngineStats:
     # stash_depth_hist[d] = lane-steps an active lane spent at stash depth d
     # (summed per-step histograms; localizes refill storms — DecodeStats)
     stash_depth_hist: list = dataclasses.field(default_factory=list)
+    # --- multi-tenant telemetry (DESIGN.md §9) ---
+    # tenants[name] = cumulative mallocs/failed/blocks_allocated/blocks_freed
+    # plus the latest occupancy ("used") and the static quota, accumulated
+    # from every burst's per-tenant StepStats breakdown.
+    tenants: dict = dataclasses.field(default_factory=dict)
+    burst_slots_live: int = 0      # non-NOP slots across all issued bursts
+    burst_slots_capacity: int = 0  # total slots across all issued bursts
 
     @property
     def stash_hit_rate(self) -> float:
@@ -58,6 +65,15 @@ class EngineStats:
         if not self.decode_steps:
             return 0.0
         return 1000.0 * self.decode_bursts / self.decode_steps
+
+    @property
+    def burst_occupancy(self) -> float:
+        """Mean fraction of HMQ slots carrying a live packet per issued
+        burst — how well multi-tenant traffic packs the fixed-capacity
+        queue (tracked in BENCH_serving.json)."""
+        if not self.burst_slots_capacity:
+            return 0.0
+        return self.burst_slots_live / self.burst_slots_capacity
 
 
 class AdmissionItem(NamedTuple):
@@ -75,7 +91,8 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, kvcfg: PagedKVConfig, params: dict,
                  dtype=jnp.float32,
                  sched_cfg: Optional[SchedulerConfig] = None,
-                 alloc_backend: Optional[str] = None):
+                 alloc_backend: Optional[str] = None,
+                 alloc_policy: Optional[str] = None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
@@ -83,19 +100,28 @@ class ServingEngine:
         self.sched_cfg = sched_cfg or make_scheduler_config(cfg, kvcfg)
         # Support-core implementation for every allocator touch this engine
         # makes (admission, decode burst, release): jnp | kernel |
-        # kernel-interpret.  Resolved ONCE here (env knob
-        # REPRO_ALLOC_BACKEND) so the jitted decode step bakes it in.
+        # kernel-interpret backend, and the freelist | bitmap policy.
+        # Resolved ONCE here (env knobs REPRO_ALLOC_BACKEND /
+        # REPRO_ALLOC_POLICY) so the jitted decode step bakes them in.
+        from ..perf_flags import current_flags
         if alloc_backend is None:
-            from ..perf_flags import current_flags
             alloc_backend = current_flags().alloc_backend
+        if alloc_policy is None:
+            alloc_policy = current_flags().alloc_policy
         self.alloc_backend = alloc_backend
+        self.alloc_policy = alloc_policy
+        # The support-core's client API handle: tenant table (kv_pages [+
+        # state_slots] [+ scratch]) and per-tenant reporting.
+        self.service = pkv.paged_service(kvcfg)
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
-        # fresh empty state: deactivate the synthetic lanes
+        # fresh empty state: deactivate the synthetic lanes (metadata
+        # initialized by the SAME policy the engine's bursts will run)
         self.state = self.state._replace(
-            paged=pkv.init_paged_kv(kvcfg),
+            paged=pkv.init_paged_kv(kvcfg, policy=alloc_policy),
             tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
         self._decode = jax.jit(make_decode_step(cfg, kvcfg,
-                                                alloc_backend=alloc_backend))
+                                                alloc_backend=alloc_backend,
+                                                alloc_policy=alloc_policy))
         # recurrent admission seeds decode from the last prompt token, so the
         # vocab projection would be dead weight in the jitted prefill
         self._family_prefill = make_family_prefill(
@@ -103,6 +129,36 @@ class ServingEngine:
         self._prefill_cache: dict[tuple, Any] = {}
         self.stats = EngineStats()
         self.window = recycle_window(cfg)
+
+    # ---------------- multi-tenant telemetry ----------------
+
+    def _note_burst(self, per_tenant, queue_live=None, queue_capacity=None,
+                    issued: bool = True) -> None:
+        """Fold one burst's per-tenant StepStats breakdown (and its slot
+        occupancy, when the burst was actually issued) into EngineStats."""
+        # one device->host transfer for everything, not one blocking scalar
+        # fetch per (field, tenant) — this runs every decode step
+        pt, queue_live, queue_capacity = jax.device_get(
+            (per_tenant, queue_live, queue_capacity))
+        for t in self.service.tenants:
+            d = self.stats.tenants.setdefault(t.name, {
+                "mallocs": 0, "failed": 0, "blocks_allocated": 0,
+                "blocks_freed": 0, "used": 0, "quota": t.quota,
+            })
+            c = t.size_class
+            d["mallocs"] += int(pt.mallocs[c])
+            d["failed"] += int(pt.failed[c])
+            d["blocks_allocated"] += int(pt.blocks_allocated[c])
+            d["blocks_freed"] += int(pt.blocks_freed[c])
+            d["used"] = int(pt.used[c])
+        if issued and queue_live is not None:
+            self.stats.burst_slots_live += int(queue_live)
+            self.stats.burst_slots_capacity += int(queue_capacity)
+
+    def tenant_report(self) -> dict[str, dict]:
+        """Current per-tenant occupancy/quota/counters from the live
+        allocator state (service-level snapshot; telemetry + debugging)."""
+        return self.service.tenant_report(self.state.paged.alloc)
 
     # ---------------- admission ----------------
 
@@ -218,9 +274,12 @@ class ServingEngine:
             kv_lens = jnp.asarray(np.asarray(all_kv_len, np.int32)[order])
             paged, stats = pkv.admit_prefill_many(
                 self.kvcfg, self.state.paged, lanes_arr,
-                ks[perm], vs[perm], kv_lens, backend=self.alloc_backend)
+                ks[perm], vs[perm], kv_lens, backend=self.alloc_backend,
+                policy=self.alloc_policy)
             self.stats.hmq_admit_bursts += 1
             self.stats.alloc_failures += int(stats.failed)
+            self._note_burst(stats.per_tenant, stats.queue_live,
+                             stats.queue_capacity)
         else:
             # attention-free (rwkv6): no pages to allocate; activate lanes
             paged = self.state.paged
@@ -282,6 +341,8 @@ class ServingEngine:
         self.stats.decode_bursts += int(stats.bursts)
         self.stats.stash_hits += int(stats.stash_hits)
         self.stats.stash_misses += int(stats.stash_misses)
+        self._note_burst(stats.tenant, stats.queue_live, stats.queue_capacity,
+                         issued=bool(int(stats.bursts)))
         hist = np.asarray(stats.stash_depth_hist)
         if not self.stats.stash_depth_hist:
             self.stats.stash_depth_hist = [0] * hist.shape[0]
@@ -299,9 +360,12 @@ class ServingEngine:
         as served.
         """
         pkts = release_packet_array(list(lanes), self.kvcfg.max_lanes)
-        paged, _ = pkv.release_packets(self.kvcfg, self.state.paged,
-                                       jnp.asarray(pkts),
-                                       backend=self.alloc_backend)
+        paged, stats = pkv.release_packets(self.kvcfg, self.state.paged,
+                                           jnp.asarray(pkts),
+                                           backend=self.alloc_backend,
+                                           policy=self.alloc_policy)
+        self._note_burst(stats.per_tenant, stats.queue_live,
+                         stats.queue_capacity)
         self.state = self.state._replace(paged=paged)
         if completed:
             self.stats.completed += len(lanes)

@@ -106,12 +106,15 @@ def abstract_serve_state(cfg: ArchConfig, kvcfg: PagedKVConfig, lanes: int,
 
 def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
                      hints=None, unroll: bool = False,
-                     alloc_backend: Optional[str] = None):
+                     alloc_backend: Optional[str] = None,
+                     alloc_policy: Optional[str] = None):
     """Returns serve_step(params, state) -> (state, logits, DecodeStats).
 
     ``alloc_backend`` selects the support-core implementation for the
     decode burst (``jnp`` | ``kernel`` | ``kernel-interpret``; None resolves
-    ``REPRO_ALLOC_BACKEND`` at trace time — see DESIGN.md §8).
+    ``REPRO_ALLOC_BACKEND`` at trace time — see DESIGN.md §8);
+    ``alloc_policy`` the central-allocator design (``freelist`` | ``bitmap``;
+    None resolves ``REPRO_ALLOC_POLICY`` — DESIGN.md §9).
     """
     window = recycle_window(cfg)
 
@@ -127,7 +130,7 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
             paged, stats = decode_append(
                 kvcfg, state.paged,
                 new_k.astype(kvcfg.dtype), new_v.astype(kvcfg.dtype),
-                window=window, backend=alloc_backend)
+                window=window, backend=alloc_backend, policy=alloc_policy)
         else:
             # attention-free (rwkv6): no pages; still advance lane clocks
             paged = state.paged._replace(

@@ -125,3 +125,126 @@ def test_refill_priority_between_malloc_and_free():
                                  OP_REFILL, OP_FREE]
     # refills in lane order within their tier
     assert sched.lane.tolist()[2:4] == [0, 3]
+
+
+# --------------------------------------------------------------------------
+# HMQ edge cases through the client API (repro.alloc BurstBuilder/tickets):
+# all-NOP bursts, over-capacity queues, duplicate frees, and the int32
+# fused-key lane bound all behave through the service exactly as they do on
+# raw queues.
+# --------------------------------------------------------------------------
+
+from repro.alloc import AllocService  # noqa: E402
+from repro.core.freelist import validate_freelist  # noqa: E402
+from repro.core.packets import NO_BLOCK, OP_REFILL  # noqa: E402
+from repro.core.support_core import support_core_step  # noqa: E402
+
+
+def _one_tenant_service(capacity=4):
+    svc = AllocService(backend="jnp")
+    svc.register_tenant("pool", capacity=capacity)
+    return svc
+
+
+def test_builder_all_nop_burst_resolves_tickets():
+    """A fully masked (all-NOP) burst: gated commit skips the support-core,
+    the state is bit-identical, and every ticket still resolves (to empty
+    grants / failed status) — no special-casing at call sites."""
+    svc = _one_tenant_service()
+    pool = svc.tenant("pool")
+    state = svc.init_state()
+    lanes = jnp.arange(3, dtype=jnp.int32)
+    off = jnp.zeros((3,), bool)
+    b = svc.new_burst()
+    t_m = b.malloc(pool, lanes, n=1, where=off)
+    t_f = b.free_all(pool, lanes, where=off)
+    new_state, res = svc.commit(state, b, gated=True)
+    assert int(res.live) == 0 and int(res.stats.queue_live) == 0
+    for f in new_state._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(new_state, f)),
+                                      np.asarray(getattr(state, f)))
+    assert np.asarray(res.ok_for(t_m)).tolist() == [False] * 3
+    assert np.asarray(res.ok_for(t_f)).tolist() == [False] * 3
+    assert (np.asarray(res.blocks_for(t_m)) == NO_BLOCK).all()
+
+
+def test_builder_over_capacity_queue():
+    """More live malloc packets than the pool can serve: fairness puts the
+    failures on the latest rounds, tickets report exactly which slots
+    failed, and the metadata never oversubscribes."""
+    svc = _one_tenant_service(capacity=4)
+    pool = svc.tenant("pool")
+    state = svc.init_state()
+    lanes = jnp.array([0, 1, 2, 0, 1, 2], jnp.int32)   # rounds 0 and 1
+    b = svc.new_burst()
+    t = b.malloc(pool, lanes, n=1)
+    state, res = svc.commit(state, b, max_blocks_per_req=1)
+    # round 0 (lanes 0,1,2) fully served; round 1 gets the 1 leftover block
+    assert np.asarray(res.ok_for(t)).tolist() == [True, True, True,
+                                                  True, False, False]
+    assert int(state.used[0]) == 4 and int(state.free_top[0]) == 0
+    assert int(res.stats.failed) == 2
+    validate_freelist(state)
+    # a fixed-capacity build cannot silently drop slots
+    with pytest.raises(ValueError, match="exceeds the queue capacity"):
+        b2 = svc.new_burst()
+        b2.malloc(pool, lanes, n=1)
+        b2.build_queue(capacity=4)
+
+
+def test_builder_duplicate_free_tickets():
+    """Two free tickets naming the same block in one burst: the second is a
+    no-op (frees are idempotent within a step), counters stay exact."""
+    svc = _one_tenant_service(capacity=4)
+    pool = svc.tenant("pool")
+    state = svc.init_state()
+    b = svc.new_burst()
+    t = b.malloc(pool, 0, n=1)
+    state, res = svc.commit(state, b)
+    blk = int(np.asarray(res.blocks_for(t))[0, 0])
+    b = svc.new_burst()
+    t1 = b.free(pool, 0, blk)
+    t2 = b.free(pool, 0, blk)
+    state, res = svc.commit(state, b)
+    # both free packets are processed (status 1) but only one block returns
+    assert np.asarray(res.ok_for(t1)).tolist() == [True]
+    assert np.asarray(res.ok_for(t2)).tolist() == [True]
+    assert int(res.stats.blocks_freed) == 1
+    assert int(state.free_top[0]) == 4 and int(state.used[0]) == 0
+    validate_freelist(state)
+
+
+@pytest.mark.parametrize("offset", [-3, 0, 3])
+def test_builder_max_safe_lanes_boundary(offset):
+    """Lane ids straddling max_safe_lanes through the BurstBuilder: the
+    service path stays bit-identical to the raw-queue wrapper (which the
+    lexicographic oracle above already pins down)."""
+    svc = _one_tenant_service(capacity=3)
+    pool = svc.tenant("pool")
+    q_len = 8
+    base = max(max_safe_lanes(q_len) + offset, 0)
+    ops = [OP_FREE, OP_MALLOC, OP_MALLOC, OP_NOP, OP_MALLOC, OP_FREE,
+           OP_MALLOC, OP_MALLOC]
+    lanes = [base, base + 1, base, 0, base + 1, base, base + 2, 1]
+    b = svc.new_burst()
+    tickets = []
+    for op, lane in zip(ops, lanes):
+        if op == OP_MALLOC:
+            tickets.append(b.malloc(pool, lane, n=1))
+        elif op == OP_FREE:
+            tickets.append(b.free(pool, lane, 1))   # matches arg=1 below
+        else:
+            tickets.append(b.malloc(pool, lane, n=1,
+                                    where=jnp.zeros((), bool)))
+    state_new, res = svc.commit(svc.init_state(), b, max_blocks_per_req=1)
+    q = make_queue(ops, lanes, [0] * q_len, [1] * q_len)
+    state_old, resp, _ = support_core_step(svc.init_state(), q,
+                                           max_blocks_per_req=1)
+    np.testing.assert_array_equal(np.asarray(res.blocks),
+                                  np.asarray(resp.blocks))
+    np.testing.assert_array_equal(np.asarray(res.status),
+                                  np.asarray(resp.status))
+    for f in state_new._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(state_new, f)),
+                                      np.asarray(getattr(state_old, f)))
+    validate_freelist(state_new)

@@ -150,14 +150,17 @@ def test_one_burst_one_compile_and_equivalence(rng):
     kvcfg = make_paged_config(cfg, seq_len=64, lanes=4, page_size=4,
                               dtype=jnp.float32)
 
+    # Count support-core bursts at the client-API seam every caller now goes
+    # through (AllocService.commit), not the deprecated raw-queue wrapper.
+    from repro.alloc.service import AllocService
     calls = {"n": 0}
-    orig = pkv.support_core_step
+    orig = AllocService.commit
 
-    def counting(*a, **kw):
+    def counting(self, *a, **kw):
         calls["n"] += 1
-        return orig(*a, **kw)
+        return orig(self, *a, **kw)
 
-    pkv.support_core_step = counting
+    AllocService.commit = counting
     try:
         eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32)
         prompts = [rng.randint(0, cfg.vocab_size, size=n).astype(np.int32)
@@ -177,7 +180,7 @@ def test_one_burst_one_compile_and_equivalence(rng):
         assert eng2.stats.prefill_compiles == eng.stats.prefill_compiles
         assert eng2.stats.hmq_admit_bursts == 4      # sequential: one per seq
     finally:
-        pkv.support_core_step = orig
+        AllocService.commit = orig
 
     # end-to-end equivalence: batched admission == sequential admission
     assert eng.state.paged.seq_lens.tolist() == eng2.state.paged.seq_lens.tolist()
