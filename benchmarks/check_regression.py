@@ -1,0 +1,99 @@
+"""Bench-regression gate: fail CI when serving metrics regress.
+
+Compares a freshly produced ``BENCH_serving.json`` against the committed
+baseline (``benchmarks/baseline/BENCH_serving.json``) and exits non-zero
+when any gated metric regresses:
+
+* ``requests_per_s`` — end-to-end serving throughput: fail on a drop of
+  more than ``--rps-tol`` (default 15%, wall-clock noise allowance for
+  shared CI runners);
+* ``stash_hit_rate`` — the two-tier front-end's hit rate: fail on an
+  absolute drop beyond 0.02 (it is 1.0 at steady state; any real
+  regression collapses it far further);
+* ``hmq_bursts_per_1k_decode_steps`` — central-allocator pressure on the
+  decode hot path: fail when it grows by more than 25 bursts/1k (the
+  stash keeps it at 0; the pre-stash baseline was 1000).
+
+Usage (the CI serving leg runs it right after the artifact upload)::
+
+    python -m benchmarks.check_regression \
+        [--fresh BENCH_serving.json] \
+        [--baseline benchmarks/baseline/BENCH_serving.json]
+
+The committed baseline is refreshed deliberately, so a PR that
+legitimately shifts a metric updates the baseline in the same diff the
+reviewer sees.  ``stash_hit_rate`` and the burst counter are
+machine-independent; ``requests_per_s`` is wall-clock, so refresh the
+baseline from the ``BENCH_serving`` artifact of a green main-branch CI
+run (same runner fleet as the gate), not from a dev machine — a baseline
+from faster/slower hardware shifts what the 15% tolerance actually
+measures.  The initial committed baseline is from a deliberately slow
+box, leaving the gate headroom rather than false failures.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_FRESH = Path("BENCH_serving.json")
+DEFAULT_BASELINE = Path(__file__).parent / "baseline" / "BENCH_serving.json"
+
+
+def check(fresh: dict, baseline: dict, rps_tol: float = 0.15,
+          hit_rate_tol: float = 0.02, bursts_tol: float = 25.0) -> list[str]:
+    """Returns the list of regression messages (empty == gate passes)."""
+    failures = []
+
+    rps_f, rps_b = fresh["requests_per_s"], baseline["requests_per_s"]
+    if rps_f < rps_b * (1.0 - rps_tol):
+        failures.append(
+            f"requests_per_s regressed {rps_b:.3f} -> {rps_f:.3f} "
+            f"(more than {rps_tol:.0%} drop)")
+
+    hr_f, hr_b = fresh["stash_hit_rate"], baseline["stash_hit_rate"]
+    if hr_f < hr_b - hit_rate_tol:
+        failures.append(
+            f"stash_hit_rate regressed {hr_b:.3f} -> {hr_f:.3f} "
+            f"(more than {hit_rate_tol} absolute drop)")
+
+    b_f = fresh["hmq_bursts_per_1k_decode_steps"]
+    b_b = baseline["hmq_bursts_per_1k_decode_steps"]
+    if b_f > b_b + bursts_tol:
+        failures.append(
+            f"hmq_bursts_per_1k_decode_steps regressed {b_b:.1f} -> {b_f:.1f} "
+            f"(more than +{bursts_tol} bursts/1k decode steps)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fresh", type=Path, default=DEFAULT_FRESH,
+                    help="freshly produced BENCH_serving.json")
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="committed baseline to gate against")
+    ap.add_argument("--rps-tol", type=float, default=0.15,
+                    help="allowed fractional requests_per_s drop")
+    args = ap.parse_args(argv)
+
+    fresh = json.loads(args.fresh.read_text())
+    baseline = json.loads(args.baseline.read_text())
+    failures = check(fresh, baseline, rps_tol=args.rps_tol)
+
+    for key in ("requests_per_s", "stash_hit_rate",
+                "hmq_bursts_per_1k_decode_steps"):
+        print(f"{key}: baseline={baseline[key]:.3f} fresh={fresh[key]:.3f}")
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        print("bench-regression gate FAILED "
+              "(refresh benchmarks/baseline/BENCH_serving.json if the "
+              "shift is intended)", file=sys.stderr)
+        return 1
+    print("bench-regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

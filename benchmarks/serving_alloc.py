@@ -19,9 +19,15 @@ StepStats breakdown (``per_tenant``) and HMQ ``burst_occupancy``; a third
 run on a hybrid arch (zamba2) drives THREE tenants — KV pages, state slots,
 and the scratch workspace — through the one support-core, and a
 ``support_core_step_us_per_tenant`` microbench times a single-tenant burst
-per tenant through the AllocService client API.  Writes
-``BENCH_serving.json`` so the perf trajectory is machine-readable across
-PRs.
+per tenant through the AllocService client API.
+
+Multi-engine scenario (DESIGN.md §10): N=2 engine shards as disjoint
+namespaced tenant sets on ONE shared AllocService drive the async decode
+loop — deferred refills/flushes/releases from both shards merge into one
+commit per burst window — with priority preemption forced under lane
+pressure; BENCH_serving.json gains ``engines``, ``preemptions``, and
+``cross_engine_burst_occupancy``.  Writes ``BENCH_serving.json`` so the
+perf trajectory is machine-readable across PRs.
 """
 import json
 import time
@@ -122,6 +128,56 @@ def _bench_per_tenant_step(iters: int = 8) -> dict:
     return out
 
 
+def _run_multi(cfg, params, n_engines: int = 2, quantum: int = 4) -> dict:
+    """Multi-engine scenario (DESIGN.md §10): N engine shards as disjoint
+    namespaced tenant sets on ONE shared AllocService, the async decode
+    loop merging deferred allocator traffic into one commit per burst
+    window, and priority preemption exercised under lane pressure (the
+    last request per shard outranks the running ones, forcing at least one
+    eviction + resume)."""
+    from repro.serve.multi_engine import MultiEngine
+
+    rng = np.random.RandomState(0)
+    kvcfg = make_paged_config(cfg, seq_len=128, lanes=2, page_size=8,
+                              dtype=jnp.float32, **STASH)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
+    me = MultiEngine(cfg, kvcfg, params, n_engines=n_engines,
+                     dtype=jnp.float32, sched_cfg=scfg, quantum=quantum,
+                     preemption=True)
+    n_requests = 3 * n_engines           # 2 lanes/shard -> the 3rd preempts
+    mk = lambda rid, priority: Request(  # noqa: E731
+        rid=rid,
+        tokens=rng.randint(0, cfg.vocab_size, size=24).astype(np.int32),
+        priority=priority)
+    low = [mk(rid, 0) for rid in range(2 * n_engines)]
+    high = [mk(rid, 1) for rid in range(2 * n_engines, n_requests)]
+    t_start = time.perf_counter()
+    # staged arrival: the low tier fills every lane first, THEN the high
+    # tier lands — with all lanes busy each shard must evict one running
+    # low-priority lane (the preemption path, measured below)
+    me.submit(low, max_new_tokens=8)
+    me.step_window()
+    me.submit(high, max_new_tokens=8)
+    while me.has_work:
+        if not me.step_window():
+            break
+    wall_s = time.perf_counter() - t_start
+    st = me.stats
+    return {
+        "engines": n_engines,
+        "quantum": quantum,
+        "requests": len(me.finished),
+        "requests_failed": len(me.failed),
+        "windows": st.windows,
+        "window_commits": st.window_commits,
+        "preemptions": st.preemptions,
+        "cross_engine_burst_occupancy": st.cross_engine_burst_occupancy,
+        "decode_steps": st.decode_steps,
+        "wall_s": wall_s,
+        "per_tenant_rollup": me.tenant_rollup(),
+    }
+
+
 def _run_once(cfg, params, stash: bool) -> dict:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
@@ -186,6 +242,10 @@ def run() -> list[str]:
     params3 = init_params(cfg3, dtype=jnp.float32)
     three = _run_once(cfg3, params3, stash=True)
 
+    # N engines on ONE shared AllocService with burst-window batching and
+    # preemption (DESIGN.md §10) — reuses the mixtral params already built.
+    multi = _run_multi(cfg, params, n_engines=2)
+
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
     bursts_per_seq = s.hmq_admit_bursts / max(s.admitted, 1)
@@ -216,6 +276,11 @@ def run() -> list[str]:
             "per_tenant": three["per_tenant"],
             "burst_occupancy": three["burst_occupancy"],
         },
+        # --- multi-engine sharding on one shared service (DESIGN.md §10) ---
+        "engines": multi["engines"],
+        "preemptions": multi["preemptions"],
+        "cross_engine_burst_occupancy": multi["cross_engine_burst_occupancy"],
+        "multi_engine": multi,
         # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
         "admitted": s.admitted,
@@ -250,4 +315,10 @@ def run() -> list[str]:
                            f"{d['alloc_count']}allocs"
                            for n, d in three["per_tenant"].items())
                 + f" occupancy={three['burst_occupancy']:.2f}"),
+        csv_row("serving/multi_engine", multi["engines"],
+                f"engines on one AllocService: {multi['requests']} reqs in "
+                f"{multi['windows']} windows "
+                f"({multi['window_commits']} merged commits, "
+                f"occupancy={multi['cross_engine_burst_occupancy']:.2f}) "
+                f"preemptions={multi['preemptions']}"),
     ]

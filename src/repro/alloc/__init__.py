@@ -7,12 +7,14 @@ SpeedMalloc support-core (DESIGN.md §9).
 """
 from .policies import (ALLOC_POLICIES, AllocatorPolicy, BitmapPolicy,
                        FreeListPolicy, get_policy, register_policy)
-from .service import (AllocService, BurstBuilder, BurstResult, BurstStats,
-                      TenantHandle, TenantStats, Ticket, empty_burst_stats)
+from .service import (NAMESPACE_SEP, AllocService, BurstBuilder, BurstResult,
+                      BurstStats, TenantHandle, TenantStats, Ticket,
+                      empty_burst_stats)
 
 __all__ = [
     "ALLOC_POLICIES", "AllocatorPolicy", "BitmapPolicy", "FreeListPolicy",
     "get_policy", "register_policy",
-    "AllocService", "BurstBuilder", "BurstResult", "BurstStats",
-    "TenantHandle", "TenantStats", "Ticket", "empty_burst_stats",
+    "NAMESPACE_SEP", "AllocService", "BurstBuilder", "BurstResult",
+    "BurstStats", "TenantHandle", "TenantStats", "Ticket",
+    "empty_burst_stats",
 ]

@@ -47,6 +47,12 @@ from ..core.support_core import ALLOC_BACKENDS, StepStats
 from .policies import AllocatorPolicy, get_policy
 
 
+#: Separator between an engine namespace and the base tenant name
+#: (``"e0/kv_pages"``): one shared service can carry N engines' disjoint
+#: tenant sets and still roll telemetry up by base name (DESIGN.md §10).
+NAMESPACE_SEP = "/"
+
+
 class TenantHandle(NamedTuple):
     """A registered client of the support-core (maps to one size class).
 
@@ -63,6 +69,17 @@ class TenantHandle(NamedTuple):
     @property
     def quota(self) -> int:
         return self.capacity
+
+    @property
+    def namespace(self) -> str:
+        """Engine namespace prefix (empty for un-namespaced tenants)."""
+        return self.name.rsplit(NAMESPACE_SEP, 1)[0] \
+            if NAMESPACE_SEP in self.name else ""
+
+    @property
+    def base_name(self) -> str:
+        """Tenant name with the engine namespace stripped (rollup key)."""
+        return self.name.rsplit(NAMESPACE_SEP, 1)[-1]
 
 
 class Ticket(NamedTuple):
@@ -262,13 +279,46 @@ class AllocService:
         self._tenants[name] = handle
         return handle
 
-    def tenant(self, name: str) -> TenantHandle:
+    def register_tenants(self, spec: Sequence[tuple[str, int]],
+                         namespace: str = "") -> tuple[TenantHandle, ...]:
+        """Grow the tenant table by a whole client set at once.
+
+        ``spec`` is ``[(base_name, capacity), ...]``; a non-empty
+        ``namespace`` prefixes every name (``"e0" -> "e0/kv_pages"``) so N
+        engine shards register DISJOINT tenant sets on ONE service — the
+        multi-engine sharding scheme (DESIGN.md §10).  Registration order
+        fixes the size-class indices, exactly like single registration.
+        """
+        if namespace and NAMESPACE_SEP in namespace:
+            raise ValueError(
+                f"namespace {namespace!r} must not contain {NAMESPACE_SEP!r}")
+        prefix = f"{namespace}{NAMESPACE_SEP}" if namespace else ""
+        return tuple(self.register_tenant(f"{prefix}{name}", capacity)
+                     for name, capacity in spec)
+
+    def tenant(self, name: str, namespace: str = "") -> TenantHandle:
+        if namespace:
+            name = f"{namespace}{NAMESPACE_SEP}{name}"
         try:
             return self._tenants[name]
         except KeyError:
             raise KeyError(
                 f"unknown tenant {name!r}; registered: "
                 f"{list(self._tenants)}") from None
+
+    def namespace_tenants(self, namespace: str) -> tuple[TenantHandle, ...]:
+        """All tenants registered under one engine namespace."""
+        prefix = f"{namespace}{NAMESPACE_SEP}"
+        return tuple(t for t in self.tenants if t.name.startswith(prefix))
+
+    @property
+    def namespaces(self) -> tuple[str, ...]:
+        """Distinct engine namespaces, in registration order."""
+        seen: dict[str, None] = {}
+        for t in self.tenants:
+            if t.namespace:
+                seen.setdefault(t.namespace, None)
+        return tuple(seen)
 
     @property
     def tenants(self) -> tuple[TenantHandle, ...]:
@@ -342,6 +392,17 @@ class AllocService:
         """
         queue = burst.build_queue() if isinstance(burst, BurstBuilder) \
             else burst
+        if self._tenants and state.num_classes != self.num_classes:
+            # Tenant-table growth after init_state (or a state from another
+            # service) would silently mis-route classes; fail loudly instead.
+            # (A tenant-LESS service is the legacy raw-queue bridge — the
+            # deprecated ``support_core_step`` wrapper — whose callers own
+            # their class layout; it stays unguarded.)
+            raise ValueError(
+                f"allocator state carries {state.num_classes} size classes "
+                f"but this service has {self.num_classes} registered tenants "
+                f"({list(self._tenants)}); register every tenant BEFORE "
+                f"init_state and commit against the matching state")
         policy = self.resolve_policy(policy)
         backend = self.resolve_backend(backend, policy=policy)
         if backend not in policy.backends:
@@ -439,9 +500,16 @@ class AllocService:
 
     # ---------------- host-side reporting ----------------
 
-    def tenant_report(self, state: FreeListState) -> dict[str, dict]:
+    def tenant_report(self, state: FreeListState,
+                      tenants: Optional[Sequence[TenantHandle]] = None,
+                      ) -> dict[str, dict]:
         """Host-side per-tenant occupancy/quota/counter snapshot
-        (telemetry + readable quota-bug errors; not jittable)."""
+        (telemetry + readable quota-bug errors; not jittable).
+
+        ``tenants`` restricts the report to a subset of handles — an engine
+        shard passes its own tenant set so its report never mixes in the
+        other shards sharing the service.
+        """
         import numpy as np
         used = np.asarray(state.used)
         peak = np.asarray(state.peak_used)
@@ -449,7 +517,7 @@ class AllocService:
         frees = np.asarray(state.free_count)
         fails = np.asarray(state.fail_count)
         out = {}
-        for t in self.tenants:
+        for t in (self.tenants if tenants is None else tenants):
             c = t.size_class
             out[t.name] = {
                 "size_class": c,
@@ -460,6 +528,28 @@ class AllocService:
                 "free_count": int(frees[c]),
                 "fail_count": int(fails[c]),
             }
+        return out
+
+    def rollup_report(self, state: FreeListState) -> dict[str, dict]:
+        """Cross-engine per-tenant rollup: aggregate the report by BASE
+        tenant name across every namespace sharing this service.
+
+        ``"e0/kv_pages"`` + ``"e1/kv_pages"`` -> one ``"kv_pages"`` row with
+        summed quota/used/counters and an ``engines`` count — the
+        many-clients-one-core view of the multi-engine deployment
+        (DESIGN.md §10; BENCH_serving.json ``cross_engine`` block).
+        """
+        out: dict[str, dict] = {}
+        for t, rep in zip(self.tenants,
+                          self.tenant_report(state).values()):
+            d = out.setdefault(t.base_name, {
+                "engines": 0, "quota": 0, "used": 0, "peak_used": 0,
+                "alloc_count": 0, "free_count": 0, "fail_count": 0,
+            })
+            d["engines"] += 1
+            for k in ("quota", "used", "peak_used", "alloc_count",
+                      "free_count", "fail_count"):
+                d[k] += rep[k]
         return out
 
     def tenant_names(self) -> tuple[str, ...]:

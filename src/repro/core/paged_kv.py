@@ -42,7 +42,8 @@ import jax.numpy as jnp
 
 if TYPE_CHECKING:  # runtime import is lazy: repro.alloc <-> repro.core would
     # otherwise cycle through the repro.core package __init__
-    from ..alloc.service import AllocService, BurstStats, TenantStats
+    from ..alloc.service import (AllocService, BurstStats, TenantHandle,
+                                 TenantStats)
 from .freelist import FreeListState
 from .lane_stash import (LaneStashState, below_watermark, init_stash,
                          stash_clear, stash_pop, stash_push, stash_push_batch,
@@ -162,6 +163,51 @@ class DecodeStats(NamedTuple):
         return self.core.blocks_freed
 
 
+class PagedTenants(NamedTuple):
+    """One engine's view of its allocator clients on an AllocService.
+
+    Everything the paged-KV layer needs to speak to the support-core:
+    the service plus the KV-page / state-slot / scratch tenant handles.
+    With the default per-config service the handles sit at the historical
+    class constants (``kv.size_class == KV_CLASS`` ...); on a SHARED
+    multi-engine service each shard's handles carry its own namespaced
+    classes (``"e1/kv_pages"`` etc. — DESIGN.md §10), and every function in
+    this module indexes metadata through the handles, never the constants.
+    """
+
+    service: "AllocService"
+    kv: "TenantHandle"
+    state: Optional["TenantHandle"] = None
+    scratch: Optional["TenantHandle"] = None
+
+    @property
+    def handles(self) -> tuple:
+        """The registered handles, in class order (for telemetry loops)."""
+        return tuple(t for t in (self.kv, self.state, self.scratch)
+                     if t is not None)
+
+
+def _tenant_spec(cfg: PagedKVConfig) -> list[tuple[str, int]]:
+    spec = [(KV_TENANT, cfg.num_pages)]
+    if cfg.state_slots:
+        spec.append((STATE_TENANT, cfg.state_slots))
+    if cfg.scratch_slots:
+        spec.append((SCRATCH_TENANT, cfg.scratch_slots))
+    return spec
+
+
+def register_paged_tenants(svc: "AllocService", cfg: PagedKVConfig,
+                           namespace: str = "") -> PagedTenants:
+    """Register this config's tenant set on ``svc`` (optionally namespaced)
+    and return the engine-side view.  The multi-engine entry point: each
+    shard calls this ONCE on the one shared service before ``init_state``."""
+    handles = svc.register_tenants(_tenant_spec(cfg), namespace=namespace)
+    by_base = {t.base_name: t for t in handles}
+    return PagedTenants(service=svc, kv=by_base[KV_TENANT],
+                        state=by_base.get(STATE_TENANT),
+                        scratch=by_base.get(SCRATCH_TENANT))
+
+
 @functools.lru_cache(maxsize=None)
 def paged_service(cfg: PagedKVConfig) -> "AllocService":
     """The AllocService every paged-KV allocator touch goes through.
@@ -175,12 +221,20 @@ def paged_service(cfg: PagedKVConfig) -> "AllocService":
     """
     from ..alloc.service import AllocService
     svc = AllocService()
-    svc.register_tenant(KV_TENANT, capacity=cfg.num_pages)
-    if cfg.state_slots:
-        svc.register_tenant(STATE_TENANT, capacity=cfg.state_slots)
-    if cfg.scratch_slots:
-        svc.register_tenant(SCRATCH_TENANT, capacity=cfg.scratch_slots)
+    svc.register_tenants(_tenant_spec(cfg))
     return svc
+
+
+@functools.lru_cache(maxsize=None)
+def paged_tenants(cfg: PagedKVConfig) -> PagedTenants:
+    """The default (un-namespaced, per-config service) tenant view."""
+    svc = paged_service(cfg)
+    return PagedTenants(
+        service=svc,
+        kv=svc.tenant(KV_TENANT),
+        state=svc.tenant(STATE_TENANT) if cfg.state_slots else None,
+        scratch=svc.tenant(SCRATCH_TENANT) if cfg.scratch_slots else None,
+    )
 
 
 def num_alloc_classes(cfg: PagedKVConfig) -> int:
@@ -189,13 +243,25 @@ def num_alloc_classes(cfg: PagedKVConfig) -> int:
 
 
 def init_paged_kv(cfg: PagedKVConfig,
-                  policy: Optional[str] = None) -> PagedKVState:
+                  policy: Optional[str] = None,
+                  alloc: Optional[FreeListState] = None,
+                  tenants: Optional[PagedTenants] = None) -> PagedKVState:
     """Fresh paged-KV state.  ``policy`` must name the allocator policy the
     engine will run (a policy may have a custom ``init``); ``None`` resolves
-    the ``REPRO_ALLOC_POLICY`` env knob, like every burst."""
+    the ``REPRO_ALLOC_POLICY`` env knob, like every burst.
+
+    ``alloc`` installs an EXISTING allocator state instead of creating one —
+    the multi-engine path, where one shared ``FreeListState`` (covering
+    every shard's namespaced classes) is created once by the shared service
+    and threaded through all shards.  ``tenants`` names the service to
+    create the metadata on when ``alloc`` is not given.
+    """
     shape = (cfg.num_pages, cfg.num_kv_layers, cfg.page_size, cfg.kv_heads, cfg.head_dim)
+    if alloc is None:
+        svc = (tenants or paged_tenants(cfg)).service
+        alloc = svc.init_state(policy=policy)
     return PagedKVState(
-        alloc=paged_service(cfg).init_state(policy=policy),
+        alloc=alloc,
         block_tables=jnp.full((cfg.max_lanes, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32),
         seq_lens=jnp.zeros((cfg.max_lanes,), jnp.int32),
         active=jnp.zeros((cfg.max_lanes,), bool),
@@ -223,6 +289,7 @@ def admit_prefill_many(
     lengths: jnp.ndarray,         # [B] int32, each <= T
     backend: Optional[str] = None,
     policy: Optional[str] = None,
+    tenants: Optional[PagedTenants] = None,
 ) -> tuple[PagedKVState, BurstStats]:
     """Admit B prefilled sequences with a single support-core step.
 
@@ -253,14 +320,15 @@ def admit_prefill_many(
     resp_width = max(max_pages, pre)
     forced_fail = jnp.int32(resp_width + 1)
 
-    svc = paged_service(cfg)
+    tenants = tenants if tenants is not None else paged_tenants(cfg)
+    svc = tenants.service
     burst = svc.new_burst()
-    t_kv = burst.malloc(svc.tenant(KV_TENANT), lanes,
+    t_kv = burst.malloc(tenants.kv, lanes,
                         n=jnp.where(fits, n_pages, forced_fail))
-    t_state = burst.malloc(svc.tenant(STATE_TENANT), lanes,
+    t_state = burst.malloc(tenants.state, lanes,
                            n=jnp.where(fits, jnp.int32(1), forced_fail)) \
         if cfg.state_slots else None
-    t_scratch = burst.malloc(svc.tenant(SCRATCH_TENANT), lanes,
+    t_scratch = burst.malloc(tenants.scratch, lanes,
                              n=jnp.where(fits, jnp.int32(1), forced_fail)) \
         if cfg.scratch_slots else None
     if cfg.stash_size:
@@ -271,7 +339,7 @@ def admit_prefill_many(
         # after every plain malloc), so under scarcity the pre-charge fails
         # first and admission itself is unaffected (an empty stash is
         # benign).
-        t_pre = burst.refill(svc.tenant(KV_TENANT), lanes,
+        t_pre = burst.refill(tenants.kv, lanes,
                              n=jnp.where(fits, jnp.int32(pre), forced_fail))
     alloc, res = svc.commit(state.alloc, burst,
                             max_blocks_per_req=resp_width,
@@ -289,7 +357,8 @@ def admit_prefill_many(
             if t is not None:
                 required = required + jnp.sum(~res.ok_for(t)).astype(jnp.int32)
         pt = stats.per_tenant
-        pt = pt._replace(failed=pt.failed.at[KV_CLASS].set(kv_required))
+        pt = pt._replace(
+            failed=pt.failed.at[tenants.kv.size_class].set(kv_required))
         stats = stats._replace(core=stats.core._replace(failed=required),
                                per_tenant=pt)
 
@@ -365,17 +434,34 @@ def admit_prefill(
     length: jnp.ndarray,          # scalar int32, <= T
     backend: Optional[str] = None,
     policy: Optional[str] = None,
+    tenants: Optional[PagedTenants] = None,
 ) -> tuple[PagedKVState, BurstStats]:
     """Admit one prefilled sequence (batch-of-one :func:`admit_prefill_many`)."""
     lanes = jnp.asarray(lane, jnp.int32).reshape(1)
     lengths = jnp.asarray(length, jnp.int32).reshape(1)
     return admit_prefill_many(cfg, state, lanes, k[None], v[None], lengths,
-                              backend=backend, policy=policy)
+                              backend=backend, policy=policy, tenants=tenants)
 
 
 # --------------------------------------------------------------------------
 # Decode: append one token per active lane; allocate pages at boundaries.
 # --------------------------------------------------------------------------
+
+class PendingDecodeOps(NamedTuple):
+    """Deferrable central-allocator traffic one decode step produced.
+
+    Emitted by :func:`decode_append` in ``defer_refill`` mode instead of
+    committing refills/flushes in-step: the multi-engine burst window
+    accumulates these across a scheduling quantum (for EVERY engine shard)
+    and serves them all with ONE merged support-core commit (DESIGN.md
+    §10).  None of it is on the token critical path — only emergency
+    mallocs are, and those stay in-step.
+    """
+
+    below: jnp.ndarray         # [L] bool — lanes wanting a stash refill
+    flush_mask: jnp.ndarray    # [L] bool — recycled pages that overflowed
+    flush_blocks: jnp.ndarray  # [L] int32 — their block ids (NO_BLOCK else)
+
 
 def decode_append(
     cfg: PagedKVConfig,
@@ -385,7 +471,9 @@ def decode_append(
     window: Optional[int] = None,  # SWA window (tokens); enables page recycling
     backend: Optional[str] = None,
     policy: Optional[str] = None,
-) -> tuple[PagedKVState, DecodeStats]:
+    tenants: Optional[PagedTenants] = None,
+    defer_refill: bool = False,
+):
     """Append one token per active lane through the two-tier allocator.
 
     Tier 1 (stash, when ``cfg.stash_size > 0``): page-boundary lanes pop
@@ -400,6 +488,17 @@ def decode_append(
     steps never touch the central allocator.  With the stash disabled the
     burst is exactly the pre-stash one (bit-identical behaviour), still
     gated by the same all-NOP predicate.
+
+    ``defer_refill=True`` (static; the multi-engine async decode loop) keeps
+    ONLY the on-path emergency mallocs in the in-step burst and returns the
+    refill/flush traffic as a third :class:`PendingDecodeOps` result, to be
+    merged across engines and steps into one commit per burst window.
+    Deferral never changes token output: refills only move pages between the
+    central stack and lane stashes, and flushed dead pages stay owner-mapped
+    (hence reclaimable by ``FREE_ALL``) until the window commit frees them.
+
+    Returns ``(state, DecodeStats)`` — plus ``PendingDecodeOps`` when
+    ``defer_refill`` is set.
     """
     ps = cfg.page_size
     L = cfg.max_lanes
@@ -446,21 +545,25 @@ def decode_append(
         block_tables = state.block_tables
 
     # --- tier 2: one bulk HMQ burst (emergency + refill + flush), gated.
-    svc = paged_service(cfg)
-    kv = svc.tenant(KV_TENANT)
+    # In defer mode the burst carries ONLY the on-path emergency mallocs;
+    # refills and flushes accumulate in the caller's burst window.
+    tenants = tenants if tenants is not None else paged_tenants(cfg)
+    svc, kv = tenants.service, tenants.kv
     burst = svc.new_burst()
     t_malloc = burst.malloc(kv, lane_ids, 1, where=missed)
-    if S:
+    below = below_watermark(stash, state.active, cfg.stash_watermark) \
+        if S else jnp.zeros((L,), bool)
+    if S and not defer_refill:
         # refill priority: scheduled after every plain malloc in the batch,
         # so a bulk refill can never starve another lane's boundary
         # allocation.
-        below = below_watermark(stash, state.active, cfg.stash_watermark)
         t_refill = burst.refill(kv, lane_ids, cfg.stash_refill, where=below)
-    if overflow is not None:
+    if overflow is not None and not defer_refill:
         burst.free(kv, lane_ids, dead_block, where=overflow)
     alloc, res = svc.commit(
         state.alloc, burst,
-        max_blocks_per_req=max(1, cfg.stash_refill if S else 1),
+        max_blocks_per_req=max(1, cfg.stash_refill if S and not defer_refill
+                               else 1),
         backend=backend, policy=policy, gated=True)
 
     # --- install newly obtained pages into block tables (stash pop wins;
@@ -475,13 +578,14 @@ def decode_append(
     ].set(jnp.where(got, page_for_lane, NO_BLOCK), mode="drop")
 
     # --- install bulk-refill grants into the stash
-    if S:
+    if S and not defer_refill:
         r_got = res.ok_for(t_refill) & below
         stash = stash_push_batch(stash,
                                  res.blocks_for(t_refill)[:, :cfg.stash_refill],
                                  cfg.stash_refill, r_got)
         refill_failed = jnp.sum(below & ~r_got).astype(jnp.int32)
     else:
+        # deferred refills fail (benignly) at the window commit, not here
         refill_failed = jnp.zeros((), jnp.int32)
 
     # --- write the new token's K/V into each lane's current page
@@ -515,7 +619,17 @@ def decode_append(
         queue_live=res.stats.queue_live,
         queue_capacity=res.stats.queue_capacity,
     )
-    return new, dstats
+    if not defer_refill:
+        return new, dstats
+    if overflow is not None:
+        pending = PendingDecodeOps(
+            below=below, flush_mask=overflow,
+            flush_blocks=jnp.where(overflow, dead_block, NO_BLOCK))
+    else:
+        pending = PendingDecodeOps(
+            below=below, flush_mask=jnp.zeros((L,), bool),
+            flush_blocks=jnp.full((L,), NO_BLOCK, jnp.int32))
+    return new, dstats, pending
 
 
 def stash_depth_histogram(cfg: PagedKVConfig, stash: LaneStashState,
@@ -532,12 +646,17 @@ def stash_depth_histogram(cfg: PagedKVConfig, stash: LaneStashState,
         jnp.where(active, depth, bins)].add(1, mode="drop")
 
 
-def empty_decode_stats(cfg: PagedKVConfig) -> DecodeStats:
+def empty_decode_stats(cfg: PagedKVConfig,
+                       tenants: Optional[PagedTenants] = None) -> DecodeStats:
     """All-zero DecodeStats matching this config's histogram and tenant
-    shapes (the attention-free decode branch and other no-allocator steps)."""
+    shapes (the attention-free decode branch and other no-allocator steps).
+    ``tenants`` supplies the class count when the engine rides a shared
+    multi-engine service (whose ``[C]`` spans every shard)."""
     z = jnp.zeros((), jnp.int32)
     from ..alloc.service import empty_burst_stats
-    zero = empty_burst_stats(num_alloc_classes(cfg))
+    C = tenants.service.num_classes if tenants is not None \
+        else num_alloc_classes(cfg)
+    zero = empty_burst_stats(C)
     return DecodeStats(core=zero.core, tenant=zero.per_tenant,
                        failed=z, refill_failed=z,
                        stash_hits=z, stash_misses=z, bursts=z,
@@ -557,6 +676,7 @@ def release_packets(
     lane_ids: jnp.ndarray,        # [K] int32 packet slots; NO_LANE = empty slot
     backend: Optional[str] = None,
     policy: Optional[str] = None,
+    tenants: Optional[PagedTenants] = None,
 ) -> tuple[PagedKVState, BurstStats]:
     """Release lanes through FREE_ALL request packets in one support-core step.
 
@@ -573,30 +693,46 @@ def release_packets(
     lane_ids = lane_ids.astype(jnp.int32)
     valid = lane_ids >= 0
     safe = jnp.clip(lane_ids, 0, cfg.max_lanes - 1)
-    svc = paged_service(cfg)
+    tenants = tenants if tenants is not None else paged_tenants(cfg)
+    svc = tenants.service
     burst = svc.new_burst()
-    burst.free_all(svc.tenant(KV_TENANT), safe, where=valid)
-    if cfg.state_slots:
-        burst.free_all(svc.tenant(STATE_TENANT), safe, where=valid)
-    if cfg.scratch_slots:
-        burst.free_all(svc.tenant(SCRATCH_TENANT), safe, where=valid)
+    stage_release_ops(tenants, burst, safe, valid)
     alloc, res = svc.commit(state.alloc, burst, max_blocks_per_req=1,
                             backend=backend, policy=policy)
     release_mask = jnp.zeros((cfg.max_lanes,), bool).at[
         jnp.where(valid, safe, cfg.max_lanes)].set(True, mode="drop")
+    return clear_released_lanes(state._replace(alloc=alloc),
+                                release_mask), res.stats
+
+
+def stage_release_ops(tenants: PagedTenants, burst,
+                      lane_ids: jnp.ndarray, valid) -> None:
+    """Stage one FREE_ALL packet per configured tenant per lane slot onto an
+    open burst (shared by :func:`release_packets` and the multi-engine
+    window commit, which merges many shards' releases into one burst)."""
+    for t in tenants.handles:
+        burst.free_all(t, lane_ids, where=valid)
+
+
+def clear_released_lanes(state: PagedKVState,
+                         release_mask: jnp.ndarray) -> PagedKVState:
+    """Clear the host-side metadata rows of released lanes (block table,
+    seq_lens, active, state/scratch slots, stash rows).  The blocks
+    themselves return to the central stack via the FREE_ALL packets — which
+    the caller either committed already (:func:`release_packets`) or staged
+    into a pending burst window (the multi-engine async loop, where the
+    lane's pages stay owner-mapped until the window commit sweeps them)."""
     keep = ~release_mask
-    new = state._replace(
-        alloc=alloc,
+    return state._replace(
         block_tables=jnp.where(release_mask[:, None], NO_BLOCK, state.block_tables),
         seq_lens=jnp.where(keep, state.seq_lens, 0),
         active=state.active & keep,
         state_slot=jnp.where(keep, state.state_slot, NO_BLOCK),
-        # stashed pages are owner-mapped to the lane, so the FREE_ALL above
-        # already returned them to the central stack; just clear the rows
+        # stashed pages are owner-mapped to the lane, so the FREE_ALL
+        # reclaims them centrally; the host only clears the rows
         stash=stash_clear(state.stash, release_mask),
         scratch_slot=jnp.where(keep, state.scratch_slot, NO_BLOCK),
     )
-    return new, res.stats
 
 
 def release_lanes(
@@ -605,11 +741,13 @@ def release_lanes(
     release_mask: jnp.ndarray,    # [max_lanes] bool
     backend: Optional[str] = None,
     policy: Optional[str] = None,
+    tenants: Optional[PagedTenants] = None,
 ) -> tuple[PagedKVState, BurstStats]:
     """Dense-mask release (legacy shape; routed through the packet path)."""
     lane_ids = jnp.where(release_mask,
                          jnp.arange(cfg.max_lanes, dtype=jnp.int32), NO_LANE)
-    return release_packets(cfg, state, lane_ids, backend=backend, policy=policy)
+    return release_packets(cfg, state, lane_ids, backend=backend,
+                           policy=policy, tenants=tenants)
 
 
 # --------------------------------------------------------------------------
@@ -675,9 +813,11 @@ def gather_kv_window(
     return k, v, pos, valid
 
 
-def live_pages(state: PagedKVState) -> jnp.ndarray:
-    """Currently allocated KV pages (telemetry / blowup tracking)."""
-    return state.alloc.used[KV_CLASS]
+def live_pages(state: PagedKVState, kv_class: int = KV_CLASS) -> jnp.ndarray:
+    """Currently allocated KV pages (telemetry / blowup tracking).
+    ``kv_class`` selects the engine's namespaced class on a shared
+    multi-engine allocator state (default: the historical class 0)."""
+    return state.alloc.used[kv_class]
 
 
 def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
@@ -689,18 +829,25 @@ def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
     return in_use
 
 
-def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState) -> None:
+def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,
+                      tenants: Optional[PagedTenants] = None) -> None:
     """Host-side invariant check for the full paged-KV allocator state:
     I1–I4 on the segregated metadata plus I5 — every KV page is exactly one
     of {central free stack, lane stash, block-table referenced}.  Failures
     raise :class:`~repro.core.freelist.FreelistInvariantError` labelled with
-    the tenant names, so a tenant-quota bug reads as a per-tenant report."""
+    the tenant names, so a tenant-quota bug reads as a per-tenant report.
+
+    ``tenants`` points the check at the engine's namespaced classes on a
+    shared multi-engine state (I1–I4 then cover EVERY shard's classes; I5's
+    stash partition runs against this engine's own KV class).
+    """
     from .freelist import validate_freelist
+    tenants = tenants if tenants is not None else paged_tenants(cfg)
     validate_freelist(
         state.alloc,
         stash_pages=state.stash.pages,
         stash_depth=state.stash.depth,
         in_use=kv_pages_in_use(cfg, state),
-        stash_class=KV_CLASS,
-        tenant_names=paged_service(cfg).tenant_names(),
+        stash_class=tenants.kv.size_class,
+        tenant_names=tenants.service.tenant_names(),
     )

@@ -8,6 +8,13 @@ scheduler (DESIGN.md §3) — waiting queue -> prefill buckets -> running lanes
 most one XLA compile per prefill bucket; decode issues one HMQ batch per
 step; completion releases lanes through OP_FREE/FREE_ALL packets.  Prints
 allocator + scheduler telemetry (live pages, peak, bursts, compiles).
+
+``--engines N`` (N > 1) switches to the multi-engine sharded deployment
+(DESIGN.md §10): N engine shards registered as disjoint namespaced tenant
+sets on ONE shared AllocService, an async decode loop that merges every
+shard's deferrable allocator traffic into one commit per ``--quantum``-step
+burst window, and (with ``--preemption``) scheduler eviction of
+lowest-priority lanes under pool pressure.
 """
 from __future__ import annotations
 
@@ -21,11 +28,16 @@ from ..configs.base import ARCH_IDS, smoke_config
 from ..core.paged_kv import live_pages
 from ..core.support_core import ALLOC_BACKENDS
 from ..models import init_params, make_paged_config
-from ..serve.engine import AdmissionItem, ServingEngine
+from ..serve.engine import ServingEngine, run_admission
+from ..serve.multi_engine import MultiEngine
+from ..serve.router import ROUTER_POLICIES
 from ..serve.scheduler import Request, Scheduler, make_scheduler_config
 
 
-def synth_requests(cfg, n: int, rng: np.random.RandomState) -> list[Request]:
+def synth_requests(cfg, n: int, rng: np.random.RandomState,
+                   priority_every: int = 0) -> list[Request]:
+    """Larson-style synthetic request mix.  ``priority_every=k`` marks every
+    k-th request priority 1 (the preemption demo's high-priority tier)."""
     reqs = []
     for rid in range(n):
         plen = int(rng.pareto(2.0) * 20) % 96 + 8
@@ -36,6 +48,8 @@ def synth_requests(cfg, n: int, rng: np.random.RandomState) -> list[Request]:
                     if cfg.family == "audio" else None),
             patches=(rng.randn(4, cfg.d_model).astype(np.float32)
                      if cfg.family == "vlm" else None),
+            priority=1 if priority_every and rid and rid % priority_every == 0
+            else 0,
         ))
     return reqs
 
@@ -43,14 +57,19 @@ def synth_requests(cfg, n: int, rng: np.random.RandomState) -> list[Request]:
 def serve_loop(eng: ServingEngine, sched: Scheduler,
                requests: list[Request], max_new_tokens: int,
                log_every: int = 8, verbose: bool = True,
-               step_times_us: list | None = None) -> int:
+               step_times_us: list | None = None,
+               preemption: bool = False) -> int:
     """Drive the scheduler/engine lifecycle until every request completes.
 
     Returns the number of decode steps taken.  When ``step_times_us`` is
     given, per-decode-step wall times (µs) are appended to it (benchmark
     hook).  If admission starves with nothing running — the pool cannot fit
     any waiting request — the loop stops and reports the stranded requests
-    loudly rather than silently undercounting.
+    loudly rather than silently undercounting.  ``preemption`` enables the
+    scheduler's priority eviction (DESIGN.md §10): when a waiting request
+    outranks a running one and admission is stuck, the lowest-priority
+    running lane is FREE_ALLed and its request re-queued with its generated
+    prefix.
     """
     import time
 
@@ -60,24 +79,18 @@ def serve_loop(eng: ServingEngine, sched: Scheduler,
 
     step = 0
     while sched.has_work:
-        plan = sched.plan_admission(eng.free_pages)
-        if plan.size:
-            items = [AdmissionItem(lane, r.tokens, r.frames, r.patches)
-                     for b in plan.batches for lane, r in b.items]
-            failed = eng.admit_many(items)   # failed lanes come back reclaimed
-            sched.commit_admission(plan)
-            if failed:
-                sched.fail_admission(failed)
-                print(f"WARNING: allocator rejected admission of "
-                      f"{len(failed)} request(s) (pool exhausted)")
+        progressed = run_admission(eng, sched, preemption=preemption)
         if not sched.running:
+            if progressed:
+                continue     # whole batch retired at the admission seed
+                             # (max_new_tokens == 1): admit the next one
             break                      # nothing admissible: pool too small
         t0 = time.perf_counter()
-        eng.step()
+        tokens = eng.step()
         if step_times_us is not None:
             step_times_us.append((time.perf_counter() - t0) * 1e6)
         step += 1
-        finished = sched.note_decode_step()
+        finished = sched.note_decode_step(tokens)
         if finished:
             eng.release(finished)
             sched.complete(finished)
@@ -93,6 +106,40 @@ def serve_loop(eng: ServingEngine, sched: Scheduler,
     return step
 
 
+def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
+    """Multi-engine sharded serving path of the launcher (DESIGN.md §10)."""
+    me = MultiEngine(cfg, kvcfg, params, n_engines=args.engines,
+                     dtype=jnp.float32, sched_cfg=scfg,
+                     quantum=args.quantum, preemption=args.preemption,
+                     router=args.router, alloc_backend=args.alloc_backend,
+                     alloc_policy=args.alloc_policy)
+    windows = me.serve(requests, max_new_tokens=args.max_new_tokens,
+                       verbose=True)
+    st = me.stats
+    failed = me.failed
+    if failed:
+        print(f"FAILED: {len(failed)} request(s) rejected by the allocator")
+    print(f"served {len(me.finished)} requests across {args.engines} engines "
+          f"in {windows} windows ({st.decode_steps} engine-steps) | "
+          f"alloc_backend={me.alloc_backend} alloc_policy={me.alloc_policy} "
+          f"router={args.router} quantum={args.quantum} "
+          f"preemption={args.preemption} | "
+          f"window_commits={st.window_commits} "
+          f"cross_engine_burst_occupancy={st.cross_engine_burst_occupancy:.2f} "
+          f"preemptions={st.preemptions}")
+    for i, eng in enumerate(me.engines):
+        s = eng.stats
+        print(f"  e{i}: admitted={s.admitted} completed={s.completed} "
+              f"decode_steps={s.decode_steps} "
+              f"stash_hit_rate={s.stash_hit_rate:.2f} "
+              f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f}")
+    print("cross-engine tenant rollup (one shared AllocService):")
+    for name, d in me.tenant_rollup().items():
+        print(f"  {name}: engines={d['engines']} used={d['used']}/{d['quota']} "
+              f"peak={d['peak_used']} allocs={d['alloc_count']} "
+              f"frees={d['free_count']} fails={d['fail_count']}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", required=True, choices=ARCH_IDS)
@@ -100,6 +147,22 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=24)
     ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--engines", type=int, default=1,
+                    help="engine shards on ONE shared AllocService; >1 "
+                         "drives the multi-engine async loop (DESIGN.md §10)")
+    ap.add_argument("--quantum", type=int, default=4,
+                    help="burst-window length in decode steps (multi-engine "
+                         "loop): deferred allocator traffic from every shard "
+                         "merges into one commit per window")
+    ap.add_argument("--preemption", action="store_true",
+                    help="evict the lowest-priority running lane when a "
+                         "higher-priority request cannot be admitted")
+    ap.add_argument("--router", default="round_robin",
+                    choices=list(ROUTER_POLICIES),
+                    help="multi-engine request routing policy")
+    ap.add_argument("--priority-every", type=int, default=0,
+                    help="mark every k-th synthetic request priority 1 "
+                         "(exercises --preemption)")
     ap.add_argument("--stash-size", type=int, default=None,
                     help="per-lane page-stash size (0 disables the front "
                          "tier; default: autotuned from boundary cadence)")
@@ -125,13 +188,20 @@ def main() -> None:
                               stash_size=args.stash_size)
     params = init_params(cfg, dtype=jnp.float32)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
+    requests = synth_requests(cfg, args.requests, rng,
+                              priority_every=args.priority_every)
+
+    if args.engines > 1:
+        serve_multi(cfg, kvcfg, params, scfg, requests, args)
+        return
+
     eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg,
                         alloc_backend=args.alloc_backend,
                         alloc_policy=args.alloc_policy)
     sched = Scheduler(scfg)
 
-    requests = synth_requests(cfg, args.requests, rng)
-    steps = serve_loop(eng, sched, requests, args.max_new_tokens)
+    steps = serve_loop(eng, sched, requests, args.max_new_tokens,
+                       preemption=args.preemption)
 
     a = eng.state.paged.alloc
     s = eng.stats
@@ -146,7 +216,8 @@ def main() -> None:
           f"live={int(live_pages(eng.state.paged))} | "
           f"admit_bursts={s.hmq_admit_bursts} "
           f"({s.hmq_admit_bursts / max(s.admitted, 1):.2f}/seq) "
-          f"prefill_compiles={s.prefill_compiles} | "
+          f"prefill_compiles={s.prefill_compiles} "
+          f"preemptions={s.preemptions} | "
           f"stash_hit_rate={s.stash_hit_rate:.2f} "
           f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f} "
           f"stash_depth_hist={s.stash_depth_hist}")

@@ -34,6 +34,7 @@ class EngineStats:
     admitted: int = 0
     completed: int = 0
     decode_steps: int = 0
+    preemptions: int = 0           # running lanes evicted by the scheduler
     alloc_failures: int = 0        # failed malloc packets (all families)
     hmq_admit_bursts: int = 0      # support-core steps issued for admission
     prefill_compiles: int = 0      # distinct prefill buckets compiled
@@ -85,6 +86,51 @@ class AdmissionItem(NamedTuple):
     patches: Optional[np.ndarray] = None  # [P, d] (vlm)
 
 
+def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
+                  after_op=None) -> bool:
+    """One admission pass of the serving lifecycle, shared by the
+    single-engine ``serve_loop`` and ``MultiEngine.step_window``.
+
+    Plans under the page budget, optionally evicts a lower-priority running
+    lane when admission is stuck (strict priority preemption — DESIGN.md
+    §10), admits the batch, records the admission-seeded first generated
+    tokens (``Scheduler.note_admission``), and retires requests the seed
+    already finished.  ``after_op`` runs after every engine-side allocator
+    op (the multi-engine loop passes its shared-freelist ``_pull``).
+    Returns whether anything was admitted.
+    """
+    sync = after_op if after_op is not None else (lambda: None)
+    plan = sched.plan_admission(eng.free_pages)
+    if not plan.size and preemption:
+        lane = sched.preempt_victim(free_pages=eng.free_pages)
+        if lane is not None:
+            # FREE_ALL through the builder, immediately: the admission
+            # this eviction unblocks happens in this very pass
+            eng.preempt([lane])
+            sync()
+            sched.preempt(lane)
+            plan = sched.plan_admission(eng.free_pages)
+    if not plan.size:
+        return False
+    items = [AdmissionItem(lane, r.tokens, r.frames, r.patches)
+             for b in plan.batches for lane, r in b.items]
+    failed = eng.admit_many(items)      # failed lanes come back reclaimed
+    sync()
+    sched.commit_admission(plan)
+    if failed:
+        sched.fail_admission(failed)
+        print(f"WARNING: allocator rejected admission of "
+              f"{len(failed)} request(s) (pool exhausted)")
+    # the admission seed is the first generated token (attention
+    # families): record it, and retire max_new_tokens==1 requests
+    done0 = sched.note_admission(eng.admitted_tokens)
+    if done0:
+        eng.release(done0)
+        sync()
+        sched.complete(done0)
+    return True
+
+
 class ServingEngine:
     """Continuous-batching engine.  Lanes = slots in the running batch."""
 
@@ -92,7 +138,10 @@ class ServingEngine:
                  dtype=jnp.float32,
                  sched_cfg: Optional[SchedulerConfig] = None,
                  alloc_backend: Optional[str] = None,
-                 alloc_policy: Optional[str] = None):
+                 alloc_policy: Optional[str] = None,
+                 tenants: Optional[pkv.PagedTenants] = None,
+                 alloc_state=None,
+                 defer_refill: bool = False):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
@@ -110,18 +159,32 @@ class ServingEngine:
             alloc_policy = current_flags().alloc_policy
         self.alloc_backend = alloc_backend
         self.alloc_policy = alloc_policy
-        # The support-core's client API handle: tenant table (kv_pages [+
-        # state_slots] [+ scratch]) and per-tenant reporting.
-        self.service = pkv.paged_service(kvcfg)
+        # The support-core's client API handle: this engine's tenant set
+        # (kv_pages [+ state_slots] [+ scratch]) and per-tenant reporting.
+        # ``tenants`` installs a NAMESPACED set on a SHARED multi-engine
+        # service (DESIGN.md §10); the default is the per-config service.
+        self.tenants = tenants if tenants is not None \
+            else pkv.paged_tenants(kvcfg)
+        self.service = self.tenants.service
+        # ``defer_refill``: the multi-engine async loop's burst-window mode —
+        # the decode step returns deferrable refill/flush ops (accumulated in
+        # ``pending_ops``) instead of committing them per step.
+        self.defer_refill = defer_refill
+        self.pending_ops: list = []
+        self.admitted_tokens: dict[int, int] = {}
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
         # fresh empty state: deactivate the synthetic lanes (metadata
-        # initialized by the SAME policy the engine's bursts will run)
+        # initialized by the SAME policy the engine's bursts will run);
+        # ``alloc_state`` threads in the one shared multi-engine freelist.
         self.state = self.state._replace(
-            paged=pkv.init_paged_kv(kvcfg, policy=alloc_policy),
+            paged=pkv.init_paged_kv(kvcfg, policy=alloc_policy,
+                                    alloc=alloc_state, tenants=self.tenants),
             tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
         self._decode = jax.jit(make_decode_step(cfg, kvcfg,
                                                 alloc_backend=alloc_backend,
-                                                alloc_policy=alloc_policy))
+                                                alloc_policy=alloc_policy,
+                                                tenants=self.tenants,
+                                                defer_refill=defer_refill))
         # recurrent admission seeds decode from the last prompt token, so the
         # vocab projection would be dead weight in the jitted prefill
         self._family_prefill = make_family_prefill(
@@ -140,7 +203,7 @@ class ServingEngine:
         # fetch per (field, tenant) — this runs every decode step
         pt, queue_live, queue_capacity = jax.device_get(
             (per_tenant, queue_live, queue_capacity))
-        for t in self.service.tenants:
+        for t in self.tenants.handles:
             d = self.stats.tenants.setdefault(t.name, {
                 "mallocs": 0, "failed": 0, "blocks_allocated": 0,
                 "blocks_freed": 0, "used": 0, "quota": t.quota,
@@ -157,8 +220,11 @@ class ServingEngine:
 
     def tenant_report(self) -> dict[str, dict]:
         """Current per-tenant occupancy/quota/counters from the live
-        allocator state (service-level snapshot; telemetry + debugging)."""
-        return self.service.tenant_report(self.state.paged.alloc)
+        allocator state (service-level snapshot; telemetry + debugging).
+        Restricted to THIS engine's tenant set — on a shared multi-engine
+        service the other shards' tenants never leak into the report."""
+        return self.service.tenant_report(self.state.paged.alloc,
+                                          tenants=self.tenants.handles)
 
     # ---------------- admission ----------------
 
@@ -190,6 +256,15 @@ class ServingEngine:
         granted blocks are freed before returning, so the pool is never
         leaked — and do not count toward ``stats.admitted``; the caller only
         needs to requeue or fail the corresponding requests.
+
+        Side channel: ``self.admitted_tokens`` maps each successfully
+        admitted lane to the token the admission SEEDED decode with.  For
+        attention families that seed is the argmax over the prefill's last
+        position — i.e. the request's FIRST GENERATED token — and callers
+        must record it as output (``Scheduler.note_admission``) or a
+        preempted request's resume prefix would silently lose one token.
+        Recurrent families (ssm, hybrid) seed from the last PROMPT token,
+        which is not output; they publish an empty mapping.
         """
         if not items:
             return []
@@ -275,7 +350,7 @@ class ServingEngine:
             paged, stats = pkv.admit_prefill_many(
                 self.kvcfg, self.state.paged, lanes_arr,
                 ks[perm], vs[perm], kv_lens, backend=self.alloc_backend,
-                policy=self.alloc_policy)
+                policy=self.alloc_policy, tenants=self.tenants)
             self.stats.hmq_admit_bursts += 1
             self.stats.alloc_failures += int(stats.failed)
             self._note_burst(stats.per_tenant, stats.queue_live,
@@ -294,6 +369,13 @@ class ServingEngine:
         ok = np.asarray(paged.active)[np.asarray(lanes_arr)]
         failed = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if not o]
         self.stats.admitted += len(items) - len(failed)
+        if self.cfg.family in ("ssm", "hybrid"):
+            self.admitted_tokens = {}          # seed == last prompt token
+        else:
+            toks = np.asarray(next_tokens)
+            self.admitted_tokens = {
+                int(l): int(t) for l, t, o
+                in zip(np.asarray(lanes_arr), toks, ok) if o}
         if failed:
             # reclaim orphaned partial grants (e.g. KV pages granted while
             # the state-slot packet failed) so failure never leaks the pool
@@ -334,8 +416,17 @@ class ServingEngine:
     # ---------------- decode ----------------
 
     def step(self) -> np.ndarray:
-        """One decode step for all active lanes; returns next tokens."""
-        self.state, logits, stats = self._decode(self.params, self.state)
+        """One decode step for all active lanes; returns next tokens.
+
+        In ``defer_refill`` mode the step's deferrable allocator ops are
+        appended to ``pending_ops`` for the multi-engine burst window to
+        drain (one merged commit per window — DESIGN.md §10)."""
+        if self.defer_refill:
+            self.state, logits, stats, pending = self._decode(
+                self.params, self.state)
+            self.pending_ops.append(pending)
+        else:
+            self.state, logits, stats = self._decode(self.params, self.state)
         self.stats.decode_steps += 1
         self.stats.alloc_failures += int(stats.failed)
         self.stats.decode_bursts += int(stats.bursts)
@@ -363,18 +454,29 @@ class ServingEngine:
         paged, stats = pkv.release_packets(self.kvcfg, self.state.paged,
                                            jnp.asarray(pkts),
                                            backend=self.alloc_backend,
-                                           policy=self.alloc_policy)
+                                           policy=self.alloc_policy,
+                                           tenants=self.tenants)
         self._note_burst(stats.per_tenant, stats.queue_live,
                          stats.queue_capacity)
         self.state = self.state._replace(paged=paged)
         if completed:
             self.stats.completed += len(lanes)
 
+    def preempt(self, lanes: Sequence[int]) -> None:
+        """Evict running lanes: FREE_ALL every block they own (pages, state
+        slot, scratch, stashed pages) so the pool is immediately available
+        for a higher-priority admission.  The scheduler re-queues the
+        corresponding requests with their generated prefix (DESIGN.md §10);
+        nothing is counted as completed."""
+        self.release(lanes, completed=False)
+        self.stats.preemptions += len(lanes)
+
     @property
     def live_pages(self) -> int:
-        return int(pkv.live_pages(self.state.paged))
+        return int(pkv.live_pages(self.state.paged,
+                                  kv_class=self.tenants.kv.size_class))
 
     @property
     def free_pages(self) -> int:
         """Allocatable KV pages right now (admission-policy input)."""
-        return int(self.state.paged.alloc.free_top[pkv.KV_CLASS])
+        return int(self.state.paged.alloc.free_top[self.tenants.kv.size_class])

@@ -55,17 +55,29 @@ FAILED = "failed"        # admission malloc failed; request was not served
 
 @dataclasses.dataclass
 class Request:
-    """One serving request and its lifecycle bookkeeping."""
+    """One serving request and its lifecycle bookkeeping.
+
+    ``tokens`` is the CURRENT prefill prefix: the original prompt, extended
+    with the already-generated tokens when the request is preempted and
+    re-queued (so a resumed request prefills its full context and continues
+    exactly where it stopped).  ``output`` accumulates every generated
+    token across preemptions; ``priority`` orders admission (higher first)
+    and selects preemption victims (lowest running priority evicted).
+    """
 
     rid: int
-    tokens: np.ndarray                       # [T] int32 prompt
+    tokens: np.ndarray                       # [T] int32 current prefix
     max_new_tokens: int = 16
     frames: Optional[np.ndarray] = None      # [F, d] (audio)
     patches: Optional[np.ndarray] = None     # [P, d] (vlm)
+    priority: int = 0                        # higher admitted/retained first
     # --- runtime state (scheduler-owned) ---
     state: str = WAITING
     lane: int = -1
-    generated: int = 0
+    generated: int = 0                       # == len(output); survives preemption
+    output: list = dataclasses.field(default_factory=list)  # generated ids
+    preemptions: int = 0                     # times this request was evicted
+    _admit_mark: int = 0                     # len(output) at last admission
 
     @property
     def prompt_len(self) -> int:
@@ -232,22 +244,32 @@ class Scheduler:
         prefix = req.patches.shape[0] if req.patches is not None else 0
         return req.prompt_len + prefix
 
+    def admission_order(self) -> list[Request]:
+        """Waiting requests in admission order: priority (desc), then FIFO.
+
+        The stable sort keeps the historical FIFO behaviour exactly when
+        every request carries the default priority 0.
+        """
+        return sorted(self.waiting, key=lambda r: -r.priority)
+
     def plan_admission(self, free_pages: int) -> AdmissionPlan:
-        """Select waiting requests to admit, FIFO, under the page budget.
+        """Select waiting requests to admit, priority-then-FIFO, under the
+        page budget.
 
         A request is admissible while (a) a lane is free, (b) its bucket has
         fewer than ``admit_width`` members (the static prefill batch width),
         and (c) its KV pages — plus one recurrent-state slot charge-through —
         fit in ``free_pages - page_reserve`` after earlier picks.  Selection
         is head-of-line blocking: the first request that does not fit stops
-        the scan, preserving FIFO fairness under scarcity.
+        the scan, preserving FIFO fairness under scarcity (within the
+        priority ordering — see :meth:`admission_order`).
         """
         budget = free_pages - self.scfg.page_reserve
         lanes = self.free_lanes()
         by_bucket: dict[int, list[tuple[int, Request]]] = {}
         charged = 0
         taken = 0
-        for req in self.waiting:
+        for req in self.admission_order():
             if taken >= len(lanes):
                 break
             bucket = pick_bucket(req.prompt_len, self.scfg)
@@ -273,16 +295,46 @@ class Scheduler:
             for lane, req in b.items:
                 req.state = RUNNING
                 req.lane = lane
-                req.generated = 0
+                req._admit_mark = len(req.output)
                 self.running[lane] = req
 
     # ---------------- decode / completion lifecycle ----------------
 
-    def note_decode_step(self) -> list[int]:
-        """Advance every running request one token; return finished lanes."""
+    def note_admission(self, admitted_tokens: dict[int, int]) -> list[int]:
+        """Record the admission-seeded tokens as generated output.
+
+        ``admitted_tokens`` is :attr:`ServingEngine.admitted_tokens` — for
+        attention families the prefill argmax IS the request's first
+        generated token (recurrent families publish an empty mapping).
+        Recording it keeps ``Request.output`` complete, which preemption's
+        resume prefix depends on.  Returns lanes already finished by the
+        seed alone (``max_new_tokens == 1``), which the caller must release.
+        """
+        done = []
+        for lane, tok in admitted_tokens.items():
+            req = self.running.get(lane)
+            if req is None:
+                continue               # admission failed; lane already gone
+            req.output.append(int(tok))
+            req.generated += 1
+            if req.generated >= req.max_new_tokens:
+                done.append(lane)
+        return done
+
+    def note_decode_step(self, tokens: Optional[np.ndarray] = None
+                         ) -> list[int]:
+        """Advance every running request one token; return finished lanes.
+
+        ``tokens`` — the ``[max_lanes]`` next-token array the engine's step
+        returned — records each lane's generated token on its request
+        (``Request.output``), which preemption needs to rebuild the resume
+        prefix and callers need for the final response payload.
+        """
         done = []
         for lane, req in self.running.items():
             req.generated += 1
+            if tokens is not None:
+                req.output.append(int(tokens[lane]))
             if req.generated >= req.max_new_tokens:
                 done.append(lane)
         return done
@@ -306,6 +358,92 @@ class Scheduler:
             self.failed.append(req)
             out.append(req)
         return out
+
+    # ---------------- preemption (DESIGN.md §10) ----------------
+
+    def _held_kv_len(self, req: Request) -> int:
+        """KV tokens the running request holds right now (admission prefix
+        plus tokens generated since) — also its resume-prefix length."""
+        return self._kv_len(req) + len(req.output) - req._admit_mark
+
+    def preempt_victim(self, free_pages: Optional[int] = None
+                       ) -> Optional[int]:
+        """Lane to evict when admission is stuck: the lowest-priority
+        running request, provided some WAITING request outranks it (strict
+        priority preemption — equal priorities never thrash each other).
+        Ties break toward the lane holding the most KV tokens, so one
+        eviction frees the most pages.  Returns ``None`` when no eviction
+        is justified.
+
+        Two screens keep eviction from destroying work for nothing:
+        requests whose grown resume prefix could no longer be re-admitted
+        (``max_kv_len``) are never victims — evicting them would forfeit a
+        request that will otherwise complete; and when ``free_pages`` is
+        given, eviction is skipped unless the head waiting request would
+        plausibly FIT afterwards (admission-charge estimate), so a
+        never-admissible request cannot drain every running lane.
+        """
+        if not self.running or not self.waiting:
+            return None
+        head = self.admission_order()[0]
+        candidates = [
+            (lane, req) for lane, req in self.running.items()
+            if not (self.scfg.max_kv_len
+                    and self._held_kv_len(req) + 1 > self.scfg.max_kv_len)]
+        if not candidates:
+            return None
+        lane, victim = min(
+            candidates,
+            key=lambda kv: (kv[1].priority, -self._held_kv_len(kv[1])))
+        if victim.priority >= head.priority:
+            return None
+        if free_pages is not None:
+            # what admission charged the victim (its pages + pre-charge)
+            # returns to the pool; require the head request to fit then
+            freed = pages_needed(self._held_kv_len(victim), self.scfg) \
+                + self.scfg.stash_precharge
+            need = pages_needed(self._kv_len(head), self.scfg) \
+                + self.scfg.stash_precharge
+            if need > free_pages + freed - self.scfg.page_reserve:
+                return None
+        return lane
+
+    def preempt(self, lane: int) -> Request:
+        """Evict the running request on ``lane`` and re-queue it.
+
+        The resume prefix is the request's admission-time prefix plus every
+        token generated since (``output[_admit_mark:]``), so a later
+        re-admission prefills the full context and decode continues exactly
+        where the eviction cut it off.  The caller is responsible for the
+        engine-side ``FREE_ALL`` (:meth:`ServingEngine.preempt`) — scheduler
+        and engine stay decoupled the same way completion is.
+        """
+        req = self.running[lane]
+        if req.generated != len(req.output):
+            # A loop that drove note_decode_step() WITHOUT the tokens array
+            # (the legacy counting-only signature) cannot preempt safely:
+            # the resume prefix is rebuilt from `output`, so missing tokens
+            # would silently truncate the request's context.  Fail loudly.
+            raise ValueError(
+                f"cannot preempt lane {lane}: request {req.rid} counted "
+                f"{req.generated} generated tokens but recorded "
+                f"{len(req.output)} — pass the engine's token array to "
+                f"note_decode_step() so the resume prefix stays complete")
+        req = self.running.pop(lane)
+        resumed = np.asarray(req.output[req._admit_mark:], np.int32)
+        req.tokens = np.concatenate([req.tokens, resumed]) if resumed.size \
+            else req.tokens
+        req.state = WAITING
+        req.lane = -1
+        req.preemptions += 1
+        if self.scfg.max_kv_len and self._kv_len(req) + 1 > self.scfg.max_kv_len:
+            # the grown prefix can never be re-admitted: fail it loudly
+            # instead of wedging the waiting queue forever
+            req.state = FAILED
+            self.failed.append(req)
+            return req
+        self.waiting.append(req)
+        return req
 
     def complete(self, lanes: list[int]) -> list[Request]:
         """Retire finished lanes; returns the completed requests."""

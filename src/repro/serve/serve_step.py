@@ -14,8 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.paged_kv import (PagedKVConfig, PagedKVState, decode_append,
-                             empty_decode_stats, init_paged_kv)
+from ..core.paged_kv import (PagedKVConfig, PagedKVState, PendingDecodeOps,
+                             decode_append, empty_decode_stats, init_paged_kv)
 from ..distributed.hints import use_hints
 from ..models.decode import (RecurrentState, decode_hidden, decode_logits,
                              init_recurrent_state)
@@ -107,7 +107,8 @@ def abstract_serve_state(cfg: ArchConfig, kvcfg: PagedKVConfig, lanes: int,
 def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
                      hints=None, unroll: bool = False,
                      alloc_backend: Optional[str] = None,
-                     alloc_policy: Optional[str] = None):
+                     alloc_policy: Optional[str] = None,
+                     tenants=None, defer_refill: bool = False):
     """Returns serve_step(params, state) -> (state, logits, DecodeStats).
 
     ``alloc_backend`` selects the support-core implementation for the
@@ -115,6 +116,13 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
     ``REPRO_ALLOC_BACKEND`` at trace time — see DESIGN.md §8);
     ``alloc_policy`` the central-allocator design (``freelist`` | ``bitmap``;
     None resolves ``REPRO_ALLOC_POLICY`` — DESIGN.md §9).
+
+    ``tenants`` (a :class:`~repro.core.paged_kv.PagedTenants`) points the
+    decode burst at this engine's namespaced tenant set on a shared
+    multi-engine service; ``defer_refill=True`` (static) makes the step
+    return a fourth :class:`~repro.core.paged_kv.PendingDecodeOps` value
+    carrying the deferrable refill/flush traffic for the caller's burst
+    window instead of committing it in-step (DESIGN.md §10).
     """
     window = recycle_window(cfg)
 
@@ -125,21 +133,35 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
         logits = decode_logits(params, cfg, hidden)
         next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
+        pending = None
         if new_kv is not None:
             new_k, new_v = new_kv
-            paged, stats = decode_append(
+            out = decode_append(
                 kvcfg, state.paged,
                 new_k.astype(kvcfg.dtype), new_v.astype(kvcfg.dtype),
-                window=window, backend=alloc_backend, policy=alloc_policy)
+                window=window, backend=alloc_backend, policy=alloc_policy,
+                tenants=tenants, defer_refill=defer_refill)
+            if defer_refill:
+                paged, stats, pending = out
+            else:
+                paged, stats = out
         else:
             # attention-free (rwkv6): no pages; still advance lane clocks
             paged = state.paged._replace(
                 seq_lens=state.paged.seq_lens + state.paged.active.astype(jnp.int32))
-            stats = empty_decode_stats(kvcfg)
+            stats = empty_decode_stats(kvcfg, tenants=tenants)
+            if defer_refill:
+                L = kvcfg.max_lanes
+                pending = PendingDecodeOps(
+                    below=jnp.zeros((L,), bool),
+                    flush_mask=jnp.zeros((L,), bool),
+                    flush_blocks=jnp.full((L,), -1, jnp.int32))
 
         new_state = ServeState(
             paged=paged, rec=new_rec, tokens=next_tokens,
             enc_out=state.enc_out, step=state.step + 1)
+        if defer_refill:
+            return new_state, logits, stats, pending
         return new_state, logits, stats
 
     def serve_step(params: dict, state: ServeState):

@@ -4,9 +4,15 @@ When ``hypothesis`` is installed, re-exports the real ``given`` /
 ``settings`` / ``st``.  When it is not, provides no-op stand-ins so the
 modules still import and their plain unit tests still run; property tests
 carry ``@needs_hypothesis`` and skip.
-"""
-import pytest
 
+This module must import with ZERO test-only dependencies — no ``pytest``,
+no ``hypothesis`` — and in any import order: the benchmark and examples CI
+legs install only ``jax[cpu] numpy``, and diagnostic scripts import test
+helpers directly (the ``no-test-deps`` CI leg asserts this stays true).
+Without ``pytest``, ``needs_hypothesis`` degrades to an identity decorator:
+nothing can *run* the tests in that environment anyway, but importing the
+module must not raise.
+"""
 try:
     from hypothesis import given, settings, strategies as st
     HAVE_HYPOTHESIS = True
@@ -28,5 +34,10 @@ except ModuleNotFoundError:
 
     settings = given
 
-needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
-                                      reason="hypothesis not installed")
+try:
+    import pytest
+    needs_hypothesis = pytest.mark.skipif(not HAVE_HYPOTHESIS,
+                                          reason="hypothesis not installed")
+except ModuleNotFoundError:  # zero-dep import (bench/examples environments)
+    def needs_hypothesis(f):
+        return f

@@ -9,6 +9,20 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import numpy as np
 import pytest
 
+try:
+    # Hypothesis profiles: PR CI runs the library default; the scheduled
+    # nightly deep-fuzz job selects a raised example budget with
+    # ``--hypothesis-profile=nightly`` (plus REPRO_DEEP_FUZZ=1 for the
+    # larger-N multi-engine differential tests).  Registration is harmless
+    # when the profile is never selected.
+    from hypothesis import HealthCheck, settings as _hyp_settings
+
+    _hyp_settings.register_profile(
+        "nightly", max_examples=200, deadline=None, derandomize=False,
+        suppress_health_check=[HealthCheck.too_slow])
+except ModuleNotFoundError:  # tier-1 collects without hypothesis installed
+    pass
+
 
 @pytest.fixture
 def rng():
