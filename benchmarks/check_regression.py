@@ -12,7 +12,17 @@ when any gated metric regresses:
   regression collapses it far further);
 * ``hmq_bursts_per_1k_decode_steps`` — central-allocator pressure on the
   decode hot path: fail when it grows by more than 25 bursts/1k (the
-  stash keeps it at 0; the pre-stash baseline was 1000).
+  stash keeps it at 0; the pre-stash baseline was 1000);
+* ``cache_hit_rate`` — the prefix cache's admission hit rate on the
+  shared-system-prompt scenario: fail on an absolute drop beyond 0.02;
+* ``prefill_tokens_saved`` — prompt tokens the prefix cache kept out of
+  prefill in that scenario: fail on a drop of more than 15%.
+
+A gated key MISSING from the committed baseline (a freshly introduced
+metric whose baseline predates it) is a loud warning, not a failure —
+the gate starts enforcing once the baseline is refreshed, so new
+metrics never brick older branches.  A key missing from the FRESH run
+is still a hard failure (the benchmark stopped producing it).
 
 Usage (the CI serving leg runs it right after the artifact upload)::
 
@@ -41,29 +51,50 @@ DEFAULT_FRESH = Path("BENCH_serving.json")
 DEFAULT_BASELINE = Path(__file__).parent / "baseline" / "BENCH_serving.json"
 
 
+#: gated keys: (metric, kind, tolerance, skipped-warning list filled at
+#: check time).  kind "rel_drop" fails when fresh < baseline*(1-tol),
+#: "abs_drop" when fresh < baseline-tol, "abs_grow" when fresh > baseline+tol.
+GATES = (
+    ("requests_per_s", "rel_drop", 0.15),
+    ("stash_hit_rate", "abs_drop", 0.02),
+    ("hmq_bursts_per_1k_decode_steps", "abs_grow", 25.0),
+    ("cache_hit_rate", "abs_drop", 0.02),
+    ("prefill_tokens_saved", "rel_drop", 0.15),
+)
+
+
 def check(fresh: dict, baseline: dict, rps_tol: float = 0.15,
-          hit_rate_tol: float = 0.02, bursts_tol: float = 25.0) -> list[str]:
-    """Returns the list of regression messages (empty == gate passes)."""
+          warnings: list | None = None) -> list[str]:
+    """Returns the list of regression messages (empty == gate passes).
+
+    A gated key absent from ``baseline`` is appended to ``warnings`` and
+    skipped — new metrics gate only once the committed baseline carries
+    them.  A gated key absent from ``fresh`` fails hard.
+    """
     failures = []
-
-    rps_f, rps_b = fresh["requests_per_s"], baseline["requests_per_s"]
-    if rps_f < rps_b * (1.0 - rps_tol):
-        failures.append(
-            f"requests_per_s regressed {rps_b:.3f} -> {rps_f:.3f} "
-            f"(more than {rps_tol:.0%} drop)")
-
-    hr_f, hr_b = fresh["stash_hit_rate"], baseline["stash_hit_rate"]
-    if hr_f < hr_b - hit_rate_tol:
-        failures.append(
-            f"stash_hit_rate regressed {hr_b:.3f} -> {hr_f:.3f} "
-            f"(more than {hit_rate_tol} absolute drop)")
-
-    b_f = fresh["hmq_bursts_per_1k_decode_steps"]
-    b_b = baseline["hmq_bursts_per_1k_decode_steps"]
-    if b_f > b_b + bursts_tol:
-        failures.append(
-            f"hmq_bursts_per_1k_decode_steps regressed {b_b:.1f} -> {b_f:.1f} "
-            f"(more than +{bursts_tol} bursts/1k decode steps)")
+    for key, kind, tol in GATES:
+        if key == "requests_per_s":
+            tol = rps_tol
+        if key not in fresh:
+            failures.append(f"{key} missing from the fresh benchmark output")
+            continue
+        if key not in baseline:
+            if warnings is not None:
+                warnings.append(
+                    f"{key} missing from the committed baseline — gate "
+                    f"SKIPPED (refresh benchmarks/baseline/"
+                    f"BENCH_serving.json to start enforcing it)")
+            continue
+        f, b = fresh[key], baseline[key]
+        if kind == "rel_drop" and f < b * (1.0 - tol):
+            failures.append(f"{key} regressed {b:.3f} -> {f:.3f} "
+                            f"(more than {tol:.0%} drop)")
+        elif kind == "abs_drop" and f < b - tol:
+            failures.append(f"{key} regressed {b:.3f} -> {f:.3f} "
+                            f"(more than {tol} absolute drop)")
+        elif kind == "abs_grow" and f > b + tol:
+            failures.append(f"{key} regressed {b:.3f} -> {f:.3f} "
+                            f"(more than +{tol} growth)")
     return failures
 
 
@@ -79,11 +110,16 @@ def main(argv=None) -> int:
 
     fresh = json.loads(args.fresh.read_text())
     baseline = json.loads(args.baseline.read_text())
-    failures = check(fresh, baseline, rps_tol=args.rps_tol)
+    warnings: list[str] = []
+    failures = check(fresh, baseline, rps_tol=args.rps_tol,
+                     warnings=warnings)
 
-    for key in ("requests_per_s", "stash_hit_rate",
-                "hmq_bursts_per_1k_decode_steps"):
-        print(f"{key}: baseline={baseline[key]:.3f} fresh={fresh[key]:.3f}")
+    for key, _, _ in GATES:
+        b = f"{baseline[key]:.3f}" if key in baseline else "MISSING"
+        f = f"{fresh[key]:.3f}" if key in fresh else "MISSING"
+        print(f"{key}: baseline={b} fresh={f}")
+    for msg in warnings:
+        print(f"WARNING: {msg}", file=sys.stderr)
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -178,6 +178,57 @@ def _run_multi(cfg, params, n_engines: int = 2, quantum: int = 4) -> dict:
     }
 
 
+def _run_prefix_cache(cfg, params) -> dict:
+    """Shared-system-prompt scenario (DESIGN.md §11): 8 requests carrying
+    one 40-token shared prefix + unique tails through 2 lanes, with the
+    prefix cache on — every completion demotes its full KV pages, every
+    later admission hits them and prefills only its tail.  A cache-off run
+    over the SAME requests checks the output tokens are bit-identical
+    (prefill skip is exact reuse, never an approximation)."""
+    kvcfg = make_paged_config(cfg, seq_len=128, lanes=2, page_size=8,
+                              dtype=jnp.float32, **STASH)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size, size=40).astype(np.int32)
+    mkreqs = lambda: [Request(  # noqa: E731
+        rid=rid,
+        tokens=np.concatenate(
+            [shared,
+             np.random.RandomState(100 + rid).randint(
+                 0, cfg.vocab_size, size=6).astype(np.int32)]))
+        for rid in range(8)]
+
+    outs = {}
+    res = {}
+    for mode in ("off", "on"):
+        eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32,
+                            sched_cfg=scfg, prefix_cache=mode == "on")
+        sched = Scheduler(scfg)
+        t0 = time.perf_counter()
+        serve_loop(eng, sched, mkreqs(), max_new_tokens=6, verbose=False)
+        wall = time.perf_counter() - t0
+        outs[mode] = {r.rid: list(r.output) for r in sched.finished}
+        res[mode] = (eng, wall)
+    eng, wall = res["on"]
+    s = eng.stats
+    return {
+        "requests": len(outs["on"]),
+        "shared_prefix_tokens": 40,
+        "cache_hit_rate": s.cache_hit_rate,
+        "prefill_tokens_saved": s.prefill_tokens_saved,
+        "cache_inserts": s.cache_inserts,
+        "cache_evictions": s.cache_evictions,
+        "cache_pages": s.cache_pages,
+        "cache_budget_pages": eng.cache.budget,
+        "eviction_policy": eng.cache.policy.name,
+        "prefill_compiles": s.prefill_compiles,
+        "prefill_compiles_cache_off": res["off"][0].stats.prefill_compiles,
+        "wall_s": wall,
+        "wall_s_cache_off": res["off"][1],
+        "outputs_bit_identical": outs["on"] == outs["off"],
+    }
+
+
 def _run_once(cfg, params, stash: bool) -> dict:
     rng = np.random.RandomState(0)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
@@ -246,6 +297,11 @@ def run() -> list[str]:
     # preemption (DESIGN.md §10) — reuses the mixtral params already built.
     multi = _run_multi(cfg, params, n_engines=2)
 
+    # Prefix cache (DESIGN.md §11): shared-system-prompt churn with
+    # demote-on-completion + prefill-skip admission, checked bit-identical
+    # against the cache-off path.
+    pc = _run_prefix_cache(cfg, params)
+
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
     bursts_per_seq = s.hmq_admit_bursts / max(s.admitted, 1)
@@ -281,6 +337,10 @@ def run() -> list[str]:
         "preemptions": multi["preemptions"],
         "cross_engine_burst_occupancy": multi["cross_engine_burst_occupancy"],
         "multi_engine": multi,
+        # --- prefix cache: prefill skip via surviving KV pages (§11) ---
+        "cache_hit_rate": pc["cache_hit_rate"],
+        "prefill_tokens_saved": pc["prefill_tokens_saved"],
+        "prefix_cache": pc,
         # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
         "admitted": s.admitted,
@@ -321,4 +381,11 @@ def run() -> list[str]:
                 f"({multi['window_commits']} merged commits, "
                 f"occupancy={multi['cross_engine_burst_occupancy']:.2f}) "
                 f"preemptions={multi['preemptions']}"),
+        csv_row("serving/prefix_cache", pc["prefill_tokens_saved"],
+                f"prefill tokens saved over {pc['requests']} shared-prefix "
+                f"reqs, hit_rate={pc['cache_hit_rate']:.2f} "
+                f"policy={pc['eviction_policy']} "
+                f"compiles={pc['prefill_compiles']} "
+                f"(off: {pc['prefill_compiles_cache_off']}) "
+                f"bit_identical={pc['outputs_bit_identical']}"),
     ]

@@ -374,6 +374,32 @@ class AllocService:
     def new_burst(self) -> BurstBuilder:
         return BurstBuilder(self)
 
+    def retag_blocks(
+        self,
+        state: FreeListState,
+        tenant: TenantHandle,
+        blocks,
+        new_owner: int,
+    ) -> FreeListState:
+        """Control-plane ownership transfer of live blocks (no HMQ traffic).
+
+        Rewrites ``owner[class, block]`` for already-allocated blocks — the
+        demotion primitive behind the KV prefix cache (DESIGN.md §11): a
+        completed lane's pages are retagged to the cache's synthetic owner
+        so the lane's FREE_ALL (which matches ``owner == lane``) skips
+        them, while single OP_FREEs (owner-agnostic) can still reclaim
+        them later.  Allocation counters and ``used`` are untouched: the
+        pages stay charged against the tenant's quota, which is exactly
+        what keeps admission page-budget math honest while the cache holds
+        them.  Host-side metadata op; never touches page payloads.
+        """
+        blocks = jnp.asarray(blocks, jnp.int32)
+        if blocks.size == 0:
+            return state
+        owner = state.owner.at[tenant.size_class, blocks].set(
+            jnp.int32(new_owner), mode="drop")
+        return state._replace(owner=owner)
+
     def commit(
         self,
         state: FreeListState,

@@ -140,6 +140,8 @@ def validate_freelist(
     in_use=None,
     stash_class: int = 0,
     tenant_names: Sequence[str] | None = None,
+    cache_pages=None,
+    cache_owner: int | None = None,
 ) -> None:
     """Host-side invariant check (tests / debugging only; not jittable).
 
@@ -150,12 +152,17 @@ def validate_freelist(
       I4. every block is either on the stack or owned (exactly once)
       I5. (when the lane-stash tier is passed in) every block of the stash's
           class is exactly one of {central free stack, some lane's stash,
-          in use}; stashed blocks are owner-mapped to their stash lane.
+          in use, prefix cache}; stashed blocks are owner-mapped to their
+          stash lane and cached blocks to the cache's synthetic owner.
 
     ``stash_pages``/``stash_depth`` are the ``[max_lanes, S]``/``[max_lanes]``
     arrays of :class:`repro.core.lane_stash.LaneStashState`.  ``in_use`` is an
     optional ``[N]`` bool of blocks referenced by consumers (e.g. block
-    tables); when given, the three-way partition is checked exactly.
+    tables); when given, the partition is checked exactly.  ``cache_pages``
+    (with ``cache_owner``, the demotion owner tag) lists blocks retained by
+    the KV prefix cache (DESIGN.md §11) — they extend the partition to four
+    ways, and every block owner-mapped to ``cache_owner`` must appear in the
+    list (no leaked demotions).
 
     Failures raise :class:`FreelistInvariantError` naming the invariant and
     attaching the per-tenant :meth:`FreeListState.debug_summary` (labelled
@@ -246,6 +253,35 @@ def validate_freelist(
     check(not dup.size,
           f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} of "
           f"{cname(c)} on both the central stack and a lane stash")
+
+    cached = np.asarray(
+        cache_pages if cache_pages is not None else [], np.int64)
+    if cache_owner is not None:
+        check(len(np.unique(cached)) == len(cached),
+              "I5 (cache partition) violated: block cached twice")
+        if cached.size:
+            check(cached.min() >= 0 and cached.max() < cap,
+                  f"I5 (cache partition) violated: cached out-of-range id "
+                  f"(capacity {cap})")
+            bad = cached[owner[c, cached] != cache_owner]
+            check(bad.size == 0,
+                  f"I5 (cache partition) violated: cached block(s) "
+                  f"{bad[:8].tolist()} not owner-mapped to the cache owner "
+                  f"{cache_owner} (owners {owner[c, bad[:8]].tolist()})")
+        tagged = np.where(owner[c, :cap] == cache_owner)[0]
+        check(np.array_equal(np.sort(cached), tagged),
+              f"I5 (cache partition) violated: owner map tags "
+              f"{len(tagged)} block(s) as cache-owned but the cache lists "
+              f"{len(cached)} — demoted pages leaked outside the cache")
+        dup = np.intersect1d(cached, stack_ids)
+        check(not dup.size,
+              f"I5 (cache partition) violated: block(s) {dup[:8].tolist()} "
+              f"both cached and free")
+        dup = np.intersect1d(cached, stashed)
+        check(not dup.size,
+              f"I5 (cache partition) violated: block(s) {dup[:8].tolist()} "
+              f"both cached and stashed")
+
     if in_use is not None:
         used_ids = np.where(np.asarray(in_use)[:cap])[0]
         dup = np.intersect1d(used_ids, stashed)
@@ -256,7 +292,12 @@ def validate_freelist(
         check(not dup.size,
               f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} "
               f"both free and in use")
-        check(len(stack_ids) + len(stashed) + len(used_ids) == cap,
-              f"I5 (stash partition) violated: stack {len(stack_ids)} + "
-              f"stash {len(stashed)} + in-use {len(used_ids)} != capacity "
-              f"{cap} for {cname(c)}")
+        dup = np.intersect1d(used_ids, cached)
+        check(not dup.size,
+              f"I5 (cache partition) violated: block(s) {dup[:8].tolist()} "
+              f"both cached and in use")
+        check(len(stack_ids) + len(stashed) + len(used_ids) + len(cached)
+              == cap,
+              f"I5 (partition) violated: stack {len(stack_ids)} + "
+              f"stash {len(stashed)} + in-use {len(used_ids)} + cache "
+              f"{len(cached)} != capacity {cap} for {cname(c)}")

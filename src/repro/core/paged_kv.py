@@ -36,9 +36,10 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import TYPE_CHECKING, NamedTuple, Optional
+from typing import TYPE_CHECKING, Callable, NamedTuple, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 if TYPE_CHECKING:  # runtime import is lazy: repro.alloc <-> repro.core would
     # otherwise cycle through the repro.core package __init__
@@ -56,6 +57,14 @@ from .support_core import StepStats, support_core_step  # noqa: F401
 
 KV_CLASS = 0
 STATE_CLASS = 1
+
+#: Synthetic owner id for KV pages demoted into the prefix cache
+#: (DESIGN.md §11).  Far above any lane id, below the FREE_ALL lane-list
+#: pad sentinel (2**31 - 1) and the int32 ceiling.  A lane's FREE_ALL
+#: matches ``owner == lane`` and therefore skips demoted pages, while a
+#: single OP_FREE is owner-agnostic (``owner >= 0``), so eviction reclaims
+#: them through the ordinary free path.
+CACHE_OWNER = 1 << 30
 
 #: Tenant names the paged-KV allocator registers on its AllocService.  The
 #: registration ORDER fixes the size-class indices: kv_pages is always class
@@ -666,6 +675,217 @@ def empty_decode_stats(cfg: PagedKVConfig,
 
 
 # --------------------------------------------------------------------------
+# Prefix cache: KV pages that survive request completion (DESIGN.md §11).
+# Host-side metadata only — page payloads never move; ownership is retagged
+# to CACHE_OWNER on demotion and pages are reclaimed via ordinary OP_FREEs
+# on eviction.
+# --------------------------------------------------------------------------
+
+def default_page_hash(prev: int, page_tokens: np.ndarray) -> int:
+    """Rolling per-page hash: fold one page of token ids into the running
+    prefix hash.  Page i's key depends on every token in pages 0..i, so a
+    probe can stop at the first divergent page.  Injectable (tests force
+    collisions to prove the exact-token verification below catches them)."""
+    h = prev & 0xFFFFFFFFFFFFFFFF
+    for t in page_tokens:
+        h = (h * 1000003 ^ (int(t) + 0x9E3779B9)) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One cached KV page: the page's block id plus the FULL token prefix
+    it closes (pages 0..i of some completed sequence).  ``pkey`` is the
+    prefix's byte image — the content-stable identity used for exact
+    verification, dedupe, and eviction-policy bookkeeping (block ids get
+    recycled by the allocator; content keys never lie)."""
+    key: int                 # rolling hash of the prefix (bucket index)
+    tokens: np.ndarray       # [(i+1) * page_size] int32 full prefix
+    pkey: bytes              # tokens.tobytes() — exact content identity
+    block: int               # KV page id, owner-mapped to CACHE_OWNER
+
+
+class PrefixCache:
+    """Token-prefix → KV-page cache with pluggable eviction.
+
+    Keyed per page by rolling prefix hash, so any prefix length can hit;
+    every lookup verifies the full token prefix against the entry (hash
+    collisions can never alias wrong-content pages).  The cache holds at
+    most ``budget_pages`` pages; those pages stay allocated in the KV
+    tenant's class (owner ``CACHE_OWNER``), so the budget is charged
+    against the tenant quota and admission page math stays exact.
+
+    Victim selection delegates to an :class:`repro.alloc.eviction
+    .EvictionPolicy` keyed by entry content.  Evicting an entry cascades to
+    its descendants (longer prefixes that extend it): probes walk from page
+    0, so an entry whose ancestor is gone would be unreachable garbage.
+
+    ``trace`` records the logical (insert/probe) event stream — replayable
+    through :func:`repro.sim.policies.replay_prefix_trace` for differential
+    testing of eviction policies against the live engine.
+    """
+
+    def __init__(self, page_size: int, budget_pages: int, policy=None,
+                 hash_fn: Optional[Callable[[int, np.ndarray], int]] = None):
+        from ..alloc.eviction import get_eviction
+        self.page_size = int(page_size)
+        self.budget = int(budget_pages)
+        self.policy = policy if policy is not None else get_eviction(None)
+        self.hash_fn = hash_fn or default_page_hash
+        self._chains: dict[int, list[CacheEntry]] = {}
+        self._by_pkey: dict[bytes, CacheEntry] = {}
+        self.hits = 0            # probed requests that reused >= 1 page
+        self.misses = 0          # probed requests with no reusable prefix
+        self.inserts = 0         # pages demoted into the cache
+        self.evictions = 0       # pages evicted (policy picks + cascades)
+        self.dup_skips = 0       # demoted pages already cached (left to FREE_ALL)
+        self.trace: list[tuple] = []
+
+    @property
+    def pages(self) -> int:
+        """Pages currently held (== entries; one page per entry)."""
+        return len(self._by_pkey)
+
+    def blocks(self) -> np.ndarray:
+        """Sorted block ids held by the cache (the I5 cache partition)."""
+        return np.sort(np.asarray(
+            [e.block for e in self._by_pkey.values()], np.int64))
+
+    # -- probe ------------------------------------------------------------
+    def probe(self, tokens, touch: bool = False) -> tuple[int, list[int]]:
+        """Longest cached prefix of ``tokens``: ``(cached_len, blocks)``.
+
+        ``cached_len`` is a multiple of ``page_size`` and strictly less
+        than ``len(tokens)`` — at least one suffix token always prefills,
+        so admission still produces the seed logits.  ``touch=True`` is the
+        admission-time lookup: it bumps eviction-policy recency, the
+        hit/miss counters, and the replay trace; plan-time probes peek
+        without side effects (they may run several times per admission).
+        """
+        tokens = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        n = len(tokens) // ps
+        if n and n * ps == len(tokens):
+            n -= 1
+        h = 0
+        blocks: list[int] = []
+        for i in range(n):
+            h = self.hash_fn(h, tokens[i * ps:(i + 1) * ps])
+            entry = None
+            want = tokens[:(i + 1) * ps]
+            for e in self._chains.get(h, ()):
+                if len(e.tokens) == len(want) and \
+                        np.array_equal(e.tokens, want):
+                    entry = e
+                    break
+            if entry is None:
+                break
+            blocks.append(entry.block)
+            if touch:
+                self.policy.on_hit(entry.pkey)
+        if touch:
+            self.trace.append(("probe", tuple(int(t) for t in tokens)))
+            if blocks:
+                self.hits += 1
+            else:
+                self.misses += 1
+        return len(blocks) * ps, blocks
+
+    # -- demote (insert) --------------------------------------------------
+    def insert(self, tokens, blocks) -> tuple[list[int], list[int], list[int]]:
+        """Demote a completed sequence's full pages into the cache.
+
+        ``blocks[i]`` is the page covering tokens ``[i*ps, (i+1)*ps)``.
+        Returns ``(kept, skipped, evicted)`` block lists: ``kept`` must be
+        owner-retagged to :data:`CACHE_OWNER` by the caller, ``skipped``
+        (already-cached duplicates and over-budget tails) stay lane-owned
+        for the lane's FREE_ALL to sweep, ``evicted`` are cache-owned
+        victims the caller must free with single OP_FREEs.
+        """
+        tokens = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        n = min(len(tokens) // ps, len(blocks))
+        keep: list[tuple[int, np.ndarray, bytes, int]] = []
+        skipped: list[int] = []
+        h = 0
+        for i in range(n):
+            h = self.hash_fn(h, tokens[i * ps:(i + 1) * ps])
+            prefix = tokens[:(i + 1) * ps]
+            pkey = prefix.tobytes()
+            if pkey in self._by_pkey:
+                skipped.append(int(blocks[i]))
+                self.dup_skips += 1
+                self.policy.on_hit(pkey)
+            else:
+                keep.append((h, prefix, pkey, int(blocks[i])))
+        self.trace.append(("insert", tuple(int(t) for t in tokens), n))
+
+        evicted: list[int] = []
+        while keep and self.pages + len(keep) > self.budget and self.pages:
+            evicted.extend(self._evict_one())
+        if keep and self.pages + len(keep) > self.budget:
+            # budget smaller than the chain even with an empty cache: keep
+            # only the shallowest pages (prefix property needs contiguity
+            # from page 0 of the chain)
+            cut = max(0, self.budget - self.pages)
+            skipped.extend(b for _, _, _, b in keep[cut:])
+            keep = keep[:cut]
+        if keep:
+            # an eviction cascade may have removed this chain's cached
+            # ancestor mid-insert, orphaning the whole chain — unreachable
+            # entries would leak pages, so skip the insert instead
+            first = keep[0][1]
+            if len(first) > ps and \
+                    first[:-ps].tobytes() not in self._by_pkey:
+                skipped.extend(b for _, _, _, b in keep)
+                keep = []
+        for h, prefix, pkey, block in keep:
+            entry = CacheEntry(key=h, tokens=prefix, pkey=pkey, block=block)
+            self._chains.setdefault(h, []).append(entry)
+            self._by_pkey[pkey] = entry
+            self.policy.on_insert(pkey)
+            self.inserts += 1
+        kept = [b for _, _, _, b in keep]
+        return kept, skipped, evicted
+
+    # -- evict ------------------------------------------------------------
+    def _drop(self, entry: CacheEntry) -> None:
+        chain = self._chains.get(entry.key, [])
+        if entry in chain:
+            chain.remove(entry)
+            if not chain:
+                del self._chains[entry.key]
+        del self._by_pkey[entry.pkey]
+
+    def _evict_one(self) -> list[int]:
+        """Evict the policy's next victim plus its descendants; returns the
+        freed block ids (empty when the cache is already empty)."""
+        pkey = self.policy.victim()
+        if pkey is None:
+            return []
+        victim = self._by_pkey[pkey]
+        doomed = [victim] + [
+            e for e in self._by_pkey.values()
+            if len(e.pkey) > len(pkey) and e.pkey.startswith(pkey)]
+        for e in doomed:
+            self._drop(e)
+            if e is not victim:
+                self.policy.on_remove(e.pkey)
+        self.evictions += len(doomed)
+        return [e.block for e in doomed]
+
+    def evict_pages(self, n: int) -> list[int]:
+        """Evict victims until at least ``n`` pages are freed (or the cache
+        drains).  The admission shortfall path: freed blocks must be
+        OP_FREEd by the caller before the pages are allocatable."""
+        self.trace.append(("evict", int(n)))
+        freed: list[int] = []
+        while len(freed) < n and self.pages:
+            freed.extend(self._evict_one())
+        return freed
+
+
+# --------------------------------------------------------------------------
 # Completion: free everything a set of lanes owns, via OP_FREE/FREE_ALL
 # request packets — the scheduler's lane-lifecycle release path.
 # --------------------------------------------------------------------------
@@ -677,6 +897,7 @@ def release_packets(
     backend: Optional[str] = None,
     policy: Optional[str] = None,
     tenants: Optional[PagedTenants] = None,
+    extra_free=None,
 ) -> tuple[PagedKVState, BurstStats]:
     """Release lanes through FREE_ALL request packets in one support-core step.
 
@@ -689,6 +910,12 @@ def release_packets(
     state_slot, scratch_slot) are then cleared.  Lanes may appear in any
     order; duplicate ids are harmless (FREE_ALL is idempotent within a
     step).
+
+    ``extra_free`` rides additional single-block KV frees on the same burst
+    — the prefix cache's eviction victims (owner ``CACHE_OWNER``, which the
+    FREE_ALLs deliberately skip; single frees are owner-agnostic).  Pages
+    the caller just demoted were owner-retagged BEFORE this commit, so the
+    lane's FREE_ALL leaves them resident.
     """
     lane_ids = lane_ids.astype(jnp.int32)
     valid = lane_ids >= 0
@@ -697,6 +924,10 @@ def release_packets(
     svc = tenants.service
     burst = svc.new_burst()
     stage_release_ops(tenants, burst, safe, valid)
+    if extra_free is not None and len(extra_free):
+        blocks = jnp.asarray(extra_free, jnp.int32)
+        burst.free(tenants.kv, jnp.zeros((blocks.shape[0],), jnp.int32),
+                   blocks)
     alloc, res = svc.commit(state.alloc, burst, max_blocks_per_req=1,
                             backend=backend, policy=policy)
     release_mask = jnp.zeros((cfg.max_lanes,), bool).at[
@@ -830,16 +1061,21 @@ def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
 
 
 def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,
-                      tenants: Optional[PagedTenants] = None) -> None:
+                      tenants: Optional[PagedTenants] = None,
+                      cache: Optional[PrefixCache] = None) -> None:
     """Host-side invariant check for the full paged-KV allocator state:
     I1–I4 on the segregated metadata plus I5 — every KV page is exactly one
-    of {central free stack, lane stash, block-table referenced}.  Failures
-    raise :class:`~repro.core.freelist.FreelistInvariantError` labelled with
+    of {central free stack, lane stash, block-table referenced, prefix
+    cache}.  Failures raise
+    :class:`~repro.core.freelist.FreelistInvariantError` labelled with
     the tenant names, so a tenant-quota bug reads as a per-tenant report.
 
     ``tenants`` points the check at the engine's namespaced classes on a
     shared multi-engine state (I1–I4 then cover EVERY shard's classes; I5's
-    stash partition runs against this engine's own KV class).
+    stash partition runs against this engine's own KV class).  ``cache``
+    extends the partition with the engine's :class:`PrefixCache` pages
+    (owner-mapped to :data:`CACHE_OWNER`); without it, any demoted page
+    fails the partition sum — leaks are loud either way.
     """
     from .freelist import validate_freelist
     tenants = tenants if tenants is not None else paged_tenants(cfg)
@@ -850,4 +1086,6 @@ def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,
         in_use=kv_pages_in_use(cfg, state),
         stash_class=tenants.kv.size_class,
         tenant_names=tenants.service.tenant_names(),
+        cache_pages=cache.blocks() if cache is not None else None,
+        cache_owner=CACHE_OWNER if cache is not None else None,
     )

@@ -23,7 +23,7 @@ import argparse
 import jax.numpy as jnp
 import numpy as np
 
-from ..alloc import ALLOC_POLICIES
+from ..alloc import ALLOC_POLICIES, EVICTION_POLICIES
 from ..configs.base import ARCH_IDS, smoke_config
 from ..core.paged_kv import live_pages
 from ..core.support_core import ALLOC_BACKENDS
@@ -92,7 +92,11 @@ def serve_loop(eng: ServingEngine, sched: Scheduler,
         step += 1
         finished = sched.note_decode_step(tokens)
         if finished:
-            eng.release(finished)
+            # demotion keys must be captured before sched.complete drops
+            # the running entries (prefix cache on only)
+            kv_toks = {l: sched.kv_token_prefix(l) for l in finished} \
+                if eng.cache is not None else None
+            eng.release(finished, kv_tokens=kv_toks)
             sched.complete(finished)
         if verbose and step % log_every == 0:
             print(f"step {step}: done={len(sched.finished)}/{len(requests)} "
@@ -112,7 +116,10 @@ def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
                      dtype=jnp.float32, sched_cfg=scfg,
                      quantum=args.quantum, preemption=args.preemption,
                      router=args.router, alloc_backend=args.alloc_backend,
-                     alloc_policy=args.alloc_policy)
+                     alloc_policy=args.alloc_policy,
+                     prefix_cache=args.prefix_cache == "on",
+                     eviction=args.eviction,
+                     cache_pages=args.cache_pages)
     windows = me.serve(requests, max_new_tokens=args.max_new_tokens,
                        verbose=True)
     st = me.stats
@@ -129,10 +136,14 @@ def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
           f"preemptions={st.preemptions}")
     for i, eng in enumerate(me.engines):
         s = eng.stats
+        cache = (f" cache_hit_rate={s.cache_hit_rate:.2f} "
+                 f"prefill_tokens_saved={s.prefill_tokens_saved}"
+                 if eng.cache is not None else "")
         print(f"  e{i}: admitted={s.admitted} completed={s.completed} "
               f"decode_steps={s.decode_steps} "
               f"stash_hit_rate={s.stash_hit_rate:.2f} "
-              f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f}")
+              f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f}"
+              f"{cache}")
     print("cross-engine tenant rollup (one shared AllocService):")
     for name, d in me.tenant_rollup().items():
         print(f"  {name}: engines={d['engines']} used={d['used']}/{d['quota']} "
@@ -178,6 +189,17 @@ def main() -> None:
                          "REPRO_ALLOC_POLICY env or 'freelist'; 'bitmap' is "
                          "the address-ordered first-fit AllocatorPolicy — "
                          "DESIGN.md §9)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="keep completed requests' full KV pages cached by "
+                         "token prefix and skip their prefill on a hit "
+                         "(DESIGN.md §11)")
+    ap.add_argument("--eviction", default=None,
+                    choices=list(EVICTION_POLICIES),
+                    help="prefix-cache eviction policy (default: "
+                         "REPRO_KV_EVICTION env or 'lru')")
+    ap.add_argument("--cache-pages", type=int, default=None,
+                    help="prefix-cache page budget (default: half the KV "
+                         "pool; charged against the kv tenant quota)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -197,7 +219,10 @@ def main() -> None:
 
     eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg,
                         alloc_backend=args.alloc_backend,
-                        alloc_policy=args.alloc_policy)
+                        alloc_policy=args.alloc_policy,
+                        prefix_cache=args.prefix_cache == "on",
+                        eviction=args.eviction,
+                        cache_pages=args.cache_pages)
     sched = Scheduler(scfg)
 
     steps = serve_loop(eng, sched, requests, args.max_new_tokens,
@@ -221,6 +246,12 @@ def main() -> None:
           f"stash_hit_rate={s.stash_hit_rate:.2f} "
           f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f} "
           f"stash_depth_hist={s.stash_depth_hist}")
+    if eng.cache is not None:
+        print(f"prefix_cache: hit_rate={s.cache_hit_rate:.2f} "
+              f"prefill_tokens_saved={s.prefill_tokens_saved} "
+              f"pages={s.cache_pages}/{eng.cache.budget} "
+              f"inserts={s.cache_inserts} evictions={s.cache_evictions} "
+              f"policy={eng.cache.policy.name}")
     # per-tenant view: the multi-tenant support-core claim, measured
     print(f"burst_occupancy={s.burst_occupancy:.2f} | tenants:")
     for name, rep in eng.tenant_report().items():

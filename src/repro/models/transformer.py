@@ -131,11 +131,18 @@ def layer_windows(cfg: ArchConfig) -> jnp.ndarray:
 # --------------------------------------------------------------------------
 
 def _attn_block_seq(cfg: ArchConfig, lp: dict, x: jnp.ndarray, window,
-                    q_offset=0, return_kv: bool = False):
+                    q_offset=0, return_kv: bool = False, prefix_kv=None):
     """Pre-norm attention + MLP block over a full sequence.
 
     Returns x, or (x, (k, v)) with ``return_kv``.  MoE blocks additionally
     stash the load-balance aux loss on the side channel via ``_moe_aux``.
+
+    ``prefix_kv`` = (pk, pv), each [B, P, kv_heads, head_dim]: cached K/V
+    covering absolute positions ``[0, P)`` (already roped at those
+    positions when written).  The fresh sequence then occupies positions
+    ``[q_offset, q_offset + T)`` and attends causally over the
+    concatenation — the prefill-skip path for prefix-cache hits.  The
+    returned ``(k, v)`` stay suffix-only (fresh positions).
     """
     hd = cfg.resolved_head_dim
     h = apply_norm(cfg.norm, lp["ln_attn"], x)
@@ -144,7 +151,14 @@ def _attn_block_seq(cfg: ArchConfig, lp: dict, x: jnp.ndarray, window,
     if cfg.family != "audio":       # whisper uses learned abs pos, no rope
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
-    attn = mea_attention(q, k, v, causal=True, window=window, q_offset=q_offset)
+    if prefix_kv is not None:
+        pk, pv = prefix_kv
+        k_all = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+    else:
+        k_all, v_all = k, v
+    attn = mea_attention(q, k_all, v_all, causal=True, window=window,
+                         q_offset=q_offset)
     x = x + out_project(lp["attn"], attn)
     h = apply_norm(cfg.norm, lp["ln_mlp"], x)
     if "moe" in lp:
@@ -204,12 +218,29 @@ def forward(
     return_kv: bool = False,
     hints=None,
     unroll: bool = False,
+    prefix_kv=None,
+    pos_offset: int = 0,
 ):
     """Returns logits [B, S, vocab] (S includes the vlm prefix), and
-    optionally stacked per-attention-layer (k, v) for serving prefill."""
+    optionally stacked per-attention-layer (k, v) for serving prefill.
+
+    ``prefix_kv`` = (pk, pv), each [num_attn_layers, B, P, kv_heads,
+    head_dim]: cached per-layer K/V for absolute positions ``[0, P)`` with
+    ``pos_offset == P`` — ``tokens`` then continues the sequence from
+    position P and its logits/KV come out suffix-only (the prefix-cache
+    prefill-skip path).  Plain attention families only (no vlm prefix, no
+    encoder, no recurrent state).
+    """
     if hints is None:
         from ..distributed.hints import NO_HINTS
         hints = NO_HINTS
+    if prefix_kv is not None or pos_offset:
+        if (cfg.family in ("ssm", "hybrid") or cfg.encoder_layers
+                or prefix_embeds is not None):
+            raise ValueError(
+                "prefix_kv/pos_offset prefill-skip supports only plain "
+                "attention families without vlm/encoder prefixes "
+                f"(family={cfg.family!r})")
     x = embed(params["embed"], tokens)
     if prefix_embeds is not None:
         x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
@@ -230,7 +261,8 @@ def forward(
             x, kv = x
     else:
         x = _decoder_stack(params, cfg, x, remat, return_kv, hints=hints,
-                           unroll=unroll)
+                           unroll=unroll, prefix_kv=prefix_kv,
+                           pos_offset=pos_offset)
         if return_kv:
             x, kv = x
 
@@ -245,21 +277,31 @@ def forward(
 
 
 def _decoder_stack(params, cfg, x, remat, return_kv=False, hints=None,
-                   unroll=False):
+                   unroll=False, prefix_kv=None, pos_offset=0):
     windows = layer_windows(cfg)
+    # per-layer cached prefix K/V ride the scan as extra inputs; the block
+    # sees its own layer's slice, exactly like the window schedule
+    xs = (params["layers"], windows) if prefix_kv is None \
+        else (params["layers"], windows, prefix_kv[0], prefix_kv[1])
 
     def body(h, xs):
-        lp, w = xs
+        if prefix_kv is None:
+            lp, w = xs
+            pkv = None
+        else:
+            lp, w, pk_l, pv_l = xs
+            pkv = (pk_l, pv_l)
         if hints is not None:
             h = hints.residual(h)
-        out = _attn_block_seq(cfg, lp, h, w, return_kv=return_kv)
+        out = _attn_block_seq(cfg, lp, h, w, q_offset=pos_offset,
+                              return_kv=return_kv, prefix_kv=pkv)
         if return_kv:
             h, kv = out
             return h, kv
         return out, None
 
     fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable) if remat else body
-    h, kvs = jax.lax.scan(fn, x, (params["layers"], windows),
+    h, kvs = jax.lax.scan(fn, x, xs,
                           unroll=cfg.num_layers if unroll else 1)
     if return_kv:
         return h, kvs

@@ -52,6 +52,20 @@ class EngineStats:
     tenants: dict = dataclasses.field(default_factory=dict)
     burst_slots_live: int = 0      # non-NOP slots across all issued bursts
     burst_slots_capacity: int = 0  # total slots across all issued bursts
+    # --- prefix-cache telemetry (DESIGN.md §11) ---
+    cache_hits: int = 0            # admissions that reused >= 1 cached page
+    cache_misses: int = 0          # probed admissions with no cached prefix
+    cache_inserts: int = 0         # pages demoted into the cache
+    cache_evictions: int = 0       # pages evicted from the cache
+    cache_pages: int = 0           # pages the cache holds right now
+    prefill_tokens_saved: int = 0  # prompt tokens skipped via cached pages
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of admission-time probes that found a reusable cached
+        prefix (tracked in BENCH_serving.json; 0.0 with the cache off)."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     @property
     def stash_hit_rate(self) -> float:
@@ -84,6 +98,7 @@ class AdmissionItem(NamedTuple):
     tokens: np.ndarray                    # [T] int32
     frames: Optional[np.ndarray] = None   # [F, d] (audio)
     patches: Optional[np.ndarray] = None  # [P, d] (vlm)
+    cached_len: int = 0                   # prefix tokens served by the cache
 
 
 def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
@@ -98,9 +113,23 @@ def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
     already finished.  ``after_op`` runs after every engine-side allocator
     op (the multi-engine loop passes its shared-freelist ``_pull``).
     Returns whether anything was admitted.
+
+    With the prefix cache on (DESIGN.md §11), planning probes the cache so
+    each candidate is bucketed by its UNCACHED suffix, and a stuck
+    admission first evicts cold cached pages (strictly lower priority than
+    running lanes) before resorting to preemption.  Requests the admission
+    seed finishes are demoted back into the cache on release.
     """
     sync = after_op if after_op is not None else (lambda: None)
-    plan = sched.plan_admission(eng.free_pages)
+    probe = eng.cache_probe if eng.cache is not None else None
+    plan = sched.plan_admission(eng.free_pages, probe=probe)
+    if not plan.size and eng.cache is not None and eng.cache.pages:
+        short = sched.head_shortfall(eng.free_pages)
+        if short is not None and eng.cache_release(short):
+            sync()
+            # evicting may have shortened the head's cached prefix — replan
+            # so cached_len/bucket/page math all reflect the new cache state
+            plan = sched.plan_admission(eng.free_pages, probe=probe)
     if not plan.size and preemption:
         lane = sched.preempt_victim(free_pages=eng.free_pages)
         if lane is not None:
@@ -109,10 +138,10 @@ def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
             eng.preempt([lane])
             sync()
             sched.preempt(lane)
-            plan = sched.plan_admission(eng.free_pages)
+            plan = sched.plan_admission(eng.free_pages, probe=probe)
     if not plan.size:
         return False
-    items = [AdmissionItem(lane, r.tokens, r.frames, r.patches)
+    items = [AdmissionItem(lane, r.tokens, r.frames, r.patches, r.cached_len)
              for b in plan.batches for lane, r in b.items]
     failed = eng.admit_many(items)      # failed lanes come back reclaimed
     sync()
@@ -125,7 +154,9 @@ def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
     # families): record it, and retire max_new_tokens==1 requests
     done0 = sched.note_admission(eng.admitted_tokens)
     if done0:
-        eng.release(done0)
+        kv_toks = {l: sched.kv_token_prefix(l) for l in done0} \
+            if eng.cache is not None else None
+        eng.release(done0, kv_tokens=kv_toks)
         sync()
         sched.complete(done0)
     return True
@@ -141,7 +172,10 @@ class ServingEngine:
                  alloc_policy: Optional[str] = None,
                  tenants: Optional[pkv.PagedTenants] = None,
                  alloc_state=None,
-                 defer_refill: bool = False):
+                 defer_refill: bool = False,
+                 prefix_cache: bool = False,
+                 eviction: Optional[str] = None,
+                 cache_pages: Optional[int] = None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
@@ -171,6 +205,17 @@ class ServingEngine:
         # ``pending_ops``) instead of committing them per step.
         self.defer_refill = defer_refill
         self.pending_ops: list = []
+        # Prefix cache (DESIGN.md §11): completed lanes' full KV pages
+        # survive as CACHE_OWNER-retagged blocks, probed at admission for
+        # prefill skip.  Off by default — the legacy lifecycle is exactly
+        # unchanged when ``self.cache is None``.
+        self.cache: Optional[pkv.PrefixCache] = None
+        if prefix_cache:
+            from ..alloc.eviction import get_eviction
+            budget = cache_pages if cache_pages is not None \
+                else kvcfg.num_pages // 2
+            self.cache = pkv.PrefixCache(kvcfg.page_size, budget,
+                                         policy=get_eviction(eviction))
         self.admitted_tokens: dict[int, int] = {}
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
         # fresh empty state: deactivate the synthetic lanes (metadata
@@ -226,6 +271,83 @@ class ServingEngine:
         return self.service.tenant_report(self.state.paged.alloc,
                                           tenants=self.tenants.handles)
 
+    # ---------------- prefix cache (DESIGN.md §11) ----------------
+
+    def _sync_cache_stats(self) -> None:
+        """Mirror the cache's cumulative counters into EngineStats."""
+        if self.cache is None:
+            return
+        self.stats.cache_hits = self.cache.hits
+        self.stats.cache_misses = self.cache.misses
+        self.stats.cache_inserts = self.cache.inserts
+        self.stats.cache_evictions = self.cache.evictions
+        self.stats.cache_pages = self.cache.pages
+
+    def cache_probe(self, req) -> int:
+        """Plan-time peek: longest cached prefix (tokens) of the request's
+        resume prompt; 0 when the request can't ride the cache.  No side
+        effects — ``Scheduler.plan_admission`` may call this several times
+        per admission pass; the admit-time ``touch=True`` lookup in
+        :meth:`admit_many` does the recency/counter bookkeeping."""
+        if self.cache is None or self.cfg.family in ("ssm", "hybrid"):
+            return 0
+        if getattr(req, "frames", None) is not None or \
+                getattr(req, "patches", None) is not None:
+            return 0
+        n, _ = self.cache.probe(np.asarray(req.tokens, np.int32))
+        return n
+
+    def cache_release(self, n_pages: int) -> int:
+        """Evict at least ``n_pages`` from the prefix cache and free them
+        immediately (single OP_FREEs, one burst) — the admission-shortfall
+        path.  Returns how many pages were actually freed."""
+        blocks = self.cache.evict_pages(n_pages)
+        if blocks:
+            pkts = release_packet_array([], self.kvcfg.max_lanes)
+            paged, stats = pkv.release_packets(
+                self.kvcfg, self.state.paged, jnp.asarray(pkts),
+                backend=self.alloc_backend, policy=self.alloc_policy,
+                tenants=self.tenants, extra_free=blocks)
+            self._note_burst(stats.per_tenant, stats.queue_live,
+                             stats.queue_capacity)
+            self.state = self.state._replace(paged=paged)
+            self._sync_cache_stats()
+        return len(blocks)
+
+    def _demote_lanes(self, kv_tokens: dict) -> list[int]:
+        """Demote completing lanes' full KV pages into the prefix cache.
+
+        ``kv_tokens[lane]`` is the token sequence whose KV the lane holds
+        (``Scheduler.kv_token_prefix``).  Pure control plane: pages the
+        cache keeps are owner-retagged to :data:`~repro.core.paged_kv
+        .CACHE_OWNER` so the lane's FREE_ALL leaves them resident;
+        duplicates stay lane-owned for that sweep; policy victims are
+        returned for the caller to ride as single frees on the release
+        burst.  MUST run before the release commit.
+        """
+        ps = self.kvcfg.page_size
+        tbl = np.asarray(self.state.paged.block_tables)
+        retag: list[int] = []
+        evicted: list[int] = []
+        for lane, toks in kv_tokens.items():
+            toks = np.asarray(toks, np.int32)
+            n = len(toks) // ps
+            if not n:
+                continue
+            blocks = tbl[lane, :n]
+            if (blocks < 0).any():       # hole in the table: don't demote
+                continue
+            kept, _skipped, ev = self.cache.insert(toks[: n * ps], blocks)
+            retag.extend(kept)
+            evicted.extend(ev)
+        if retag:
+            alloc = self.service.retag_blocks(
+                self.state.paged.alloc, self.tenants.kv,
+                np.asarray(retag, np.int32), pkv.CACHE_OWNER)
+            self.state = self.state._replace(
+                paged=self.state.paged._replace(alloc=alloc))
+        return evicted
+
     # ---------------- admission ----------------
 
     def _prefill_fn(self, group_key: tuple):
@@ -239,7 +361,7 @@ class ServingEngine:
 
     def _group_key(self, item: AdmissionItem, bucket: int) -> tuple:
         p = item.patches.shape[0] if item.patches is not None else 0
-        return (bucket, p)
+        return (bucket, p, item.cached_len)
 
     def admit_many(self, items: Sequence[AdmissionItem]) -> list[int]:
         """Prefill and install a batch of sequences.
@@ -276,7 +398,7 @@ class ServingEngine:
 
         groups: dict[tuple, list[AdmissionItem]] = {}
         for it in items:
-            bucket = pick_bucket(len(it.tokens), scfg)
+            bucket = pick_bucket(len(it.tokens) - it.cached_len, scfg)
             groups.setdefault(self._group_key(it, bucket), []).append(it)
 
         # Per admitted sequence: (lane, kv_len, next_token) + per-bucket KV.
@@ -284,18 +406,50 @@ class ServingEngine:
         all_kv_len: list[int] = []
         all_next: list[jnp.ndarray] = []
         kv_chunks: list[tuple[jnp.ndarray, jnp.ndarray]] = []
+        lane_cached: dict[int, int] = {}
 
-        for (bucket, n_prefix), group in sorted(groups.items()):
+        for (bucket, n_prefix, cached_len), group in sorted(groups.items()):
             k = len(group)
             width = max(W, k)
             toks = np.zeros((width, bucket), np.int32)
             lengths = np.zeros((width,), np.int32)
             for i, it in enumerate(group):
-                toks[i, : len(it.tokens)] = it.tokens
-                lengths[i] = len(it.tokens)
+                suf = it.tokens[cached_len:]      # only the UNCACHED suffix
+                toks[i, : len(suf)] = suf         # runs through prefill
+                lengths[i] = len(suf)
             lengths[k:] = 1                       # dummy rows: benign gather idx
             batch = {"tokens": jnp.asarray(toks),
                      "lengths": jnp.asarray(lengths)}
+            prefix_kv = None
+            if cached_len:
+                # Prefill skip (DESIGN.md §11): re-probe at admit time
+                # (touch=True — recency + hit/miss bookkeeping), gather the
+                # cached pages' K/V as the attention prefix, and prefill
+                # the suffix only.  No cache mutation happens between the
+                # final plan and here, so the probe must agree with it.
+                assert self.cache is not None
+                n_pages = cached_len // self.kvcfg.page_size
+                src = np.zeros((width, n_pages), np.int32)
+                for i, it in enumerate(group):
+                    cl, blks = self.cache.probe(it.tokens, touch=True)
+                    assert cl == cached_len, \
+                        f"cache changed between plan and admit: {cl} != {cached_len}"
+                    src[i] = blks
+                # [width, P, L, ps, kv, hd] -> [width, L, P*ps, kv, hd]
+                def _flat(pages):
+                    g = pages[jnp.asarray(src)]
+                    g = jnp.swapaxes(g, 1, 2)
+                    return g.reshape(g.shape[0], g.shape[1], cached_len,
+                                     *g.shape[4:])
+                prefix_kv = (_flat(self.state.paged.k_pages),
+                             _flat(self.state.paged.v_pages))
+                batch["prefix_k"], batch["prefix_v"] = prefix_kv
+            elif self.cache is not None and n_prefix == 0 \
+                    and self.cfg.family not in ("ssm", "hybrid", "audio"):
+                for it in group:
+                    # no cached prefix: record the miss (and the trace
+                    # event the sim replay consumes) at admit time
+                    self.cache.probe(it.tokens, touch=True)
             if cfg.family == "audio":
                 fr = np.stack([np.asarray(it.frames, np.float32)
                                for it in group])
@@ -311,7 +465,8 @@ class ServingEngine:
                         [pe, np.zeros((width - k,) + pe.shape[1:], pe.dtype)])
                 batch["patches"] = jnp.asarray(pe, self.dtype)
 
-            res = self._prefill_fn((bucket, n_prefix, width))(self.params, batch)
+            res = self._prefill_fn(
+                (bucket, n_prefix, width, cached_len))(self.params, batch)
 
             rows = np.arange(k)
             lanes = np.asarray([it.lane for it in group], np.int32)
@@ -327,9 +482,19 @@ class ServingEngine:
                     enc_out=self.state.enc_out.at[lanes].set(res.enc_out[rows]))
             all_next.append(nxt)
             all_lanes.extend(int(l) for l in lanes)
-            all_kv_len.extend(int(lengths[i]) + n_prefix for i in rows)
+            all_kv_len.extend(cached_len + int(lengths[i]) + n_prefix
+                              for i in rows)
+            for it in group:
+                lane_cached[int(it.lane)] = cached_len
             if res.kv is not None:
                 ks, vs = res.kv                  # [width, L_kv, T_kv, kv, hd]
+                if prefix_kv is not None:
+                    # copy-based install: the lane gets its OWN pages for
+                    # the full sequence, so prepend the cached prefix KV
+                    # before the admission burst writes pages
+                    pk, pv = prefix_kv
+                    ks = jnp.concatenate([pk.astype(ks.dtype), ks], axis=2)
+                    vs = jnp.concatenate([pv.astype(vs.dtype), vs], axis=2)
                 kv_chunks.append((ks[rows], vs[rows]))
 
         order = np.argsort(np.asarray(all_lanes, np.int32))
@@ -369,6 +534,10 @@ class ServingEngine:
         ok = np.asarray(paged.active)[np.asarray(lanes_arr)]
         failed = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if not o]
         self.stats.admitted += len(items) - len(failed)
+        self.stats.prefill_tokens_saved += sum(
+            lane_cached.get(int(l), 0)
+            for l, o in zip(np.asarray(lanes_arr), ok) if o)
+        self._sync_cache_stats()
         if self.cfg.family in ("ssm", "hybrid"):
             self.admitted_tokens = {}          # seed == last prompt token
         else:
@@ -443,22 +612,35 @@ class ServingEngine:
 
     # ---------------- completion ----------------
 
-    def release(self, lanes: Sequence[int], completed: bool = True) -> None:
+    def release(self, lanes: Sequence[int], completed: bool = True,
+                kv_tokens: Optional[dict] = None) -> None:
         """Free everything the lanes own via FREE_ALL request packets.
 
         ``completed=False`` reclaims lanes whose admission failed (any
         partially granted blocks return to the pool) without counting them
         as served.
+
+        ``kv_tokens`` (prefix cache on only) maps lanes to the token
+        sequence whose KV they hold (``Scheduler.kv_token_prefix``): those
+        lanes' full pages are demoted into the cache FIRST — kept pages
+        retagged to ``CACHE_OWNER`` so this commit's FREE_ALLs skip them,
+        eviction victims riding the same burst as single frees.
         """
+        extra = None
+        if completed and self.cache is not None and kv_tokens:
+            extra = self._demote_lanes(
+                {l: kv_tokens[l] for l in lanes if l in kv_tokens})
         pkts = release_packet_array(list(lanes), self.kvcfg.max_lanes)
         paged, stats = pkv.release_packets(self.kvcfg, self.state.paged,
                                            jnp.asarray(pkts),
                                            backend=self.alloc_backend,
                                            policy=self.alloc_policy,
-                                           tenants=self.tenants)
+                                           tenants=self.tenants,
+                                           extra_free=extra)
         self._note_burst(stats.per_tenant, stats.queue_live,
                          stats.queue_capacity)
         self.state = self.state._replace(paged=paged)
+        self._sync_cache_stats()
         if completed:
             self.stats.completed += len(lanes)
 

@@ -88,7 +88,10 @@ class MultiEngine:
                  quantum: int = 4, preemption: bool = True,
                  router: str = "round_robin",
                  alloc_backend: Optional[str] = None,
-                 alloc_policy: Optional[str] = None):
+                 alloc_policy: Optional[str] = None,
+                 prefix_cache: bool = False,
+                 eviction: Optional[str] = None,
+                 cache_pages: Optional[int] = None):
         if n_engines < 1:
             raise ValueError("n_engines must be >= 1")
         if quantum < 1:
@@ -121,7 +124,12 @@ class MultiEngine:
                           alloc_backend=self.alloc_backend,
                           alloc_policy=self.alloc_policy,
                           tenants=ts, alloc_state=self.alloc,
-                          defer_refill=True)
+                          defer_refill=True,
+                          # per-shard caches: each shard demotes/probes only
+                          # its own namespaced KV class, so caches need no
+                          # cross-shard coordination (DESIGN.md §11)
+                          prefix_cache=prefix_cache, eviction=eviction,
+                          cache_pages=cache_pages)
             for ts in tenant_sets]
         # the prefill is allocator-free and identical across shards: share
         # the jit cache so N shards pay ONE compile per prefill bucket
@@ -214,8 +222,11 @@ class MultiEngine:
                                      for e in self.engines)
 
         # --- decode quantum: engines step round-robin; deferrable allocator
-        # ops pile up in each engine's pending_ops, releases in `released`
+        # ops pile up in each engine's pending_ops, releases in `released`,
+        # prefix-cache eviction victims in `evicted` (freed at the window
+        # commit, like everything else deferrable)
         released: list[list[int]] = [[] for _ in self.engines]
+        evicted: list[list[int]] = [[] for _ in self.engines]
         for _ in range(self.quantum):
             for i, sched in enumerate(self.scheds):
                 if not sched.running:
@@ -230,6 +241,16 @@ class MultiEngine:
                 progressed = True
                 finished = sched.note_decode_step(tokens)
                 if finished:
+                    if eng.cache is not None:
+                        # demote full KV pages into the shard's prefix
+                        # cache BEFORE the block-table rows clear and
+                        # BEFORE the window's FREE_ALLs commit: kept pages
+                        # retag to CACHE_OWNER on the SHARED freelist (pull
+                        # it), victims ride the window commit as frees
+                        evicted[i].extend(eng._demote_lanes(
+                            {l: sched.kv_token_prefix(l) for l in finished}))
+                        self._pull(i)
+                        eng._sync_cache_stats()
                     # host metadata clears now; the FREE_ALL packets ride
                     # the merged window commit below
                     mask = np.zeros((self.kvcfg.max_lanes,), bool)
@@ -241,16 +262,19 @@ class MultiEngine:
                     released[i].extend(finished)
                     sched.complete(finished)
 
-        self._flush_window(released)
+        self._flush_window(released, evicted)
         self.stats.windows += 1
         if validate:
             self.validate()
         return progressed
 
-    def _flush_window(self, released: list[list[int]]) -> None:
+    def _flush_window(self, released: list[list[int]],
+                      evicted: Optional[list[list[int]]] = None) -> None:
         """ONE merged commit for every shard's deferred window traffic:
         stash refills (OR of the below-watermark masks over the quantum),
-        overflow flushes, and completed-lane FREE_ALLs."""
+        overflow flushes, completed-lane FREE_ALLs, and prefix-cache
+        eviction victims (single owner-agnostic frees — the FREE_ALLs skip
+        CACHE_OWNER pages, so demoted survivors stay resident)."""
         L = self.kvcfg.max_lanes
         S = self.kvcfg.stash_size
         lane_ids = jnp.arange(L, dtype=jnp.int32)
@@ -289,6 +313,10 @@ class MultiEngine:
                 valid[released[i]] = True
                 pkv.stage_release_ops(eng.tenants, burst, lane_ids,
                                       jnp.asarray(valid))
+            if evicted is not None and evicted[i]:
+                blocks = jnp.asarray(evicted[i], jnp.int32)
+                burst.free(eng.tenants.kv,
+                           jnp.zeros((blocks.shape[0],), jnp.int32), blocks)
         if not burst.size:
             return
         self.alloc, res = self.service.commit(
@@ -323,7 +351,7 @@ class MultiEngine:
         for i, eng in enumerate(self.engines):
             self._sync(i)
             pkv.validate_paged_kv(self.kvcfg, eng.state.paged,
-                                  tenants=eng.tenants)
+                                  tenants=eng.tenants, cache=eng.cache)
 
     @property
     def finished(self) -> list[Request]:

@@ -78,6 +78,10 @@ class Request:
     output: list = dataclasses.field(default_factory=list)  # generated ids
     preemptions: int = 0                     # times this request was evicted
     _admit_mark: int = 0                     # len(output) at last admission
+    # Tokens covered by a prefix-cache hit at the LAST admission plan
+    # (multiple of page_size, < prompt_len; 0 = no hit / cache off).  Set by
+    # plan_admission's probe; prefill starts at the first uncached token.
+    cached_len: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -252,7 +256,7 @@ class Scheduler:
         """
         return sorted(self.waiting, key=lambda r: -r.priority)
 
-    def plan_admission(self, free_pages: int) -> AdmissionPlan:
+    def plan_admission(self, free_pages: int, probe=None) -> AdmissionPlan:
         """Select waiting requests to admit, priority-then-FIFO, under the
         page budget.
 
@@ -263,6 +267,14 @@ class Scheduler:
         is head-of-line blocking: the first request that does not fit stops
         the scan, preserving FIFO fairness under scarcity (within the
         priority ordering — see :meth:`admission_order`).
+
+        ``probe`` is the engine's prefix-cache peek (``request -> cached
+        token count``): the probe runs BEFORE bucket selection, so a cache
+        hit buckets by its uncached SUFFIX length (a 2048-token prompt with
+        a 2040-token hit compiles into the smallest bucket, not the
+        largest).  Page charging stays at the FULL kv length — cached pages
+        are copied into freshly allocated lane pages at admission, so the
+        budget math is identical with the cache on or off.
         """
         budget = free_pages - self.scfg.page_reserve
         lanes = self.free_lanes()
@@ -272,7 +284,8 @@ class Scheduler:
         for req in self.admission_order():
             if taken >= len(lanes):
                 break
-            bucket = pick_bucket(req.prompt_len, self.scfg)
+            req.cached_len = int(probe(req)) if probe is not None else 0
+            bucket = pick_bucket(req.prompt_len - req.cached_len, self.scfg)
             members = by_bucket.setdefault(bucket, [])
             if len(members) >= self.scfg.admit_width:
                 break
@@ -342,6 +355,37 @@ class Scheduler:
     def release_packet_array(self, lanes: list[int]) -> np.ndarray:
         """Completion packets for ``paged_kv.release_packets`` (module fn)."""
         return release_packet_array(lanes, self.scfg.max_lanes)
+
+    def kv_token_prefix(self, lane: int) -> np.ndarray:
+        """The token sequence whose KV the running lane holds right now —
+        the demotion key for the prefix cache (DESIGN.md §11).
+
+        The admission prefix contributed KV for every prompt token; each
+        decode step then appended KV for the token it CONSUMED, i.e. the
+        previously sampled one — so the last sampled token's KV was never
+        written and ``output[-1]`` is excluded.  Call BEFORE
+        :meth:`complete` pops the request.
+        """
+        req = self.running[lane]
+        gen = req.output[req._admit_mark:-1]
+        if not gen:
+            return np.asarray(req.tokens, np.int32)
+        return np.concatenate([np.asarray(req.tokens, np.int32),
+                               np.asarray(gen, np.int32)])
+
+    def head_shortfall(self, free_pages: int) -> Optional[int]:
+        """Pages missing for the head-of-line waiting request, or ``None``
+        when more pages wouldn't help (no waiting work, no free lane, or
+        the head already fits and admission is stuck on something else).
+        Drives the prefix cache's shortfall eviction: the engine evicts at
+        least this many cached pages and replans."""
+        if not self.waiting or not self.free_lanes():
+            return None
+        head = self.admission_order()[0]
+        need = pages_needed(self._kv_len(head), self.scfg) \
+            + self.scfg.stash_precharge
+        short = need - (free_pages - self.scfg.page_reserve)
+        return short if short > 0 else None
 
     def fail_admission(self, lanes: list[int]) -> list[Request]:
         """Retire lanes whose admission the allocator rejected.

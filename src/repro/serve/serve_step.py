@@ -257,6 +257,18 @@ def make_family_prefill(cfg: ArchConfig, hints=None, unroll: bool = False,
                                  prefix_embeds=batch["patches"],
                                  return_kv=True, hints=hints, unroll=unroll)
             last_idx = last_idx + batch["patches"].shape[1]
+        elif batch.get("prefix_k") is not None:
+            # Prefix-cache hit (DESIGN.md §11): ``tokens`` is the uncached
+            # SUFFIX and prefix_k/v [B, L, P, kv, hd] the cached pages'
+            # K/V for absolute positions [0, P).  The forward attends over
+            # the concatenation; logits and KV come back suffix-only, and
+            # ``lengths`` count suffix tokens.
+            pk, pv = batch["prefix_k"], batch["prefix_v"]
+            logits, kv = forward(
+                params, cfg, toks, return_kv=True, hints=hints,
+                unroll=unroll,
+                prefix_kv=(pk.swapaxes(0, 1), pv.swapaxes(0, 1)),
+                pos_offset=pk.shape[2])
         else:
             logits, kv = forward(params, cfg, toks, return_kv=True,
                                  hints=hints, unroll=unroll)

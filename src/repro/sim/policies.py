@@ -166,3 +166,47 @@ BASELINES = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO]
 ALL_POLICIES = {p.name: p for p in
                 [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO,
                  IC_MALLOC, SPEEDMALLOC, SPEEDMALLOC_STASH]}
+
+
+# --------------------------------------------------------------------------
+# Prefix-cache eviction simulators (DESIGN.md §11): replay the engine's
+# logical insert/probe trace through a fresh cache under each EvictionPolicy
+# and compare counters — the same differential idiom the stash policy model
+# uses against the serving bursts (tests/test_sim.py).
+# --------------------------------------------------------------------------
+
+def replay_prefix_trace(trace, eviction: str, budget_pages: int,
+                        page_size: int) -> dict:
+    """Replay a :class:`~repro.core.paged_kv.PrefixCache` event trace.
+
+    ``trace`` is the engine cache's ``trace`` list — ``("insert", tokens,
+    n_pages)`` and ``("probe", tokens)`` events in lifecycle order.  The
+    replay drives a FRESH cache (synthetic block ids — eviction policies key
+    on token content, so block identity is irrelevant) under the named
+    ``eviction`` policy and returns its counters.  A replay under the SAME
+    policy as the live engine must agree exactly on every counter: the
+    engine's cache decisions are a pure function of the logical event
+    stream, never of allocator state.
+    """
+    import numpy as np
+
+    from ..alloc.eviction import get_eviction
+    from ..core.paged_kv import PrefixCache
+
+    cache = PrefixCache(page_size, budget_pages, policy=get_eviction(eviction))
+    next_block = 0
+    for ev in trace:
+        if ev[0] == "insert":
+            _, tokens, n = ev
+            blocks = list(range(next_block, next_block + n))
+            next_block += n
+            cache.insert(np.asarray(tokens, np.int32)[: n * page_size], blocks)
+        elif ev[0] == "probe":
+            cache.probe(np.asarray(ev[1], np.int32), touch=True)
+        elif ev[0] == "evict":
+            cache.evict_pages(ev[1])
+        else:
+            raise ValueError(f"unknown trace event {ev[0]!r}")
+    return {"hits": cache.hits, "misses": cache.misses,
+            "inserts": cache.inserts, "evictions": cache.evictions,
+            "dup_skips": cache.dup_skips, "pages": cache.pages}

@@ -204,6 +204,52 @@ def test_shard_exhaustion_cannot_touch_other_tenants(dense, rng):
 
 
 # ---------------------------------------------------------------------------
+# prefix cache across shards (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _shared_prefix_requests(cfg, n, prefix_len=24, tail=5, max_new=5):
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    return [Request(rid=rid, tokens=np.concatenate(
+                [shared, np.random.RandomState(100 + rid).randint(
+                    0, cfg.vocab_size, size=tail).astype(np.int32)]),
+                    max_new_tokens=max_new)
+            for rid in range(n)]
+
+
+def test_multi_engine_prefix_cache_exact_with_windowed_i5(dense):
+    """Per-shard prefix caches on the SHARED freelist: outputs stay
+    bit-identical to cache-off, and serve(validate=True) re-proves the
+    cache-extended I5 partition (central stack / stash / in-use / cache)
+    after EVERY burst window — demotions retag on the shared state, so a
+    window that leaked a page would fail here, not at drain."""
+    cfg, params = dense
+    kvcfg = make_paged_config(cfg, seq_len=64, lanes=2, page_size=4,
+                              dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=32)
+
+    base = _run_multi(cfg, params, kvcfg, scfg,
+                      _shared_prefix_requests(cfg, 8), 5, n=2, quantum=3,
+                      preemption=True)
+    me = _run_multi(cfg, params, kvcfg, scfg,
+                    _shared_prefix_requests(cfg, 8), 5, n=2, quantum=3,
+                    preemption=True, prefix_cache=True, eviction="lru")
+    assert _outputs(me.finished) == _outputs(base.finished)
+
+    hits = sum(eng.stats.cache_hits for eng in me.engines)
+    saved = sum(eng.stats.prefill_tokens_saved for eng in me.engines)
+    assert hits > 0 and saved > 0
+    for eng in me.engines:
+        # a cached page is charged KV quota until evicted, never leaked:
+        # in-flight occupancy is exactly the cache residue
+        assert eng.tenant_report()[eng.tenants.kv.name][
+            "used"] == eng.stats.cache_pages
+        assert eng.stats.cache_pages <= eng.cache.budget
+    # final shared-state check with every shard's cache partition
+    me.validate()
+
+
+# ---------------------------------------------------------------------------
 # preemption: evict -> resume -> correct output, no leak
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,428 @@
+"""Prefix-cache tenant: KV pages that survive request completion
+(DESIGN.md §11).
+
+The acceptance proofs of the cache refactor:
+
+* hash collisions can NEVER alias wrong-content pages — every probe
+  verifies the full token prefix, so a forced-collision hash function
+  (and a hypothesis-driven random trace) still returns only exact-content
+  pages;
+* demote-then-evict is BIT-IDENTICAL in final ``FreeListState`` to plain
+  FREE_ALL — surviving pages re-enter the pool exactly where the legacy
+  release path would have put them;
+* the serving engine with the cache ON produces bit-identical output
+  tokens to the cache-off path while reusing > 50% of admissions on a
+  shared-system-prompt mix, with I5 extended to the cache partition;
+* the eviction simulators (``sim.policies.replay_prefix_trace``) replayed
+  over the live engine's event trace agree with the engine's cache on
+  EVERY counter, per policy — and LRU/2Q/ARC agree with each other on
+  budget-arithmetic grant/evict counts over single-page-chain traces.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, needs_hypothesis, settings, st
+
+import repro.core.paged_kv as pkv
+from repro.alloc.eviction import (EVICTION_POLICIES, ARCEviction,
+                                  EvictionPolicy, LRUEviction, TwoQEviction,
+                                  get_eviction)
+from repro.configs import smoke_config
+from repro.core.freelist import FreelistInvariantError
+from repro.core.paged_kv import CACHE_OWNER, PagedKVConfig, PrefixCache
+from repro.models import init_params, make_paged_config
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import Request, Scheduler, make_scheduler_config
+from repro.sim.policies import replay_prefix_trace
+
+PS = 4
+
+
+def _toks(*ids):
+    return np.asarray(ids, np.int32)
+
+
+def _seq(rng, n):
+    return rng.randint(0, 97, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# PrefixCache core semantics
+# ---------------------------------------------------------------------------
+
+def test_probe_is_page_granular_and_capped():
+    c = PrefixCache(PS, budget_pages=8)
+    toks = _toks(*range(10))                      # 2 full pages + tail
+    kept, skipped, ev = c.insert(toks[:8], [5, 6])
+    assert (kept, skipped, ev) == ([5, 6], [], [])
+    n, blocks = c.probe(toks)
+    assert (n, blocks) == (8, [5, 6])             # any prefix length hits
+    n, blocks = c.probe(toks[:6])
+    assert (n, blocks) == (4, [5])                # partial: first page only
+    # exact page multiple: at least one suffix token must prefill (the
+    # admission seed comes from the suffix's last logits)
+    n, blocks = c.probe(toks[:8])
+    assert (n, blocks) == (4, [5])
+    # divergent token kills the walk at its page
+    bad = toks.copy()
+    bad[5] = 96
+    n, blocks = c.probe(bad)
+    assert (n, blocks) == (4, [5])
+
+
+def test_duplicate_insert_skips_and_touches():
+    c = PrefixCache(PS, budget_pages=8)
+    toks = _toks(*range(8))
+    c.insert(toks, [1, 2])
+    kept, skipped, ev = c.insert(toks, [7, 8])    # same content, new blocks
+    assert kept == [] and skipped == [7, 8] and ev == []
+    assert c.dup_skips == 2
+    assert c.probe(_toks(*range(9)))[1] == [1, 2]  # originals still serve
+
+
+def test_collision_never_aliases_wrong_content():
+    """A constant hash puts EVERY page in one chain; exact-token
+    verification must still refuse wrong-content lookups."""
+    c = PrefixCache(PS, budget_pages=8, hash_fn=lambda prev, page: 7)
+    a, b = _toks(0, 1, 2, 3), _toks(9, 8, 7, 6)
+    c.insert(a, [0])
+    c.insert(b, [1])
+    assert c.probe(_toks(0, 1, 2, 3, 4))[1] == [0]
+    assert c.probe(_toks(9, 8, 7, 6, 5))[1] == [1]
+    assert c.probe(_toks(5, 5, 5, 5, 5)) == (0, [])
+
+
+@needs_hypothesis
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_hypothesis_collision_trace_never_aliases(data):
+    """Random insert/probe traces under a pathologically colliding hash:
+    every page a probe returns must belong to an entry whose tokens are
+    EXACTLY the probe's prefix — checked against an independent dict
+    model, so admission can never alias wrong-content pages."""
+    hash_mod = data.draw(st.integers(min_value=1, max_value=3))
+    c = PrefixCache(PS, budget_pages=64,
+                    hash_fn=lambda prev, page, m=hash_mod: int(page[0]) % m)
+    model: dict[bytes, int] = {}                  # pkey -> block (the truth)
+    next_block = 0
+    for _ in range(data.draw(st.integers(min_value=5, max_value=25))):
+        toks = np.asarray(
+            data.draw(st.lists(st.integers(min_value=0, max_value=5),
+                               min_size=1, max_size=3 * PS)), np.int32)
+        if data.draw(st.booleans()):
+            n = len(toks) // PS
+            blocks = list(range(next_block, next_block + n))
+            next_block += n
+            kept, _, _ = c.insert(toks[: n * PS], blocks)
+            for b in kept:
+                i = blocks.index(b)
+                model[toks[: (i + 1) * PS].tobytes()] = b
+        else:
+            n, blocks = c.probe(toks)
+            assert n == len(blocks) * PS
+            for i, b in enumerate(blocks):
+                pkey = toks[: (i + 1) * PS].tobytes()
+                assert model.get(pkey) == b, \
+                    "probe returned a page whose content is not this prefix"
+
+
+def test_budget_eviction_cascades_to_descendants():
+    c = PrefixCache(PS, budget_pages=2, policy=LRUEviction())
+    a = _toks(*range(8))                          # 2-page chain
+    c.insert(a, [0, 1])
+    kept, skipped, ev = c.insert(_toks(9, 9, 9, 9), [2])
+    # evicting a's root cascades to its descendant: both pages leave
+    assert kept == [2] and sorted(ev) == [0, 1]
+    assert c.probe(_toks(*range(9))) == (0, [])   # unreachable chain is gone
+    assert c.pages == 1
+
+
+def test_orphan_chain_insert_is_skipped():
+    """If the budget eviction removes the ancestor a mid-insert chain
+    extends, the whole insert is skipped (an unreachable entry would leak
+    its page forever)."""
+    c = PrefixCache(PS, budget_pages=1, policy=LRUEviction())
+    c.insert(_toks(0, 1, 2, 3), [0])
+    long = _toks(0, 1, 2, 3, 4, 5, 6, 7)
+    # page 0 dedups (already cached); page 1 alone would extend the chain,
+    # but budget=1 forces the ancestor out first -> orphan guard skips
+    kept, skipped, ev = c.insert(long, [0, 1])
+    assert kept == [] and 1 in skipped
+    assert c.probe(_toks(0, 1, 2, 3, 4)) == (0, []) or c.pages <= 1
+
+
+# ---------------------------------------------------------------------------
+# eviction-policy menu
+# ---------------------------------------------------------------------------
+
+def test_eviction_registry_and_env(monkeypatch):
+    assert EVICTION_POLICIES == ("lru", "2q", "arc")
+    assert isinstance(get_eviction("lru"), LRUEviction)
+    assert isinstance(get_eviction("2q"), TwoQEviction)
+    assert isinstance(get_eviction("arc"), ARCEviction)
+    for name in EVICTION_POLICIES:
+        assert isinstance(get_eviction(name), EvictionPolicy)
+    monkeypatch.setenv("REPRO_KV_EVICTION", "arc")
+    assert isinstance(get_eviction(None), ARCEviction)
+    monkeypatch.delenv("REPRO_KV_EVICTION")
+    assert isinstance(get_eviction(None), LRUEviction)
+    with pytest.raises(ValueError, match="unknown eviction"):
+        get_eviction("clock")
+
+
+def test_lru_victim_order():
+    p = LRUEviction()
+    for k in (b"a", b"b", b"c"):
+        p.on_insert(k)
+    p.on_hit(b"a")                                # refresh a
+    assert p.victim() == b"b"
+    assert p.victim() == b"c"
+    assert p.victim() == b"a"
+    assert p.victim() is None
+
+
+def test_2q_hot_keys_survive_scan():
+    p = TwoQEviction(in_frac=0.25)
+    p.on_insert(b"hot")
+    p.on_hit(b"hot")                              # A1in -> Am (proven hot)
+    for i in range(8):                            # one-touch scan traffic
+        p.on_insert(str(i).encode())
+    for _ in range(8):                            # drain the scan
+        v = p.victim()
+        assert v != b"hot"
+    assert len(p) == 1                            # hot entry survived
+
+
+def test_arc_ghost_hit_adapts():
+    p = ARCEviction()
+    p.on_insert(b"x")
+    p.on_insert(b"y")
+    assert p.victim() == b"x"                     # T1 FIFO side
+    p.on_insert(b"x")                             # B1 ghost hit -> T2, p grows
+    assert p.p > 0
+    # T1 is now within its grown target p, so the victim comes from T2
+    assert p.victim() == b"x"
+    assert p.victim() == b"y"
+    assert p.victim() is None
+
+
+def test_policies_agree_on_budget_arithmetic_counts():
+    """Satellite proof: over a single-page-chain trace (no cascades), every
+    policy performs the SAME number of inserts and evictions — eviction
+    counts are budget arithmetic; only victim IDENTITY is policy."""
+    rng = np.random.RandomState(3)
+    trace = []
+    for i in range(30):
+        toks = tuple(int(t) for t in
+                     np.concatenate([[i], _seq(rng, PS + 1)]))  # distinct pages
+        trace.append(("insert", toks, 1))
+        if i % 4 == 0:
+            trace.append(("probe", tuple(_seq(rng, PS + 2))))   # cold probes
+    budget = 8
+    res = {name: replay_prefix_trace(trace, name, budget, PS)
+           for name in EVICTION_POLICIES}
+    base = res["lru"]
+    assert base["inserts"] == 30
+    assert base["evictions"] == 30 - budget
+    for name in ("2q", "arc"):
+        assert res[name]["inserts"] == base["inserts"]
+        assert res[name]["evictions"] == base["evictions"]
+        assert res[name]["hits"] == base["hits"]
+        assert res[name]["misses"] == base["misses"]
+        assert res[name]["pages"] == budget
+
+
+# ---------------------------------------------------------------------------
+# demote-then-evict == FREE_ALL, bit for bit (satellite: release-path proof)
+# ---------------------------------------------------------------------------
+
+def _mini_cfg():
+    # kv tenant only (no recurrent state, no scratch), stash off, seq_len a
+    # page multiple so EVERY lane page is full and demotable
+    return PagedKVConfig(num_kv_layers=1, kv_heads=1, head_dim=2, page_size=PS,
+                         num_pages=16, max_lanes=2, max_pages_per_lane=4,
+                         dtype=jnp.float32, stash_size=0)
+
+
+def _admit(cfg, tenants, rng, lanes=(0, 1), T=8):
+    st = pkv.init_paged_kv(cfg, tenants=tenants)
+    B = len(lanes)
+    ks = jnp.asarray(rng.randn(B, 1, T, 1, 2).astype(np.float32))
+    st, stats = pkv.admit_prefill_many(
+        cfg, st, jnp.asarray(lanes, jnp.int32), ks, ks,
+        jnp.full((B,), T, jnp.int32), tenants=tenants)
+    assert int(stats.failed) == 0
+    return st
+
+
+def test_demote_then_evict_bit_identical_to_free_all(rng):
+    cfg = _mini_cfg()
+
+    # path A: plain FREE_ALL release
+    ta = pkv.paged_tenants(cfg)
+    sa = _admit(cfg, ta, np.random.RandomState(0))
+    pkts = np.full((cfg.max_lanes,), -1, np.int32)
+    pkts[:2] = [0, 1]
+    sa, _ = pkv.release_packets(cfg, sa, jnp.asarray(pkts), tenants=ta)
+
+    # path B: demote both lanes' pages, FREE_ALL (skips them), then evict
+    # everything back out through single OP_FREEs
+    tb = pkv.paged_tenants(cfg)
+    sb = _admit(cfg, tb, np.random.RandomState(0))
+    cache = PrefixCache(PS, budget_pages=8, policy=LRUEviction())
+    tbl = np.asarray(sb.block_tables)
+    toks0, toks1 = _seq(rng, 8), _seq(rng, 8)
+    kept = []
+    for lane, toks in ((0, toks0), (1, toks1)):
+        k, s, e = cache.insert(toks, tbl[lane, :2])
+        kept += k
+        assert s == [] and e == []
+    sb = sb._replace(alloc=tb.service.retag_blocks(
+        sb.alloc, tb.kv, np.asarray(kept, np.int32), CACHE_OWNER))
+    sb, _ = pkv.release_packets(cfg, sb, jnp.asarray(pkts), tenants=tb)
+    pkv.validate_paged_kv(cfg, sb, tenants=tb, cache=cache)  # I5 + cache
+    assert cache.pages == 4 and int(sb.alloc.used[0]) == 4   # still charged
+    evicted = cache.evict_pages(cache.pages)
+    empty = np.full((cfg.max_lanes,), -1, np.int32)
+    sb, _ = pkv.release_packets(cfg, sb, jnp.asarray(empty), tenants=tb,
+                               extra_free=evicted)
+
+    # final FreeListState: BIT-identical, field for field
+    for field in sa.alloc._fields:
+        a, b = getattr(sa.alloc, field), getattr(sb.alloc, field)
+        assert np.array_equal(np.asarray(a), np.asarray(b)), \
+            f"FreeListState.{field} diverged: {a} vs {b}"
+    pkv.validate_paged_kv(cfg, sb, tenants=tb, cache=cache)
+
+
+def test_clear_released_lanes_without_page_release():
+    """``clear_released_lanes`` is a pure metadata clear: block tables /
+    seq_lens / active rows reset while the allocator state is untouched —
+    the demotion path depends on this split (pages stay owner-mapped until
+    the window's FREE_ALL, or forever when retagged to the cache)."""
+    cfg = _mini_cfg()
+    t = pkv.paged_tenants(cfg)
+    st = _admit(cfg, t, np.random.RandomState(0))
+    before = st.alloc
+    mask = np.zeros((cfg.max_lanes,), bool)
+    mask[0] = True
+    st2 = pkv.clear_released_lanes(st, jnp.asarray(mask))
+    assert st2.alloc is before                     # allocator untouched
+    assert int(st2.seq_lens[0]) == 0 and not bool(st2.active[0])
+    assert (np.asarray(st2.block_tables[0]) == -1).all()
+    assert int(st2.seq_lens[1]) == 8               # other lane untouched
+    # I5 now fails loudly: lane 0's pages are owner-mapped but unreachable
+    with pytest.raises(FreelistInvariantError):
+        pkv.validate_paged_kv(cfg, st2, tenants=t)
+
+
+def test_i5_catches_leaked_demotion():
+    """A page retagged to CACHE_OWNER that the cache does NOT list is a
+    leak — the extended I5 partition must refuse it."""
+    cfg = _mini_cfg()
+    t = pkv.paged_tenants(cfg)
+    st = _admit(cfg, t, np.random.RandomState(0))
+    blk = int(np.asarray(st.block_tables)[0, 0])
+    st = st._replace(alloc=t.service.retag_blocks(
+        st.alloc, t.kv, np.asarray([blk], np.int32), CACHE_OWNER))
+    empty_cache = PrefixCache(PS, budget_pages=8)
+    with pytest.raises(FreelistInvariantError):
+        pkv.validate_paged_kv(cfg, st, tenants=t, cache=empty_cache)
+
+
+# ---------------------------------------------------------------------------
+# serving engine: prefill skip is exact, and the sim replay matches
+# ---------------------------------------------------------------------------
+
+ARCH = "deepseek-7b"
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config(ARCH)
+    params = init_params(cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _shared_prefix_requests(cfg, n=6, prefix_len=40, tail=6):
+    rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size, size=prefix_len).astype(np.int32)
+    return [Request(rid=rid, tokens=np.concatenate(
+                [shared, np.random.RandomState(100 + rid).randint(
+                    0, cfg.vocab_size, size=tail).astype(np.int32)]))
+            for rid in range(n)]
+
+
+def _serve(cfg, params, prefix_cache, eviction=None, n=6, max_new=6):
+    from repro.launch.serve import serve_loop
+    kvcfg = make_paged_config(cfg, seq_len=128, lanes=2, page_size=8,
+                              dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
+    eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32, sched_cfg=scfg,
+                        prefix_cache=prefix_cache, eviction=eviction)
+    sched = Scheduler(scfg)
+    serve_loop(eng, sched, _shared_prefix_requests(cfg, n=n), max_new,
+               verbose=False)
+    assert not sched.waiting and not sched.failed
+    return eng, {r.rid: list(r.output) for r in sched.finished}
+
+
+def test_shared_prefix_serving_exact_and_replayable(dense):
+    cfg, params = dense
+    eng_off, outs_off = _serve(cfg, params, prefix_cache=False)
+    eng_on, outs_on = _serve(cfg, params, prefix_cache=True, eviction="lru")
+    s = eng_on.stats
+
+    # cache-off path is the legacy path, cache-on must not move one token
+    assert outs_on == outs_off
+    assert eng_off.cache is None and s.cache_hit_rate > 0.5
+    assert s.prefill_tokens_saved > 0
+    assert s.cache_pages == s.cache_inserts - s.cache_evictions
+
+    # I5 extended through the cache partition holds at end of serve
+    pkv.validate_paged_kv(eng_on.kvcfg, eng_on.state.paged,
+                          tenants=eng_on.tenants, cache=eng_on.cache)
+
+    # the eviction simulator replaying the engine's logical trace agrees
+    # with the live cache on every counter
+    rep = replay_prefix_trace(eng_on.cache.trace, "lru",
+                              eng_on.cache.budget, eng_on.kvcfg.page_size)
+    assert rep == {"hits": s.cache_hits, "misses": s.cache_misses,
+                   "inserts": s.cache_inserts, "evictions": s.cache_evictions,
+                   "dup_skips": eng_on.cache.dup_skips,
+                   "pages": s.cache_pages}
+
+
+@pytest.mark.parametrize("eviction", ["2q", "arc"])
+def test_engine_replay_parity_all_policies(dense, eviction):
+    """Each eviction policy's replay must match ITS engine run exactly
+    (lru is covered by the test above)."""
+    cfg, params = dense
+    eng, _ = _serve(cfg, params, prefix_cache=True, eviction=eviction, n=4)
+    c = eng.cache
+    rep = replay_prefix_trace(c.trace, eviction, c.budget,
+                              eng.kvcfg.page_size)
+    assert rep == {"hits": c.hits, "misses": c.misses, "inserts": c.inserts,
+                   "evictions": c.evictions, "dup_skips": c.dup_skips,
+                   "pages": c.pages}
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_DEEP_FUZZ"),
+                    reason="nightly deep-fuzz only (REPRO_DEEP_FUZZ=1)")
+def test_deep_fuzz_shared_prefix_churn(dense):
+    """Nightly: a longer shared-prefix churn under every eviction policy —
+    outputs stay bit-identical to cache-off and every replay stays exact."""
+    cfg, params = dense
+    _, outs_off = _serve(cfg, params, prefix_cache=False, n=10, max_new=8)
+    for eviction in EVICTION_POLICIES:
+        eng, outs = _serve(cfg, params, prefix_cache=True, eviction=eviction,
+                           n=10, max_new=8)
+        assert outs == outs_off, eviction
+        c = eng.cache
+        rep = replay_prefix_trace(c.trace, eviction, c.budget,
+                                  eng.kvcfg.page_size)
+        assert rep["hits"] == c.hits and rep["evictions"] == c.evictions
+        pkv.validate_paged_kv(eng.kvcfg, eng.state.paged,
+                              tenants=eng.tenants, cache=eng.cache)
