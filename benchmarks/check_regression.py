@@ -16,7 +16,15 @@ when any gated metric regresses:
 * ``cache_hit_rate`` — the prefix cache's admission hit rate on the
   shared-system-prompt scenario: fail on an absolute drop beyond 0.02;
 * ``prefill_tokens_saved`` — prompt tokens the prefix cache kept out of
-  prefill in that scenario: fail on a drop of more than 15%.
+  prefill in that scenario: fail on a drop of more than 15%;
+* ``cache_hit_copy_bytes`` — prefix K/V bytes gather-copied on cache hits
+  in alias mode: the zero-copy claim is exact, so ANY growth above the
+  baseline's 0 fails (a byte moved means a hit fell off the aliasing
+  path);
+* ``hit_admit_speedup`` — hit-admission latency ratio, gather-copy over
+  alias splice: fail on a relative drop beyond 40% (it is wall-clock, so
+  the tolerance is generous; a real regression — alias admissions doing
+  hidden copies — collapses it to ~1x).
 
 A gated key MISSING from the committed baseline (a freshly introduced
 metric whose baseline predates it) is a loud warning, not a failure —
@@ -60,6 +68,8 @@ GATES = (
     ("hmq_bursts_per_1k_decode_steps", "abs_grow", 25.0),
     ("cache_hit_rate", "abs_drop", 0.02),
     ("prefill_tokens_saved", "rel_drop", 0.15),
+    ("cache_hit_copy_bytes", "abs_grow", 0.0),
+    ("hit_admit_speedup", "rel_drop", 0.40),
 )
 
 

@@ -63,10 +63,12 @@ def _bench_support_core_step(backends=None, iters: int = 8) -> dict:
     the cross-PR trajectory never silently mixes interpreter and compiled
     timings.
     """
+    from repro.alloc import AllocService
     from repro.core.freelist import init_freelist
     from repro.core.packets import (FREE_ALL, OP_FREE, OP_MALLOC, OP_REFILL,
                                     RequestQueue)
-    from repro.core.support_core import support_core_step
+
+    support_core_step = AllocService().step
 
     if backends is None:
         kernel = "kernel" if jax.default_backend() == "tpu" \
@@ -179,12 +181,19 @@ def _run_multi(cfg, params, n_engines: int = 2, quantum: int = 4) -> dict:
 
 
 def _run_prefix_cache(cfg, params) -> dict:
-    """Shared-system-prompt scenario (DESIGN.md §11): 8 requests carrying
+    """Shared-system-prompt scenario (DESIGN.md §11–12): 8 requests carrying
     one 40-token shared prefix + unique tails through 2 lanes, with the
     prefix cache on — every completion demotes its full KV pages, every
-    later admission hits them and prefills only its tail.  A cache-off run
-    over the SAME requests checks the output tokens are bit-identical
-    (prefill skip is exact reuse, never an approximation)."""
+    later admission hits them and prefills only its tail.  Runs THREE ways
+    over the SAME requests: cache off, cache on with gather-copy hit
+    installs, and cache on with zero-copy page aliasing (refcounted
+    splices, §12).  All three must be bit-identical (prefill skip and
+    aliasing are exact reuse, never an approximation); the copy-vs-alias
+    pair is the differential the regression gate watches — alias must move
+    ZERO prefix K/V bytes and admit hits faster than the gather-copy path.
+
+    Needs a full-attention ``cfg``: windowed archs degrade alias to copy
+    (pages are rewritten in place under SWA, DESIGN.md §12)."""
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=2, page_size=8,
                               dtype=jnp.float32, **STASH)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
@@ -200,19 +209,21 @@ def _run_prefix_cache(cfg, params) -> dict:
 
     outs = {}
     res = {}
-    for mode in ("off", "on"):
+    for mode in ("off", "copy", "alias"):
         eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32,
-                            sched_cfg=scfg, prefix_cache=mode == "on")
+                            sched_cfg=scfg, prefix_cache=mode != "off",
+                            prefix_alias=mode if mode != "off" else None)
         sched = Scheduler(scfg)
         t0 = time.perf_counter()
         serve_loop(eng, sched, mkreqs(), max_new_tokens=6, verbose=False)
         wall = time.perf_counter() - t0
         outs[mode] = {r.rid: list(r.output) for r in sched.finished}
         res[mode] = (eng, wall)
-    eng, wall = res["on"]
+    eng, wall = res["alias"]
     s = eng.stats
+    sc = res["copy"][0].stats
     return {
-        "requests": len(outs["on"]),
+        "requests": len(outs["alias"]),
         "shared_prefix_tokens": 40,
         "cache_hit_rate": s.cache_hit_rate,
         "prefill_tokens_saved": s.prefill_tokens_saved,
@@ -225,7 +236,16 @@ def _run_prefix_cache(cfg, params) -> dict:
         "prefill_compiles_cache_off": res["off"][0].stats.prefill_compiles,
         "wall_s": wall,
         "wall_s_cache_off": res["off"][1],
-        "outputs_bit_identical": outs["on"] == outs["off"],
+        "wall_s_copy": res["copy"][1],
+        "outputs_bit_identical": outs["alias"] == outs["copy"] == outs["off"],
+        # --- zero-copy aliasing differential (DESIGN.md §12) ---
+        "aliased_pages": s.aliased_pages,
+        "cache_hit_copy_bytes": s.cache_hit_copy_bytes,
+        "cache_hit_copy_bytes_copy_mode": sc.cache_hit_copy_bytes,
+        "hit_admit_us_alias": s.hit_admit_us,
+        "hit_admit_us_copy": sc.hit_admit_us,
+        "hit_admit_speedup": (sc.hit_admit_us / s.hit_admit_us
+                              if s.hit_admit_us else 0.0),
     }
 
 
@@ -297,10 +317,13 @@ def run() -> list[str]:
     # preemption (DESIGN.md §10) — reuses the mixtral params already built.
     multi = _run_multi(cfg, params, n_engines=2)
 
-    # Prefix cache (DESIGN.md §11): shared-system-prompt churn with
-    # demote-on-completion + prefill-skip admission, checked bit-identical
-    # against the cache-off path.
-    pc = _run_prefix_cache(cfg, params)
+    # Prefix cache (DESIGN.md §11–12): shared-system-prompt churn with
+    # demote-on-completion + prefill-skip admission, off/copy/alias checked
+    # bit-identical.  Needs a full-attention arch — mixtral is SWA, where
+    # alias mode degrades to copy by design.
+    cfg_full = smoke_config("deepseek-7b")
+    params_full = init_params(cfg_full, dtype=jnp.float32)
+    pc = _run_prefix_cache(cfg_full, params_full)
 
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
@@ -340,6 +363,10 @@ def run() -> list[str]:
         # --- prefix cache: prefill skip via surviving KV pages (§11) ---
         "cache_hit_rate": pc["cache_hit_rate"],
         "prefill_tokens_saved": pc["prefill_tokens_saved"],
+        # --- zero-copy hit installs: refcounted page aliasing (§12) ---
+        "cache_hit_copy_bytes": pc["cache_hit_copy_bytes"],
+        "aliased_pages": pc["aliased_pages"],
+        "hit_admit_speedup": pc["hit_admit_speedup"],
         "prefix_cache": pc,
         # --- admission path ---
         "hmq_admit_bursts": s.hmq_admit_bursts,
@@ -388,4 +415,11 @@ def run() -> list[str]:
                 f"compiles={pc['prefill_compiles']} "
                 f"(off: {pc['prefill_compiles_cache_off']}) "
                 f"bit_identical={pc['outputs_bit_identical']}"),
+        csv_row("serving/prefix_alias", pc["aliased_pages"],
+                f"pages spliced zero-copy, hit_copy_bytes="
+                f"{pc['cache_hit_copy_bytes']} "
+                f"(copy mode: {pc['cache_hit_copy_bytes_copy_mode']}) "
+                f"hit_admit={pc['hit_admit_us_alias']:.0f}us "
+                f"vs copy {pc['hit_admit_us_copy']:.0f}us "
+                f"({pc['hit_admit_speedup']:.2f}x)"),
     ]

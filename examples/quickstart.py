@@ -132,3 +132,31 @@ assert chat.stats.cache_hits == 3 and chat.stats.prefill_tokens_saved > 0
 print(f"  prompt tokens prefilled across the chat: "
       f"{prompt_total - chat.stats.prefill_tokens_saved} of {prompt_total} "
       f"(cache off prefills all {prompt_total})")
+
+# zero-copy hits (DESIGN.md §12): with prefix_alias="alias", a hit SPLICES
+# the cache-owned pages into the lane's block table under a refcount bump
+# instead of gather-copying the prefix K/V into fresh pages.  Needs full
+# attention — mixtral above is SWA, where alias degrades to the copy path
+# (chat.alias_enabled would be False) — so run it on a tiny dense arch.
+cfg_d = smoke_config("deepseek-7b")
+params_d = init_params(cfg_d, dtype=jnp.float32)
+kvcfg_d = make_paged_config(cfg_d, seq_len=128, lanes=2, page_size=8,
+                            dtype=jnp.float32)
+scfg_d = make_scheduler_config(cfg_d, kvcfg_d, max_prompt_len=96)
+zc = ServingEngine(cfg_d, kvcfg_d, params_d, dtype=jnp.float32,
+                   sched_cfg=scfg_d, prefix_cache=True, prefix_alias="alias")
+rng_d = np.random.RandomState(11)
+system = rng_d.randint(0, cfg_d.vocab_size, 32).astype(np.int32)
+reqs = [Request(rid=i, tokens=np.concatenate(
+            [system, rng_d.randint(0, cfg_d.vocab_size, 6).astype(np.int32)]))
+        for i in range(4)]
+sched = Scheduler(scfg_d)
+serve_loop(zc, sched, reqs, max_new_tokens=4, verbose=False)
+s = zc.stats
+print(f"\nzero-copy aliasing (prefix_alias=alias, dense arch): "
+      f"{len(sched.finished)} reqs, cache_hits={s.cache_hits}")
+print(f"  aliased_pages={s.aliased_pages} spliced by reference, "
+      f"cache_hit_copy_bytes={s.cache_hit_copy_bytes} "
+      f"(copy mode would gather-copy every cached page)")
+assert s.aliased_pages > 0 and s.cache_hit_copy_bytes == 0
+assert zc.cache.pinned == 0      # every splice was released with its lane

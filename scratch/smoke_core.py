@@ -4,7 +4,8 @@ import jax, jax.numpy as jnp
 import numpy as np
 from repro.core.freelist import init_freelist, validate_freelist
 from repro.core.packets import make_queue, OP_MALLOC, OP_FREE, FREE_ALL, NO_BLOCK
-from repro.core.support_core import support_core_step
+from repro.alloc import AllocService
+support_core_step = AllocService().step
 from repro.core.hmq import schedule, round_robin_rank
 
 # --- negative-index drop check ---

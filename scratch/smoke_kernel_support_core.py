@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 from repro.core.freelist import FreeListState, init_freelist
 from repro.core.packets import FREE_ALL, OP_FREE, OP_MALLOC, OP_NOP, OP_REFILL, make_queue
-from repro.core.support_core import support_core_step
+from repro.alloc import AllocService
+support_core_step = AllocService().step
 
 rng = np.random.RandomState(2)
 for (C, cap_hi, R, steps) in [(2, 8, 3, 4), (4, 32, 8, 3), (1, 4, 2, 6)]:

@@ -32,10 +32,11 @@ Policies must preserve the shared burst contract::
     step_scheduled(state, sched, max_blocks_per_req, backend)
         -> (new_state, blocks [Q, R], ok [Q])      # in SCHEDULED order
 
-with the :class:`~repro.core.freelist.FreeListState` invariants I1–I4 intact
-after every step, identical grant/fail sets for identical availability, and
-the deferred-free semantics of §5.2 (this step's frees serve next step's
-mallocs).  ``REPRO_ALLOC_POLICY`` selects the process default
+with the :class:`~repro.core.freelist.FreeListState` invariants I1–I4 (and
+the I6 refcount conservation, DESIGN.md §12) intact after every step,
+identical grant/fail sets for identical availability, and the deferred-free
+semantics of §5.2 (this step's frees serve next step's mallocs).  Frees are
+refcount decrements: a block returns to the free set only at refcount 0.  ``REPRO_ALLOC_POLICY`` selects the process default
 (:mod:`repro.perf_flags`).
 """
 from __future__ import annotations
@@ -47,7 +48,7 @@ import jax.numpy as jnp
 from ..core.freelist import FreeListState, init_freelist
 from ..core.packets import (NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
                             RequestQueue)
-from ..core.support_core import deferred_free_mask, grant_scan
+from ..core.support_core import deferred_free_counts, grant_scan
 
 #: Valid values for the ``policy`` argument / ``REPRO_ALLOC_POLICY`` knob.
 ALLOC_POLICIES = ("freelist", "bitmap")
@@ -172,21 +173,29 @@ class BitmapPolicy:
 
         flat_cls = jnp.broadcast_to(cls[:, None], (Q, R)).reshape(-1)
         flat_take = take.reshape(-1)
-        owner = state.owner.at[
-            jnp.where(flat_take, flat_cls, C),
-            jnp.where(flat_take, blocks.reshape(-1), N)].set(
+        upd_idx_c = jnp.where(flat_take, flat_cls, C)
+        upd_idx_b = jnp.where(flat_take, blocks.reshape(-1), N)
+        owner = state.owner.at[upd_idx_c, upd_idx_b].set(
             jnp.broadcast_to(sched.lane[:, None], (Q, R)).reshape(-1),
             mode="drop")
+        refcount = state.refcount.at[upd_idx_c, upd_idx_b].set(
+            1, mode="drop")
 
         taken_per_class = jnp.sum(granted[:, None] * onehot, axis=0)
         top_after_alloc = state.free_top - taken_per_class
         used_after_alloc = state.used + taken_per_class
         peak = jnp.maximum(state.peak_used, used_after_alloc)
 
-        # ---- free phase: the SHARED deferred free mask ----
-        free_mask = deferred_free_mask(sched, owner, cls, onehot, is_free)
-        freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
-        owner = jnp.where(free_mask, -1, owner)
+        # ---- free phase: the SHARED deferred free counts, refcount-gated
+        # (DESIGN.md §12).  Each matched free decrements; the owner bit —
+        # and with it membership in the rebuilt free bitmap — only clears at
+        # refcount 0, so shared (aliased) pages survive any one release.
+        free_cnt = deferred_free_counts(sched, owner, cls, onehot, is_free)
+        dec = refcount - free_cnt
+        ret_mask = (free_cnt > 0) & (dec <= 0)
+        refcount = jnp.maximum(dec, 0)
+        freed_per_class = jnp.sum(ret_mask, axis=1).astype(jnp.int32)
+        owner = jnp.where(ret_mask, -1, owner)
 
         # ---- rebuild the stack ascending from the post-free bitmap ----
         final_free = (owner < 0) & real
@@ -201,6 +210,7 @@ class BitmapPolicy:
             free_stack=new_stack,
             free_top=top_after_alloc + freed_per_class,
             owner=owner,
+            refcount=refcount,
             capacity=state.capacity,
             alloc_count=state.alloc_count + taken_per_class,
             free_count=state.free_count + freed_per_class,

@@ -400,6 +400,32 @@ class AllocService:
             jnp.int32(new_owner), mode="drop")
         return state._replace(owner=owner)
 
+    def bump_refcounts(
+        self,
+        state: FreeListState,
+        tenant: TenantHandle,
+        blocks,
+        delta: int = 1,
+    ) -> FreeListState:
+        """Control-plane refcount adjustment of live blocks (no HMQ traffic).
+
+        The aliasing primitive behind zero-copy prefix-cache hits
+        (DESIGN.md §12): splicing a cache-owned page into a lane's block
+        table bumps ``refcount[class, block]`` by one per new reference, so
+        the page only returns to the central stack once EVERY referencing
+        lane's OP_FREE decrement and the cache's own release have landed.
+        Duplicate ids in ``blocks`` accumulate (``delta`` each).  Owner map,
+        counters, and ``used`` are untouched — an aliased page is one
+        physical page, charged once.  Host-side metadata op; never touches
+        page payloads.
+        """
+        blocks = jnp.asarray(blocks, jnp.int32)
+        if blocks.size == 0:
+            return state
+        refcount = state.refcount.at[tenant.size_class, blocks].add(
+            jnp.int32(delta), mode="drop")
+        return state._replace(refcount=refcount)
+
     def commit(
         self,
         state: FreeListState,
@@ -421,9 +447,9 @@ class AllocService:
         if self._tenants and state.num_classes != self.num_classes:
             # Tenant-table growth after init_state (or a state from another
             # service) would silently mis-route classes; fail loudly instead.
-            # (A tenant-LESS service is the legacy raw-queue bridge — the
-            # deprecated ``support_core_step`` wrapper — whose callers own
-            # their class layout; it stays unguarded.)
+            # (A tenant-LESS service is the legacy raw-queue bridge
+            # (``AllocService.step``) whose callers own their class layout;
+            # it stays unguarded.)
             raise ValueError(
                 f"allocator state carries {state.num_classes} size classes "
                 f"but this service has {self.num_classes} registered tenants "
@@ -517,7 +543,8 @@ class AllocService:
              policy: Optional[str] = None,
              ) -> tuple[FreeListState, ResponseQueue, BurstStats]:
         """One raw-queue burst in the historical ``support_core_step``
-        return shape (the deprecated wrapper delegates here)."""
+        return shape (the raw-queue bridge; that wrapper is gone — tests
+        and benchmarks that drive hand-built queues call this instead)."""
         new_state, res = self.commit(state, queue,
                                      max_blocks_per_req=max_blocks_per_req,
                                      backend=backend, policy=policy)

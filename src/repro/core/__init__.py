@@ -6,9 +6,9 @@
 - :mod:`repro.core.support_core` -- centralized batched allocator step (§3-5)
 - :mod:`repro.core.paged_kv`     -- paged KV cache on the support-core (DESIGN §2)
 
-Clients should talk to the support-core through :mod:`repro.alloc` (the
-AllocService / BurstBuilder / tenant API — DESIGN.md §9); the raw
-``support_core_step`` entry point here is a deprecated thin wrapper over it.
+Clients talk to the support-core through :mod:`repro.alloc` (the
+AllocService / BurstBuilder / tenant API — DESIGN.md §9); raw-queue callers
+use ``AllocService.step``.
 """
 from .freelist import (FreeListState, FreelistInvariantError, init_freelist,
                        num_free, validate_freelist)
@@ -26,7 +26,7 @@ from .paged_kv import (KV_CLASS, KV_TENANT, SCRATCH_TENANT, STATE_CLASS,
                        num_alloc_classes, paged_service, release_lanes,
                        release_packets, stash_depth_histogram,
                        validate_paged_kv)
-from .support_core import ALLOC_BACKENDS, StepStats, support_core_step
+from .support_core import ALLOC_BACKENDS, StepStats
 
 __all__ = [
     "FreeListState", "FreelistInvariantError", "init_freelist", "num_free",
@@ -44,5 +44,5 @@ __all__ = [
     "live_pages", "num_alloc_classes", "paged_service",
     "release_lanes", "release_packets",
     "stash_depth_histogram", "validate_paged_kv",
-    "ALLOC_BACKENDS", "StepStats", "support_core_step",
+    "ALLOC_BACKENDS", "StepStats",
 ]

@@ -39,6 +39,9 @@ class FreeListState(NamedTuple):
     free_stack: jnp.ndarray   # [C, N] int32 — stack of free block ids; valid in [0, free_top)
     free_top: jnp.ndarray     # [C]    int32 — stack pointer (== number of free blocks)
     owner: jnp.ndarray        # [C, N] int32 — owning lane per block, -1 if free
+    refcount: jnp.ndarray     # [C, N] int32 — references per block (0 == free); a
+    #                           fresh malloc sets 1, OP_FREE/FREE_ALL decrement, and
+    #                           a block only returns to the stack at 0 (DESIGN.md §12)
     capacity: jnp.ndarray     # [C]    int32 — true capacity per class (static content)
     # --- statistics (cheap, segregated with the metadata) ---
     alloc_count: jnp.ndarray  # [C] int32 — total blocks handed out
@@ -75,14 +78,17 @@ class FreeListState(NamedTuple):
         fc = np.asarray(self.free_count)
         xc = np.asarray(self.fail_count)
         owner = np.asarray(self.owner)
+        refc = np.asarray(self.refcount)
         lines = []
         for c in range(self.num_classes):
             name = tenant_names[c] if tenant_names and c < len(tenant_names) \
                 else f"class{c}"
             owned = int((owner[c, :caps[c]] >= 0).sum())
+            aliased = int((refc[c, :caps[c]] > 1).sum())
             lines.append(
                 f"  [{c}] {name}: used {used[c]}/{caps[c]} (quota), "
-                f"free_top={ft[c]} owned={owned} peak={peak[c]} | "
+                f"free_top={ft[c]} owned={owned} aliased={aliased} "
+                f"peak={peak[c]} | "
                 f"allocs={ac[c]} frees={fc[c]} fails={xc[c]}")
         if stash_depth is not None:
             sd = np.asarray(stash_depth)
@@ -109,6 +115,7 @@ def init_freelist(capacities: Sequence[int]) -> FreeListState:
         free_stack=jnp.asarray(stack),
         free_top=jnp.asarray(caps),
         owner=jnp.full((c, n), -1, jnp.int32),
+        refcount=jnp.zeros((c, n), jnp.int32),
         capacity=jnp.asarray(caps),
         alloc_count=zeros,
         free_count=zeros,
@@ -124,7 +131,7 @@ def num_free(state: FreeListState) -> jnp.ndarray:
 
 
 class FreelistInvariantError(AssertionError):
-    """An allocator invariant (I1–I5) failed.
+    """An allocator invariant (I1–I6) failed.
 
     Subclasses ``AssertionError`` for backward compatibility with callers
     that catch the old bare asserts, but carries WHICH invariant failed and
@@ -142,6 +149,7 @@ def validate_freelist(
     tenant_names: Sequence[str] | None = None,
     cache_pages=None,
     cache_owner: int | None = None,
+    refcount_expected=None,
 ) -> None:
     """Host-side invariant check (tests / debugging only; not jittable).
 
@@ -154,6 +162,13 @@ def validate_freelist(
           class is exactly one of {central free stack, some lane's stash,
           in use, prefix cache}; stashed blocks are owner-mapped to their
           stash lane and cached blocks to the cache's synthetic owner.
+          Cache-owned blocks MAY additionally appear in live block tables
+          (copy-on-write aliasing, DESIGN.md §12) — for the partition they
+          count once, as cache members.
+      I6. refcount conservation: a block's refcount is positive iff the
+          block is owned (every class), and — when ``refcount_expected`` is
+          given — equals its block-table in-degree across all lanes plus
+          its cache/stash references, exactly (DESIGN.md §12).
 
     ``stash_pages``/``stash_depth`` are the ``[max_lanes, S]``/``[max_lanes]``
     arrays of :class:`repro.core.lane_stash.LaneStashState`.  ``in_use`` is an
@@ -162,7 +177,11 @@ def validate_freelist(
     (with ``cache_owner``, the demotion owner tag) lists blocks retained by
     the KV prefix cache (DESIGN.md §11) — they extend the partition to four
     ways, and every block owner-mapped to ``cache_owner`` must appear in the
-    list (no leaked demotions).
+    list (no leaked demotions).  ``refcount_expected`` is an optional ``[N]``
+    int array of per-block reference counts independently recomputed by the
+    caller for the stash class (``validate_paged_kv`` sums block-table
+    in-degree + cache + stash membership); the device refcount plane must
+    match it element for element.
 
     Failures raise :class:`FreelistInvariantError` naming the invariant and
     attaching the per-tenant :meth:`FreeListState.debug_summary` (labelled
@@ -181,6 +200,7 @@ def validate_freelist(
     fs = np.asarray(state.free_stack)
     ft = np.asarray(state.free_top)
     owner = np.asarray(state.owner)
+    refc = np.asarray(state.refcount)
     caps = np.asarray(state.capacity)
     used = np.asarray(state.used)
 
@@ -217,6 +237,17 @@ def validate_freelist(
         check(not np.intersect1d(owned, live).size,
               f"I4 (block conservation) violated: {cname(c)} block(s) "
               f"{np.intersect1d(owned, live)[:8].tolist()} both owned and free")
+        ref_owned_mismatch = np.where(
+            (refc[c, :cap] > 0) != (owner[c, :cap] >= 0))[0]
+        check(ref_owned_mismatch.size == 0,
+              f"I6 (refcount conservation) violated: {cname(c)} block(s) "
+              f"{ref_owned_mismatch[:8].tolist()} have refcount "
+              f"{refc[c, ref_owned_mismatch[:8]].tolist()} but owner "
+              f"{owner[c, ref_owned_mismatch[:8]].tolist()} — a block is "
+              f"referenced iff it is owned")
+        check(refc[c, :cap].min(initial=0) >= 0,
+              f"I6 (refcount conservation) violated: negative refcount in "
+              f"{cname(c)}")
 
     if stash_pages is None:
         return
@@ -283,7 +314,10 @@ def validate_freelist(
               f"both cached and stashed")
 
     if in_use is not None:
-        used_ids = np.where(np.asarray(in_use)[:cap])[0]
+        referenced = np.where(np.asarray(in_use)[:cap])[0]
+        # aliasing (DESIGN.md §12): cache-owned blocks may ALSO sit in live
+        # block tables; for the partition they count once, as cache members.
+        used_ids = np.setdiff1d(referenced, cached)
         dup = np.intersect1d(used_ids, stashed)
         check(not dup.size,
               f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} "
@@ -292,12 +326,22 @@ def validate_freelist(
         check(not dup.size,
               f"I5 (stash partition) violated: block(s) {dup[:8].tolist()} "
               f"both free and in use")
-        dup = np.intersect1d(used_ids, cached)
-        check(not dup.size,
-              f"I5 (cache partition) violated: block(s) {dup[:8].tolist()} "
-              f"both cached and in use")
+        bad = used_ids[owner[c, used_ids] < 0] if used_ids.size else used_ids
+        check(bad.size == 0,
+              f"I5 (partition) violated: in-use block(s) {bad[:8].tolist()} "
+              f"of {cname(c)} not owner-mapped")
         check(len(stack_ids) + len(stashed) + len(used_ids) + len(cached)
               == cap,
               f"I5 (partition) violated: stack {len(stack_ids)} + "
               f"stash {len(stashed)} + in-use {len(used_ids)} + cache "
               f"{len(cached)} != capacity {cap} for {cname(c)}")
+
+    if refcount_expected is not None:
+        expected = np.asarray(refcount_expected)[:cap]
+        got = refc[c, :cap]
+        bad = np.where(expected != got)[0]
+        check(bad.size == 0,
+              f"I6 (refcount == in-degree) violated: {cname(c)} block(s) "
+              f"{bad[:8].tolist()} carry refcount "
+              f"{got[bad[:8]].tolist()} but their block-table in-degree + "
+              f"cache/stash references is {expected[bad[:8]].tolist()}")

@@ -50,10 +50,7 @@ from .lane_stash import (LaneStashState, below_watermark, init_stash,
                          stash_clear, stash_pop, stash_push, stash_push_batch,
                          stash_set_rows, validate_stash_params)
 from .packets import NO_BLOCK, NO_LANE
-# support_core_step is re-exported for legacy importers (tests drive raw
-# queues through it); paged_kv itself talks to the support-core only through
-# the AllocService client API.
-from .support_core import StepStats, support_core_step  # noqa: F401
+from .support_core import StepStats  # noqa: F401  (re-export)
 
 KV_CLASS = 0
 STATE_CLASS = 1
@@ -299,6 +296,8 @@ def admit_prefill_many(
     backend: Optional[str] = None,
     policy: Optional[str] = None,
     tenants: Optional[PagedTenants] = None,
+    prefix_blocks: Optional[jnp.ndarray] = None,  # [B, P] int32 cache pages
+    prefix_lens: Optional[jnp.ndarray] = None,    # [B] int32 aliased tokens
 ) -> tuple[PagedKVState, BurstStats]:
     """Admit B prefilled sequences with a single support-core step.
 
@@ -312,17 +311,39 @@ def admit_prefill_many(
     arbiter serves round-0 mallocs in lane order, from the same free pool.
 
     Lanes must be distinct (one request packet per lane).
+
+    Zero-copy prefix aliasing (DESIGN.md §12): when ``prefix_blocks`` /
+    ``prefix_lens`` are given, ``k`` / ``v`` / ``lengths`` describe ONLY
+    the suffix tokens.  Each lane's block-table row is spliced as
+    ``[prefix_blocks[b, :prefix_lens[b] // page_size], fresh suffix pages]``
+    — the cache-owned prefix pages are read in place (their refcounts bump
+    by one per new reference; no K/V bytes move), only suffix pages are
+    malloc'd and scattered, and ``seq_lens`` covers prefix + suffix.
+    ``prefix_lens`` must be page-aligned (the cache only holds full pages)
+    and ``prefix_blocks`` padded with :data:`~repro.core.packets.NO_BLOCK`.
+    Shared pages are read-only by construction: decode appends always land
+    at page index >= the prefix length, in the lane's private tail.
     """
     B, L, T = k.shape[:3]
     ps = cfg.page_size
     max_pages = (T + ps - 1) // ps
     lanes = lanes.astype(jnp.int32)
     n_pages = (lengths.astype(jnp.int32) + ps - 1) // ps                # [B]
+    if prefix_blocks is not None:
+        prefix_blocks = jnp.asarray(prefix_blocks, jnp.int32)
+        if prefix_blocks.shape[1] == 0:          # no lane aliases anything
+            prefix_blocks = None
+    if prefix_blocks is None:
+        n_prefix = jnp.zeros((B,), jnp.int32)
+        prefix_lens = jnp.zeros((B,), jnp.int32)
+    else:
+        prefix_lens = jnp.asarray(prefix_lens, jnp.int32)
+        n_prefix = prefix_lens // ps                                    # [B]
     # A sequence whose pages would overflow its block-table row can never be
     # addressed: force ALL of its packets to fail (overwide arg) instead of
     # leaking unreferenced pages or a stranded state/scratch slot.  The
     # admission then reports it in `failed`.
-    fits = n_pages <= cfg.max_pages_per_lane
+    fits = n_prefix + n_pages <= cfg.max_pages_per_lane
     # forced-fail must exceed the response width R (overwide -> fail), which
     # the stash pre-charge packets may widen beyond max_pages.
     pre = cfg.stash_refill if cfg.stash_size else 0
@@ -384,9 +405,37 @@ def admit_prefill_many(
             got = got & res.ok_for(t)
     # Block table rows for the admitted lanes.
     p_lim = min(max_pages, cfg.max_pages_per_lane)
-    rows = jnp.full((B, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32)
-    rows = rows.at[:, :p_lim].set(
-        jnp.where(got[:, None], pages[:, :p_lim], NO_BLOCK))
+    if prefix_blocks is None:
+        rows = jnp.full((B, cfg.max_pages_per_lane), NO_BLOCK, jnp.int32)
+        rows = rows.at[:, :p_lim].set(
+            jnp.where(got[:, None], pages[:, :p_lim], NO_BLOCK))
+    else:
+        # Splice: row = [shared prefix pages | fresh suffix pages | pad].
+        M = cfg.max_pages_per_lane
+        P = prefix_blocks.shape[1]
+        pos = jnp.arange(M, dtype=jnp.int32)[None, :]                # [1, M]
+        pref = jnp.take_along_axis(
+            prefix_blocks,
+            jnp.broadcast_to(jnp.clip(pos, 0, P - 1), (B, M)), axis=1)
+        suf = jnp.take_along_axis(
+            pages, jnp.broadcast_to(
+                jnp.clip(pos - n_prefix[:, None], 0, max_pages - 1),
+                (B, M)), axis=1)
+        in_pref = pos < n_prefix[:, None]
+        in_suf = (pos >= n_prefix[:, None]) \
+            & (pos < (n_prefix + n_pages)[:, None])
+        rows = jnp.where(got[:, None] & in_pref, pref,
+                         jnp.where(got[:, None] & in_suf, suf, NO_BLOCK))
+        # Aliased pages gain one reference per successfully admitted lane
+        # (control-plane bump, no HMQ traffic; padded/failed slots map to
+        # a positive OOB sentinel — negative ids would wrap even under
+        # mode="drop").
+        valid_pref = (jnp.arange(P, dtype=jnp.int32)[None, :]
+                      < n_prefix[:, None]) & got[:, None]
+        sentinel = jnp.int32(alloc.refcount.shape[1])
+        alloc = svc.bump_refcounts(
+            alloc, tenants.kv,
+            jnp.where(valid_pref, prefix_blocks, sentinel).reshape(-1))
     block_tables = state.block_tables.at[lanes].set(rows)
 
     # Scatter KV into the allocated pages:
@@ -423,7 +472,7 @@ def admit_prefill_many(
         alloc=alloc,
         block_tables=block_tables,
         seq_lens=state.seq_lens.at[lanes].set(
-            jnp.where(got, lengths.astype(jnp.int32), 0)),
+            jnp.where(got, prefix_lens + lengths.astype(jnp.int32), 0)),
         active=state.active.at[lanes].set(got),
         k_pages=k_pages,
         v_pages=v_pages,
@@ -734,11 +783,17 @@ class PrefixCache:
         self.hash_fn = hash_fn or default_page_hash
         self._chains: dict[int, list[CacheEntry]] = {}
         self._by_pkey: dict[bytes, CacheEntry] = {}
+        # pkey -> outstanding lane references (zero-copy aliases, DESIGN.md
+        # §12).  A pinned entry (refs > 0) sits in a live block table and
+        # must never be evicted — its page would be rewritten under a
+        # running lane.
+        self._aliases: dict[bytes, int] = {}
         self.hits = 0            # probed requests that reused >= 1 page
         self.misses = 0          # probed requests with no reusable prefix
         self.inserts = 0         # pages demoted into the cache
         self.evictions = 0       # pages evicted (policy picks + cascades)
         self.dup_skips = 0       # demoted pages already cached (left to FREE_ALL)
+        self.aliases = 0         # pages spliced into lane tables zero-copy
         self.trace: list[tuple] = []
 
     @property
@@ -791,6 +846,45 @@ class PrefixCache:
                 self.misses += 1
         return len(blocks) * ps, blocks
 
+    # -- alias (zero-copy hit admission) ----------------------------------
+    def alias(self, tokens, n_pages: int) -> None:
+        """Pin the first ``n_pages`` entries of ``tokens``' cached chain: a
+        lane spliced their pages into its block table (DESIGN.md §12).  The
+        caller bumps the device refcounts; this records the host-side pin so
+        eviction skips the entries while any lane reads them.  One call per
+        admitted lane; balanced by :meth:`unalias` at lane release."""
+        tokens = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        n = int(n_pages)
+        for i in range(n):
+            pkey = tokens[:(i + 1) * ps].tobytes()
+            self._aliases[pkey] = self._aliases.get(pkey, 0) + 1
+        self.aliases += n
+        self.trace.append(
+            ("alias", tuple(int(t) for t in tokens[:n * ps]), n))
+
+    def unalias(self, tokens, n_pages: int) -> None:
+        """Drop one lane's pin on the first ``n_pages`` entries of
+        ``tokens``' chain (the lane released or was preempted; its single
+        OP_FREEs decrement the device refcounts on the same burst)."""
+        tokens = np.asarray(tokens, np.int32)
+        ps = self.page_size
+        n = int(n_pages)
+        for i in range(n):
+            pkey = tokens[:(i + 1) * ps].tobytes()
+            left = self._aliases.get(pkey, 0) - 1
+            if left > 0:
+                self._aliases[pkey] = left
+            else:
+                self._aliases.pop(pkey, None)
+        self.trace.append(
+            ("unalias", tuple(int(t) for t in tokens[:n * ps]), n))
+
+    @property
+    def pinned(self) -> int:
+        """Entries currently pinned by at least one lane alias."""
+        return len(self._aliases)
+
     # -- demote (insert) --------------------------------------------------
     def insert(self, tokens, blocks) -> tuple[list[int], list[int], list[int]]:
         """Demote a completed sequence's full pages into the cache.
@@ -822,11 +916,15 @@ class PrefixCache:
 
         evicted: list[int] = []
         while keep and self.pages + len(keep) > self.budget and self.pages:
-            evicted.extend(self._evict_one())
+            batch = self._evict_one()
+            if not batch:        # every resident entry is pinned
+                break
+            evicted.extend(batch)
         if keep and self.pages + len(keep) > self.budget:
-            # budget smaller than the chain even with an empty cache: keep
-            # only the shallowest pages (prefix property needs contiguity
-            # from page 0 of the chain)
+            # budget smaller than the insertable room (pinned residents, or
+            # a chain longer than the whole budget): keep only the
+            # shallowest pages (prefix property needs contiguity from page
+            # 0 of the chain)
             cut = max(0, self.budget - self.pages)
             skipped.extend(b for _, _, _, b in keep[cut:])
             keep = keep[:cut]
@@ -858,30 +956,51 @@ class PrefixCache:
         del self._by_pkey[entry.pkey]
 
     def _evict_one(self) -> list[int]:
-        """Evict the policy's next victim plus its descendants; returns the
-        freed block ids (empty when the cache is already empty)."""
-        pkey = self.policy.victim()
-        if pkey is None:
-            return []
-        victim = self._by_pkey[pkey]
-        doomed = [victim] + [
-            e for e in self._by_pkey.values()
-            if len(e.pkey) > len(pkey) and e.pkey.startswith(pkey)]
-        for e in doomed:
-            self._drop(e)
-            if e is not victim:
-                self.policy.on_remove(e.pkey)
-        self.evictions += len(doomed)
-        return [e.block for e in doomed]
+        """Evict the policy's next evictABLE victim plus its descendants;
+        returns the freed block ids (empty when the cache is drained or
+        every remaining entry is pinned).
+
+        Pinned entries (aliased into a live lane's block table, DESIGN.md
+        §12) are skipped — and so is any victim with a pinned descendant,
+        because the cascade would orphan it.  Skipped victims re-enter the
+        policy via ``on_insert`` in skip order, a deterministic requeue the
+        trace replay reproduces exactly."""
+        skipped: list[bytes] = []
+        freed: list[int] = []
+        for _ in range(len(self._by_pkey)):
+            pkey = self.policy.victim()
+            if pkey is None:
+                break
+            victim = self._by_pkey[pkey]
+            doomed = [victim] + [
+                e for e in self._by_pkey.values()
+                if len(e.pkey) > len(pkey) and e.pkey.startswith(pkey)]
+            if any(e.pkey in self._aliases for e in doomed):
+                skipped.append(pkey)
+                continue
+            for e in doomed:
+                self._drop(e)
+                if e is not victim:
+                    self.policy.on_remove(e.pkey)
+            self.evictions += len(doomed)
+            freed = [e.block for e in doomed]
+            break
+        for pk in skipped:
+            self.policy.on_insert(pk)
+        return freed
 
     def evict_pages(self, n: int) -> list[int]:
-        """Evict victims until at least ``n`` pages are freed (or the cache
-        drains).  The admission shortfall path: freed blocks must be
-        OP_FREEd by the caller before the pages are allocatable."""
+        """Evict victims until at least ``n`` pages are freed, the cache
+        drains, or only pinned (aliased) entries remain.  The admission
+        shortfall path: freed blocks must be OP_FREEd by the caller before
+        the pages are allocatable."""
         self.trace.append(("evict", int(n)))
         freed: list[int] = []
         while len(freed) < n and self.pages:
-            freed.extend(self._evict_one())
+            batch = self._evict_one()
+            if not batch:        # every resident entry is pinned
+                break
+            freed.extend(batch)
         return freed
 
 
@@ -1066,19 +1185,35 @@ def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,
     """Host-side invariant check for the full paged-KV allocator state:
     I1–I4 on the segregated metadata plus I5 — every KV page is exactly one
     of {central free stack, lane stash, block-table referenced, prefix
-    cache}.  Failures raise
+    cache} — and the exact I6 refcount identity: every KV page's device
+    refcount equals its block-table in-degree across all lanes plus its
+    cache and stash references (DESIGN.md §12).  Failures raise
     :class:`~repro.core.freelist.FreelistInvariantError` labelled with
     the tenant names, so a tenant-quota bug reads as a per-tenant report.
 
     ``tenants`` points the check at the engine's namespaced classes on a
     shared multi-engine state (I1–I4 then cover EVERY shard's classes; I5's
-    stash partition runs against this engine's own KV class).  ``cache``
-    extends the partition with the engine's :class:`PrefixCache` pages
-    (owner-mapped to :data:`CACHE_OWNER`); without it, any demoted page
-    fails the partition sum — leaks are loud either way.
+    stash partition and the I6 identity run against this engine's own KV
+    class).  ``cache`` extends the partition with the engine's
+    :class:`PrefixCache` pages (owner-mapped to :data:`CACHE_OWNER`);
+    without it, any demoted page fails the partition sum — leaks are loud
+    either way.
     """
     from .freelist import validate_freelist
     tenants = tenants if tenants is not None else paged_tenants(cfg)
+    # Independent recomputation of every KV page's reference count: one per
+    # block-table slot naming it (aliased pages count once per lane), one
+    # for stash membership, one for cache residency.  The device refcount
+    # plane must match element for element.
+    expected = np.zeros((state.alloc.max_capacity,), np.int64)
+    tbl = np.asarray(state.block_tables)
+    np.add.at(expected, tbl[tbl != NO_BLOCK], 1)
+    sp = np.asarray(state.stash.pages)
+    sd = np.asarray(state.stash.depth)
+    for lane in range(sp.shape[0]):
+        np.add.at(expected, sp[lane, :int(sd[lane])], 1)
+    if cache is not None:
+        np.add.at(expected, cache.blocks(), 1)
     validate_freelist(
         state.alloc,
         stash_pages=state.stash.pages,
@@ -1088,4 +1223,5 @@ def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,
         tenant_names=tenants.service.tenant_names(),
         cache_pages=cache.blocks() if cache is not None else None,
         cache_owner=CACHE_OWNER if cache is not None else None,
+        refcount_expected=expected,
     )

@@ -58,25 +58,25 @@ every backend.
 Client API (DESIGN.md §9)
 -------------------------
 Since the `repro.alloc` redesign this module holds only (a) the shared
-:class:`StepStats` telemetry type, (b) ``_step_scheduled_jnp`` — the
+:class:`StepStats` telemetry type and (b) ``_step_scheduled_jnp`` — the
 scheduled-step body that is the ``jnp`` backend of the free-list
 :class:`~repro.alloc.policies.AllocatorPolicy` and the oracle for the fused
-kernel — and (c) :func:`support_core_step`, a thin DEPRECATED wrapper over
-:class:`repro.alloc.AllocService` kept for raw-queue callers and the
-old-vs-new differential suites.  Production clients (paged KV, the serving
-engine) talk to the support-core exclusively through the service API:
-registered tenants, `BurstBuilder` typed ops, and ticket resolution.
+kernel.  The PR 4 ``support_core_step`` raw-queue wrapper is gone: every
+client — production and tests alike — drives bursts through
+:class:`repro.alloc.AllocService` (``register_tenant`` / ``new_burst`` /
+``commit``, or the raw-queue ``AllocService.step`` bridge), so the refcount
+plane (DESIGN.md §12) has exactly one client path to thread through.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from .freelist import FreeListState
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
-                      OP_REFILL, RequestQueue, ResponseQueue)
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
+                      RequestQueue)
 
 #: Valid values for the ``backend`` argument / ``REPRO_ALLOC_BACKEND`` knob.
 ALLOC_BACKENDS = ("jnp", "kernel", "kernel-interpret")
@@ -131,24 +131,29 @@ def grant_scan(
     return ok, my_goff
 
 
-def deferred_free_mask(
+def deferred_free_counts(
     sched: RequestQueue,
     owner: jnp.ndarray,        # [C, N] POST-alloc owner map
     cls: jnp.ndarray,          # [Q] clipped size classes
     onehot: jnp.ndarray,       # [Q, C] bool
     is_free: jnp.ndarray,      # [Q] bool
 ) -> jnp.ndarray:
-    """[C, N] mask of blocks this burst frees, shared by every jnp policy.
+    """[C, N] count of references this burst drops, shared by every jnp
+    policy.
 
     Two free modes: single block id, or FREE_ALL (all blocks owned by lane).
     Scatter-based construction in O(Q + C·N):
-      * single-block frees scatter (class, arg) hits directly — one [Q]
-        scatter instead of a [Q, C, N] comparison grid;
+      * single-block frees scatter-ADD (class, arg) hits — each packet is
+        ONE reference drop, so K lanes releasing the same shared (aliased)
+        page in one merged burst decrement its refcount K times
+        (DESIGN.md §12);
       * FREE_ALL resolves through an owner-map sweep: the FREE_ALL
         (class, lane) requests become a per-class sorted lane list, and
         every owned block membership-tests its owner against its class's
-        list (binary search, O(C·N·log Q)).
-    Only currently-owned blocks can be freed (double-free of a free block is
+        list (binary search, O(C·N·log Q)).  FREE_ALL contributes at most
+        1 per block — duplicate release packets for one lane stay
+        idempotent, and a lane's pages carry exactly its one reference.
+    Only currently-owned blocks can be freed (a free of an unowned block is
     a nop).  Uses the post-alloc owner map: frees are processed after
     mallocs, so a block allocated this very step can be freed this step.
     Semantically identical to the dense-mask reference kept in
@@ -159,7 +164,8 @@ def deferred_free_mask(
     is_single = is_free & (sched.arg >= 0)
     sgl_c = jnp.where(is_single, cls, C)                                # OOB -> drop
     sgl_b = jnp.where(is_single & (sched.arg < N), sched.arg, N)
-    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
+    single_cnt = jnp.zeros((C, N), jnp.int32).at[sgl_c, sgl_b].add(
+        1, mode="drop")
 
     is_fa = is_free & (sched.arg == FREE_ALL)
     # Per-class FREE_ALL lane lists, padded with int32 max (lane id 2**31-1
@@ -170,7 +176,8 @@ def deferred_free_mask(
     fa_pos = jax.vmap(jnp.searchsorted)(fa_sorted, owner)               # [C, N]
     whole_lane = (jnp.take_along_axis(
         fa_sorted, jnp.clip(fa_pos, 0, Q - 1), axis=1) == owner) & (owner != pad)
-    return (single | whole_lane) & (owner >= 0)
+    return (single_cnt + whole_lane.astype(jnp.int32)) \
+        * (owner >= 0).astype(jnp.int32)
 
 
 def _step_scheduled_jnp(
@@ -222,6 +229,10 @@ def _step_scheduled_jnp(
     upd_idx_c = jnp.where(flat_take, flat_cls, C)
     upd_idx_b = jnp.where(flat_take, flat_blk, N)
     owner = state.owner.at[upd_idx_c, upd_idx_b].set(flat_lane, mode="drop")
+    # A freshly granted block carries exactly one reference (its lane's
+    # block-table entry); aliasing bumps ride the control plane
+    # (AllocService.bump_refcounts), never the HMQ.
+    refcount = state.refcount.at[upd_idx_c, upd_idx_b].set(1, mode="drop")
 
     taken_per_class = jnp.sum(granted_c, axis=0)                        # [C]
     top_after_alloc = state.free_top - taken_per_class
@@ -232,16 +243,25 @@ def _step_scheduled_jnp(
 
     # ---- free phase (deferred append; cannot serve this step's mallocs) ----
     blk_ids = jnp.arange(N, dtype=jnp.int32)                            # [N]
-    free_mask = deferred_free_mask(sched, owner, cls, onehot, is_free)
+    free_cnt = deferred_free_counts(sched, owner, cls, onehot, is_free)
 
-    # Compact freed ids per class and append to the stack.
-    freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)      # [C]
-    dest = top_after_alloc[:, None] + jnp.cumsum(free_mask, axis=1) - free_mask  # [C, N]
-    dest = jnp.where(free_mask, dest, N)  # N = positive OOB sentinel -> dropped
+    # Refcounted free (DESIGN.md §12): each matched free DECREMENTS; the
+    # block only returns to the central stack (and drops its owner) at
+    # refcount 0.  Shared pages (aliased by the prefix cache + live lanes)
+    # therefore survive any one release — K frees of a shared page
+    # decrement K times, it can never be stack-pushed twice.
+    dec = refcount - free_cnt
+    ret_mask = (free_cnt > 0) & (dec <= 0)
+    refcount = jnp.maximum(dec, 0)
+
+    # Compact RETURNED ids per class and append to the stack.
+    freed_per_class = jnp.sum(ret_mask, axis=1).astype(jnp.int32)       # [C]
+    dest = top_after_alloc[:, None] + jnp.cumsum(ret_mask, axis=1) - ret_mask  # [C, N]
+    dest = jnp.where(ret_mask, dest, N)  # N = positive OOB sentinel -> dropped
     class_rows = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
     new_stack = state.free_stack.at[class_rows.reshape(-1), dest.reshape(-1)].set(
         jnp.broadcast_to(blk_ids[None, :], (C, N)).reshape(-1), mode="drop")
-    owner = jnp.where(free_mask, -1, owner)
+    owner = jnp.where(ret_mask, -1, owner)
 
     new_top = top_after_alloc + freed_per_class
     used = used_after_alloc - freed_per_class
@@ -250,6 +270,7 @@ def _step_scheduled_jnp(
         free_stack=new_stack,
         free_top=new_top,
         owner=owner,
+        refcount=refcount,
         capacity=state.capacity,
         alloc_count=state.alloc_count + taken_per_class,
         free_count=state.free_count + freed_per_class,
@@ -258,44 +279,3 @@ def _step_scheduled_jnp(
         peak_used=peak,
     )
     return new_state, blocks, ok.astype(jnp.int32)
-
-
-def support_core_step(
-    state: FreeListState,
-    queue: RequestQueue,
-    max_blocks_per_req: int = 1,
-    backend: Optional[str] = None,
-    policy: Optional[str] = None,
-) -> tuple[FreeListState, ResponseQueue, StepStats]:
-    """Process one HMQ batch against the segregated free lists.
-
-    .. deprecated::
-        This is now a thin wrapper over the :class:`repro.alloc.AllocService`
-        client API (DESIGN.md §9) — kept so the differential suites can prove
-        the new path bit-identical to the historical one, and for raw-queue
-        callers (tests, examples, the sim).  New client code should register
-        tenants on an ``AllocService`` and drive bursts through
-        ``new_burst()`` / ``commit()`` instead of hand-building queues.
-
-    Args:
-      state: segregated allocator metadata.
-      queue: request batch (any order; will be HMQ-scheduled internally).
-      max_blocks_per_req: response width R — the largest ``arg`` a malloc may
-        carry.  Requests asking for more than R blocks fail.
-      backend: ``"jnp"`` | ``"kernel"`` | ``"kernel-interpret"`` (see module
-        docstring); ``None`` resolves ``REPRO_ALLOC_BACKEND``.  Static — the
-        choice is baked in at trace time.
-      policy: allocator policy name (``repro.alloc.ALLOC_POLICIES``); ``None``
-        resolves ``REPRO_ALLOC_POLICY`` (default ``"freelist"``, the
-        historical behaviour).
-
-    Returns:
-      (new_state, responses_in_caller_order, stats) — ``stats`` is the
-      aggregate :class:`StepStats`; the per-tenant breakdown is only
-      available through the service API.
-    """
-    from ..alloc.service import AllocService
-    svc = AllocService(policy=policy, backend=backend)
-    new_state, resp, stats = svc.step(state, queue,
-                                      max_blocks_per_req=max_blocks_per_req)
-    return new_state, resp, stats.core

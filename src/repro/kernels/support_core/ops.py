@@ -34,10 +34,10 @@ def support_core_burst(
     (the differential reference, re-exported as :mod:`.ref`): returns
     ``(new_state, blocks [Q, R], ok [Q])`` in scheduled order.
     """
-    (new_stack, new_top, new_owner, new_alloc, new_free, new_fail,
-     new_used, new_peak, blocks, ok) = fused_step_kernel(
+    (new_stack, new_top, new_owner, new_refcount, new_alloc, new_free,
+     new_fail, new_used, new_peak, blocks, ok) = fused_step_kernel(
         sched.op, sched.lane, sched.size_class, sched.arg,
-        state.free_stack, state.free_top, state.owner,
+        state.free_stack, state.free_top, state.owner, state.refcount,
         state.alloc_count, state.free_count, state.fail_count,
         state.used, state.peak_used,
         max_per_req=max_blocks_per_req, interpret=interpret)
@@ -45,6 +45,7 @@ def support_core_burst(
         free_stack=new_stack,
         free_top=new_top[:, 0],
         owner=new_owner,
+        refcount=new_refcount,
         capacity=state.capacity,
         alloc_count=new_alloc[:, 0],
         free_count=new_free[:, 0],

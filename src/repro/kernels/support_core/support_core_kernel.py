@@ -32,8 +32,10 @@ consume nothing), a true prefix recurrence with [C]-vector state that no
 fixed number of cumsum passes can replace.
 
 Shapes: Q requests, C size classes, N stack capacity, R max blocks/request.
-VMEM: free_stack + owner dominate at 2·C·N·4 bytes in + the same out
-(C=8, N=64k → 4 MB in + 4 MB out); queue and counters are O(Q + C).
+VMEM: free_stack + owner + refcount dominate at 3·C·N·4 bytes in + the same
+out (C=8, N=64k → 6 MB in + 6 MB out); queue and counters are O(Q + C).
+Frees are refcount decrements (DESIGN.md §12): the freed-id compaction and
+owner clear apply only to blocks whose refcount reaches 0.
 """
 from __future__ import annotations
 
@@ -56,6 +58,7 @@ def _kernel(
     stack_ref,      # [C, N] int32
     top_ref,        # [C, 1] int32
     owner_ref,      # [C, N] int32
+    refcount_ref,   # [C, N] int32
     alloc_cnt_ref,  # [C, 1] int32
     free_cnt_ref,   # [C, 1] int32
     fail_cnt_ref,   # [C, 1] int32
@@ -65,6 +68,7 @@ def _kernel(
     new_stack_ref,  # [C, N] int32
     new_top_ref,    # [C, 1] int32
     new_owner_ref,  # [C, N] int32
+    new_refcount_ref,  # [C, N] int32
     new_alloc_ref,  # [C, 1] int32
     new_free_ref,   # [C, 1] int32
     new_fail_ref,   # [C, 1] int32
@@ -131,6 +135,8 @@ def _kernel(
     upd_idx_c = jnp.where(flat_take, flat_cls, C)
     upd_idx_b = jnp.where(flat_take, flat_blk, N)
     owner = owner_ref[...].at[upd_idx_c, upd_idx_b].set(flat_lane, mode="drop")
+    # Fresh grants carry exactly one reference (DESIGN.md §12).
+    refcount = refcount_ref[...].at[upd_idx_c, upd_idx_b].set(1, mode="drop")
 
     taken_per_class = jnp.sum(granted_c, axis=0)            # [C]
     top_after_alloc = tops - taken_per_class
@@ -138,11 +144,13 @@ def _kernel(
     new_peak_ref[...] = jnp.maximum(peak_ref[:, 0], used_after_alloc)[:, None]
 
     # ---- free phase (deferred append) ----
-    # Single-block frees scatter (class, arg) hits directly.
+    # Single-block frees scatter-ADD (class, arg) hits — each packet drops
+    # one reference, so K frees of a shared page decrement K times.
     is_single = is_free & (arg >= 0)
     sgl_c = jnp.where(is_single, cls, C)
     sgl_b = jnp.where(is_single & (arg < N), arg, N)
-    single = jnp.zeros((C, N), bool).at[sgl_c, sgl_b].set(True, mode="drop")
+    single_cnt = jnp.zeros((C, N), jnp.int32).at[sgl_c, sgl_b].add(
+        1, mode="drop")
 
     # FREE_ALL owner sweep: accumulated masked-OR over the queue's FREE_ALL
     # packets — whole VMEM-resident [C, N] vector op per packet, no sort.
@@ -158,19 +166,26 @@ def _kernel(
 
     whole_lane = jax.lax.fori_loop(0, Q, fa_body, jnp.zeros((C, N), bool))
 
-    # Only currently-owned blocks free (double-free of a free block is a
+    # Only currently-owned blocks free (a free of an unowned block is a
     # nop); post-alloc owner map, so a block granted this step can be freed
-    # this step.
-    free_mask = (single | whole_lane) & (owner >= 0)
+    # this step.  FREE_ALL contributes at most 1 per block (idempotent).
+    free_cnt = (single_cnt + whole_lane.astype(jnp.int32)) \
+        * (owner >= 0).astype(jnp.int32)
 
-    # Compact freed ids per class and append to the stack.
+    # Refcounted free (DESIGN.md §12): each matched free decrements; the
+    # block returns to the stack (and drops its owner) only at refcount 0.
+    dec = refcount - free_cnt
+    ret_mask = (free_cnt > 0) & (dec <= 0)
+    new_refcount_ref[...] = jnp.maximum(dec, 0)
+
+    # Compact RETURNED ids per class and append to the stack.
     blk_ids = jax.lax.broadcasted_iota(jnp.int32, (C, N), 1)
-    freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
-    dest = top_after_alloc[:, None] + jnp.cumsum(free_mask, axis=1) - free_mask
-    dest = jnp.where(free_mask, dest, N)                    # OOB -> dropped
+    freed_per_class = jnp.sum(ret_mask, axis=1).astype(jnp.int32)
+    dest = top_after_alloc[:, None] + jnp.cumsum(ret_mask, axis=1) - ret_mask
+    dest = jnp.where(ret_mask, dest, N)                     # OOB -> dropped
     new_stack_ref[...] = stack.at[class_grid.reshape(-1), dest.reshape(-1)].set(
         blk_ids.reshape(-1), mode="drop")
-    new_owner_ref[...] = jnp.where(free_mask, -1, owner)
+    new_owner_ref[...] = jnp.where(ret_mask, -1, owner)
 
     # ---- counters ----
     new_top_ref[...] = (top_after_alloc + freed_per_class)[:, None]
@@ -189,6 +204,7 @@ def fused_step_kernel(
     free_stack: jnp.ndarray,  # [C, N] int32
     free_top: jnp.ndarray,    # [C] int32
     owner: jnp.ndarray,       # [C, N] int32
+    refcount: jnp.ndarray,    # [C, N] int32
     alloc_count: jnp.ndarray,  # [C] int32
     free_count: jnp.ndarray,   # [C] int32
     fail_count: jnp.ndarray,   # [C] int32
@@ -201,8 +217,8 @@ def fused_step_kernel(
     """One fused launch for a whole scheduled HMQ burst.
 
     Returns ``(new_stack [C,N], new_top [C,1], new_owner [C,N],
-    new_alloc [C,1], new_free [C,1], new_fail [C,1], new_used [C,1],
-    new_peak [C,1], blocks [Q,R], ok [Q])``.
+    new_refcount [C,N], new_alloc [C,1], new_free [C,1], new_fail [C,1],
+    new_used [C,1], new_peak [C,1], blocks [Q,R], ok [Q])``.
     """
     Q = op.shape[0]
     C, N = free_stack.shape
@@ -217,17 +233,17 @@ def fused_step_kernel(
         kernel,
         grid=(1,),
         in_specs=[q_spec, q_spec, q_spec, q_spec,
-                  cn_spec, c1_spec, cn_spec,
+                  cn_spec, c1_spec, cn_spec, cn_spec,
                   c1_spec, c1_spec, c1_spec, c1_spec, c1_spec],
-        out_specs=[cn_spec, c1_spec, cn_spec,
+        out_specs=[cn_spec, c1_spec, cn_spec, cn_spec,
                    c1_spec, c1_spec, c1_spec, c1_spec, c1_spec,
                    pl.BlockSpec((Q, R), lambda i: (0, 0)), q_spec],
-        out_shape=[cn_shape, c1_shape, cn_shape,
+        out_shape=[cn_shape, c1_shape, cn_shape, cn_shape,
                    c1_shape, c1_shape, c1_shape, c1_shape, c1_shape,
                    jax.ShapeDtypeStruct((Q, R), jnp.int32),
                    jax.ShapeDtypeStruct((Q,), jnp.int32)],
         interpret=interpret,
     )(op, lane, size_class, arg,
-      free_stack, free_top[:, None], owner,
+      free_stack, free_top[:, None], owner, refcount,
       alloc_count[:, None], free_count[:, None], fail_count[:, None],
       used[:, None], peak_used[:, None])

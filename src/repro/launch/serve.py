@@ -119,7 +119,8 @@ def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
                      alloc_policy=args.alloc_policy,
                      prefix_cache=args.prefix_cache == "on",
                      eviction=args.eviction,
-                     cache_pages=args.cache_pages)
+                     cache_pages=args.cache_pages,
+                     prefix_alias=args.prefix_alias)
     windows = me.serve(requests, max_new_tokens=args.max_new_tokens,
                        verbose=True)
     st = me.stats
@@ -137,7 +138,9 @@ def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
     for i, eng in enumerate(me.engines):
         s = eng.stats
         cache = (f" cache_hit_rate={s.cache_hit_rate:.2f} "
-                 f"prefill_tokens_saved={s.prefill_tokens_saved}"
+                 f"prefill_tokens_saved={s.prefill_tokens_saved} "
+                 f"aliased_pages={s.aliased_pages} "
+                 f"hit_copy_bytes={s.cache_hit_copy_bytes}"
                  if eng.cache is not None else "")
         print(f"  e{i}: admitted={s.admitted} completed={s.completed} "
               f"decode_steps={s.decode_steps} "
@@ -200,6 +203,12 @@ def main() -> None:
     ap.add_argument("--cache-pages", type=int, default=None,
                     help="prefix-cache page budget (default: half the KV "
                          "pool; charged against the kv tenant quota)")
+    ap.add_argument("--prefix-alias", default=None, choices=["copy", "alias"],
+                    help="prefix-cache hit admission mode (default: "
+                         "REPRO_PREFIX_ALIAS env or 'copy'): 'copy' gathers "
+                         "cached K/V into fresh lane pages, 'alias' splices "
+                         "the cache pages into the lane's block table with a "
+                         "refcount bump — zero copy (DESIGN.md §12)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -222,7 +231,8 @@ def main() -> None:
                         alloc_policy=args.alloc_policy,
                         prefix_cache=args.prefix_cache == "on",
                         eviction=args.eviction,
-                        cache_pages=args.cache_pages)
+                        cache_pages=args.cache_pages,
+                        prefix_alias=args.prefix_alias)
     sched = Scheduler(scfg)
 
     steps = serve_loop(eng, sched, requests, args.max_new_tokens,
@@ -251,7 +261,10 @@ def main() -> None:
               f"prefill_tokens_saved={s.prefill_tokens_saved} "
               f"pages={s.cache_pages}/{eng.cache.budget} "
               f"inserts={s.cache_inserts} evictions={s.cache_evictions} "
-              f"policy={eng.cache.policy.name}")
+              f"policy={eng.cache.policy.name} mode={eng.prefix_alias} "
+              f"aliased_pages={s.aliased_pages} "
+              f"hit_copy_bytes={s.cache_hit_copy_bytes} "
+              f"hit_admit_us={s.hit_admit_us:.0f}")
     # per-tenant view: the multi-tenant support-core claim, measured
     print(f"burst_occupancy={s.burst_occupancy:.2f} | tenants:")
     for name, rep in eng.tenant_report().items():

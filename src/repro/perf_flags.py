@@ -33,6 +33,12 @@ before -> after for every flag.
                             free stacks) | 'bitmap' — address-ordered
                             first-fit AllocatorPolicy (DESIGN.md §9; jnp
                             backend only, the policy-parity CI leg)
+  REPRO_PREFIX_ALIAS=       'copy' (baseline: prefix-cache hits gather the
+                            cached K/V into freshly allocated lane pages) |
+                            'alias' — hits splice the cache-owned page ids
+                            into the lane's block table with a refcount
+                            bump; zero bytes copied at admission
+                            (DESIGN.md §12)
 """
 from __future__ import annotations
 
@@ -48,6 +54,7 @@ class PerfFlags:
     pool_layout: str = "pages"        # pages | layers | pages_hd
     alloc_backend: str = "jnp"        # jnp | kernel | kernel-interpret
     alloc_policy: str = "freelist"    # freelist | bitmap
+    prefix_alias: str = "copy"        # copy | alias
 
     @classmethod
     def from_env(cls) -> "PerfFlags":
@@ -58,6 +65,7 @@ class PerfFlags:
             pool_layout=os.environ.get("REPRO_POOL_LAYOUT", "pages"),
             alloc_backend=os.environ.get("REPRO_ALLOC_BACKEND", "jnp"),
             alloc_policy=os.environ.get("REPRO_ALLOC_POLICY", "freelist"),
+            prefix_alias=os.environ.get("REPRO_PREFIX_ALIAS", "copy"),
         )
 
 

@@ -59,6 +59,21 @@ class EngineStats:
     cache_evictions: int = 0       # pages evicted from the cache
     cache_pages: int = 0           # pages the cache holds right now
     prefill_tokens_saved: int = 0  # prompt tokens skipped via cached pages
+    # --- zero-copy hit admission (DESIGN.md §12) ---
+    aliased_pages: int = 0         # cache pages spliced into lane block tables
+    cache_hit_copy_bytes: int = 0  # prefix K/V bytes copied into fresh lane
+    #                                pages at hit admission (0 in alias mode)
+    cache_hit_admits: int = 0      # admission batches containing >= 1 hit
+    cache_hit_admit_us: float = 0.0  # wall time spent in those batches
+
+    @property
+    def hit_admit_us(self) -> float:
+        """Mean wall-clock microseconds per admission batch that contained
+        at least one prefix-cache hit — the copy-vs-alias speedup metric
+        (BENCH_serving.json)."""
+        if not self.cache_hit_admits:
+            return 0.0
+        return self.cache_hit_admit_us / self.cache_hit_admits
 
     @property
     def cache_hit_rate(self) -> float:
@@ -122,14 +137,16 @@ def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
     """
     sync = after_op if after_op is not None else (lambda: None)
     probe = eng.cache_probe if eng.cache is not None else None
-    plan = sched.plan_admission(eng.free_pages, probe=probe)
+    alias = eng.alias_enabled
+    plan = sched.plan_admission(eng.free_pages, probe=probe, alias=alias)
     if not plan.size and eng.cache is not None and eng.cache.pages:
         short = sched.head_shortfall(eng.free_pages)
         if short is not None and eng.cache_release(short):
             sync()
             # evicting may have shortened the head's cached prefix — replan
             # so cached_len/bucket/page math all reflect the new cache state
-            plan = sched.plan_admission(eng.free_pages, probe=probe)
+            plan = sched.plan_admission(eng.free_pages, probe=probe,
+                                        alias=alias)
     if not plan.size and preemption:
         lane = sched.preempt_victim(free_pages=eng.free_pages)
         if lane is not None:
@@ -138,7 +155,8 @@ def run_admission(eng: "ServingEngine", sched, preemption: bool = False,
             eng.preempt([lane])
             sync()
             sched.preempt(lane)
-            plan = sched.plan_admission(eng.free_pages, probe=probe)
+            plan = sched.plan_admission(eng.free_pages, probe=probe,
+                                        alias=alias)
     if not plan.size:
         return False
     items = [AdmissionItem(lane, r.tokens, r.frames, r.patches, r.cached_len)
@@ -175,7 +193,8 @@ class ServingEngine:
                  defer_refill: bool = False,
                  prefix_cache: bool = False,
                  eviction: Optional[str] = None,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 prefix_alias: Optional[str] = None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
@@ -216,6 +235,20 @@ class ServingEngine:
                 else kvcfg.num_pages // 2
             self.cache = pkv.PrefixCache(kvcfg.page_size, budget,
                                          policy=get_eviction(eviction))
+        # Hit-admission mode (DESIGN.md §12): "copy" gathers cached K/V into
+        # freshly allocated lane pages; "alias" splices the cache-owned page
+        # ids into the lane's block table with a refcount bump — zero copy.
+        # Resolved once (env knob REPRO_PREFIX_ALIAS) like the backend/policy.
+        if prefix_alias is None:
+            prefix_alias = current_flags().prefix_alias
+        if prefix_alias not in ("copy", "alias"):
+            raise ValueError(
+                f"prefix_alias must be 'copy' or 'alias', got {prefix_alias!r}")
+        self.prefix_alias = prefix_alias
+        # lane -> (pinned token prefix, shared block ids): the lanes whose
+        # block tables currently reference cache-owned pages; release must
+        # drop the pins and single-OP_FREE the per-lane refcounts
+        self._aliased: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         self.admitted_tokens: dict[int, int] = {}
         self.state = init_serve_state(cfg, kvcfg, kvcfg.max_lanes, 0, dtype)
         # fresh empty state: deactivate the synthetic lanes (metadata
@@ -272,6 +305,33 @@ class ServingEngine:
                                           tenants=self.tenants.handles)
 
     # ---------------- prefix cache (DESIGN.md §11) ----------------
+
+    @property
+    def alias_enabled(self) -> bool:
+        """Zero-copy hit admission is live: alias mode selected, the cache
+        on, and full attention.  Windowed archs (SWA / local_global)
+        recycle KV pages in place as the window slides, which would rewrite
+        a shared page under every other reader — they silently fall back
+        to the copy path (DESIGN.md §12)."""
+        return (self.prefix_alias == "alias" and self.cache is not None
+                and self.cfg.attn_pattern == "full")
+
+    def _unalias_lanes(self, lanes: Sequence[int]) -> list[int]:
+        """Drop the released lanes' references on shared (aliased) prefix
+        pages: unpin the cache entries and return the block ids, which the
+        caller MUST ride as single OP_FREEs on its release burst — the
+        lanes' FREE_ALLs match on owner and therefore skip these
+        CACHE_OWNER pages, so without the singles the per-lane refcounts
+        would leak and the pages could never return to the pool."""
+        blocks: list[int] = []
+        for lane in lanes:
+            rec = self._aliased.pop(int(lane), None)
+            if rec is None:
+                continue
+            toks, blks = rec
+            self.cache.unalias(toks, len(blks))
+            blocks.extend(int(b) for b in blks)
+        return blocks
 
     def _sync_cache_stats(self) -> None:
         """Mirror the cache's cumulative counters into EngineStats."""
@@ -390,11 +450,17 @@ class ServingEngine:
         """
         if not items:
             return []
+        import time
+        t_admit0 = time.perf_counter()
         items = [it if isinstance(it, AdmissionItem) else AdmissionItem(*it)
                  for it in items]
         scfg = self.sched_cfg
         cfg = self.cfg
         W = scfg.admit_width
+        alias = self.alias_enabled
+        # lane -> (cache block ids, full prompt tokens) for alias-mode hits:
+        # the burst splices the blocks, and successful lanes pin the entries
+        lane_prefix: dict[int, tuple[np.ndarray, np.ndarray]] = {}
 
         groups: dict[tuple, list[AdmissionItem]] = {}
         for it in items:
@@ -427,6 +493,10 @@ class ServingEngine:
                 # cached pages' K/V as the attention prefix, and prefill
                 # the suffix only.  No cache mutation happens between the
                 # final plan and here, so the probe must agree with it.
+                # The gather feeds the suffix prefill's attention CONTEXT in
+                # both hit-admission modes; only the page INSTALL differs
+                # (copy duplicates the prefix into fresh lane pages, alias
+                # splices the cache pages themselves — DESIGN.md §12).
                 assert self.cache is not None
                 n_pages = cached_len // self.kvcfg.page_size
                 src = np.zeros((width, n_pages), np.int32)
@@ -435,6 +505,9 @@ class ServingEngine:
                     assert cl == cached_len, \
                         f"cache changed between plan and admit: {cl} != {cached_len}"
                     src[i] = blks
+                    if alias:
+                        lane_prefix[int(it.lane)] = (
+                            src[i].copy(), np.asarray(it.tokens, np.int32))
                 # [width, P, L, ps, kv, hd] -> [width, L, P*ps, kv, hd]
                 def _flat(pages):
                     g = pages[jnp.asarray(src)]
@@ -482,19 +555,27 @@ class ServingEngine:
                     enc_out=self.state.enc_out.at[lanes].set(res.enc_out[rows]))
             all_next.append(nxt)
             all_lanes.extend(int(l) for l in lanes)
-            all_kv_len.extend(cached_len + int(lengths[i]) + n_prefix
+            # alias mode installs only the SUFFIX: the burst's lengths count
+            # tokens whose KV the scatter writes, and the cached prefix
+            # rides separately as prefix_lens (admit_prefill_many sums them
+            # into seq_lens)
+            inst_cached = 0 if alias else cached_len
+            all_kv_len.extend(inst_cached + int(lengths[i]) + n_prefix
                               for i in rows)
             for it in group:
                 lane_cached[int(it.lane)] = cached_len
             if res.kv is not None:
                 ks, vs = res.kv                  # [width, L_kv, T_kv, kv, hd]
-                if prefix_kv is not None:
+                if prefix_kv is not None and not alias:
                     # copy-based install: the lane gets its OWN pages for
                     # the full sequence, so prepend the cached prefix KV
                     # before the admission burst writes pages
                     pk, pv = prefix_kv
                     ks = jnp.concatenate([pk.astype(ks.dtype), ks], axis=2)
                     vs = jnp.concatenate([pv.astype(vs.dtype), vs], axis=2)
+                    self.stats.cache_hit_copy_bytes += (
+                        2 * k * int(np.prod(pk.shape[1:]))
+                        * jnp.dtype(ks.dtype).itemsize)
                 kv_chunks.append((ks[rows], vs[rows]))
 
         order = np.argsort(np.asarray(all_lanes, np.int32))
@@ -512,10 +593,26 @@ class ServingEngine:
                                 (0, 0), (0, 0))) for c in kv_chunks])
             perm = jnp.asarray(order)
             kv_lens = jnp.asarray(np.asarray(all_kv_len, np.int32)[order])
+            pb = pl = None
+            if lane_prefix:
+                # burst-order [B, P] cache pages + [B] aliased token counts;
+                # rows with no hit carry zeros (inert: the splice and the
+                # refcount bump both mask on prefix length)
+                lanes_np = np.asarray(all_lanes, np.int32)[order]
+                P = max(len(b) for b, _ in lane_prefix.values())
+                pb_np = np.zeros((lanes_np.shape[0], P), np.int32)
+                pl_np = np.zeros((lanes_np.shape[0],), np.int32)
+                for r, lane in enumerate(lanes_np):
+                    rec = lane_prefix.get(int(lane))
+                    if rec is not None:
+                        pb_np[r, : len(rec[0])] = rec[0]
+                        pl_np[r] = len(rec[0]) * self.kvcfg.page_size
+                pb, pl = jnp.asarray(pb_np), jnp.asarray(pl_np)
             paged, stats = pkv.admit_prefill_many(
                 self.kvcfg, self.state.paged, lanes_arr,
                 ks[perm], vs[perm], kv_lens, backend=self.alloc_backend,
-                policy=self.alloc_policy, tenants=self.tenants)
+                policy=self.alloc_policy, tenants=self.tenants,
+                prefix_blocks=pb, prefix_lens=pl)
             self.stats.hmq_admit_bursts += 1
             self.stats.alloc_failures += int(stats.failed)
             self._note_burst(stats.per_tenant, stats.queue_live,
@@ -533,6 +630,18 @@ class ServingEngine:
             tokens=self.state.tokens.at[lanes_arr].set(next_tokens))
         ok = np.asarray(paged.active)[np.asarray(lanes_arr)]
         failed = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if not o]
+        if lane_prefix:
+            # pin the spliced entries for every lane that actually admitted
+            # (the device refcount bump was gated on the same success mask)
+            for lane, o in zip(np.asarray(lanes_arr), ok):
+                rec = lane_prefix.get(int(lane))
+                if rec is None or not o:
+                    continue
+                blks, toks = rec
+                self.cache.alias(toks, len(blks))
+                self._aliased[int(lane)] = (
+                    toks[: len(blks) * self.kvcfg.page_size], blks)
+                self.stats.aliased_pages += len(blks)
         self.stats.admitted += len(items) - len(failed)
         self.stats.prefill_tokens_saved += sum(
             lane_cached.get(int(l), 0)
@@ -549,6 +658,12 @@ class ServingEngine:
             # reclaim orphaned partial grants (e.g. KV pages granted while
             # the state-slot packet failed) so failure never leaks the pool
             self.release(failed, completed=False)
+        if any(it.cached_len for it in items):
+            # hit-admission latency, comparable across copy/alias modes
+            # (the np.asarray(active) fetch above already synced the device)
+            self.stats.cache_hit_admits += 1
+            self.stats.cache_hit_admit_us += \
+                (time.perf_counter() - t_admit0) * 1e6
         return failed
 
     def _install_states(self, states: dec.RecurrentState, rows: np.ndarray,
@@ -625,11 +740,22 @@ class ServingEngine:
         lanes' full pages are demoted into the cache FIRST — kept pages
         retagged to ``CACHE_OWNER`` so this commit's FREE_ALLs skip them,
         eviction victims riding the same burst as single frees.
+
+        Lanes that spliced shared cache pages at admission (alias mode) get
+        the same treatment regardless of ``completed``: their pins drop and
+        the shared block ids ride this commit as single OP_FREEs, because
+        their FREE_ALLs match on lane ownership and skip CACHE_OWNER pages.
         """
         extra = None
         if completed and self.cache is not None and kv_tokens:
+            # demote BEFORE unalias: the pins keep this insert's budget
+            # evictions away from prefix pages other live lanes still read
             extra = self._demote_lanes(
                 {l: kv_tokens[l] for l in lanes if l in kv_tokens})
+        if self._aliased:
+            shared = self._unalias_lanes(lanes)
+            if shared:
+                extra = (extra or []) + shared
         pkts = release_packet_array(list(lanes), self.kvcfg.max_lanes)
         paged, stats = pkv.release_packets(self.kvcfg, self.state.paged,
                                            jnp.asarray(pkts),

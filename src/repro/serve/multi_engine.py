@@ -91,7 +91,8 @@ class MultiEngine:
                  alloc_policy: Optional[str] = None,
                  prefix_cache: bool = False,
                  eviction: Optional[str] = None,
-                 cache_pages: Optional[int] = None):
+                 cache_pages: Optional[int] = None,
+                 prefix_alias: Optional[str] = None):
         if n_engines < 1:
             raise ValueError("n_engines must be >= 1")
         if quantum < 1:
@@ -129,7 +130,8 @@ class MultiEngine:
                           # its own namespaced KV class, so caches need no
                           # cross-shard coordination (DESIGN.md §11)
                           prefix_cache=prefix_cache, eviction=eviction,
-                          cache_pages=cache_pages)
+                          cache_pages=cache_pages,
+                          prefix_alias=prefix_alias)
             for ts in tenant_sets]
         # the prefill is allocator-free and identical across shards: share
         # the jit cache so N shards pay ONE compile per prefill bucket
@@ -250,6 +252,12 @@ class MultiEngine:
                         evicted[i].extend(eng._demote_lanes(
                             {l: sched.kv_token_prefix(l) for l in finished}))
                         self._pull(i)
+                        # alias mode: drop the finished lanes' pins on
+                        # shared prefix pages AFTER demote (pins shield the
+                        # insert's budget evictions); the per-lane refcount
+                        # decrements ride the window commit as singles,
+                        # exactly like the eviction victims
+                        evicted[i].extend(eng._unalias_lanes(finished))
                         eng._sync_cache_stats()
                     # host metadata clears now; the FREE_ALL packets ride
                     # the merged window commit below

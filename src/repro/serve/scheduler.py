@@ -256,7 +256,8 @@ class Scheduler:
         """
         return sorted(self.waiting, key=lambda r: -r.priority)
 
-    def plan_admission(self, free_pages: int, probe=None) -> AdmissionPlan:
+    def plan_admission(self, free_pages: int, probe=None,
+                       alias: bool = False) -> AdmissionPlan:
         """Select waiting requests to admit, priority-then-FIFO, under the
         page budget.
 
@@ -272,9 +273,17 @@ class Scheduler:
         token count``): the probe runs BEFORE bucket selection, so a cache
         hit buckets by its uncached SUFFIX length (a 2048-token prompt with
         a 2040-token hit compiles into the smallest bucket, not the
-        largest).  Page charging stays at the FULL kv length — cached pages
-        are copied into freshly allocated lane pages at admission, so the
-        budget math is identical with the cache on or off.
+        largest).  Page charging depends on the hit-admission mode:
+
+        * copy mode (``alias=False``, the default): cached pages are copied
+          into freshly allocated lane pages at admission, so charging stays
+          at the FULL kv length — budget math identical with the cache on
+          or off.
+        * alias mode (``alias=True``, DESIGN.md §12): cached pages are
+          spliced into the lane's block table with a refcount bump, no new
+          pages back them, so the charge drops by ``cached_len /
+          page_size`` — a hot shared prefix admits for the price of its
+          suffix.
         """
         budget = free_pages - self.scfg.page_reserve
         lanes = self.free_lanes()
@@ -291,6 +300,10 @@ class Scheduler:
                 break
             need = pages_needed(self._kv_len(req), self.scfg) \
                 + self.scfg.stash_precharge
+            if alias:
+                # cached_len is page-aligned; aliased prefix pages are
+                # shared, not allocated, so only the suffix is charged
+                need -= req.cached_len // self.scfg.page_size
             if charged + need > budget:
                 break
             members.append((lanes[taken], req))

@@ -79,6 +79,7 @@ def init_serve_state(
         free_stack=alloc.free_stack.at[0].set(pid[order]),
         free_top=alloc.free_top.at[0].set(jnp.int32(N) - used0),
         owner=alloc.owner.at[0].set(jnp.where(used_mask, owner_lane, -1)),
+        refcount=alloc.refcount.at[0].set(used_mask.astype(jnp.int32)),
         used=alloc.used.at[0].set(used0),
         peak_used=alloc.peak_used.at[0].set(used0),
     )

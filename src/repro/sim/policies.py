@@ -180,13 +180,15 @@ def replay_prefix_trace(trace, eviction: str, budget_pages: int,
     """Replay a :class:`~repro.core.paged_kv.PrefixCache` event trace.
 
     ``trace`` is the engine cache's ``trace`` list — ``("insert", tokens,
-    n_pages)`` and ``("probe", tokens)`` events in lifecycle order.  The
-    replay drives a FRESH cache (synthetic block ids — eviction policies key
-    on token content, so block identity is irrelevant) under the named
-    ``eviction`` policy and returns its counters.  A replay under the SAME
-    policy as the live engine must agree exactly on every counter: the
-    engine's cache decisions are a pure function of the logical event
-    stream, never of allocator state.
+    n_pages)``, ``("probe", tokens)``, ``("evict", n)``, and the zero-copy
+    aliasing events ``("alias", tokens, n)`` / ``("unalias", tokens, n)``
+    (DESIGN.md §12) in lifecycle order.  The replay drives a FRESH cache
+    (synthetic block ids — eviction policies key on token content, so block
+    identity is irrelevant) under the named ``eviction`` policy and returns
+    its counters.  A replay under the SAME policy as the live engine must
+    agree exactly on every counter: the engine's cache decisions — including
+    which pinned victims eviction skips and requeues — are a pure function
+    of the logical event stream, never of allocator state.
     """
     import numpy as np
 
@@ -205,8 +207,15 @@ def replay_prefix_trace(trace, eviction: str, budget_pages: int,
             cache.probe(np.asarray(ev[1], np.int32), touch=True)
         elif ev[0] == "evict":
             cache.evict_pages(ev[1])
+        elif ev[0] == "alias":
+            _, tokens, n = ev
+            cache.alias(np.asarray(tokens, np.int32), n)
+        elif ev[0] == "unalias":
+            _, tokens, n = ev
+            cache.unalias(np.asarray(tokens, np.int32), n)
         else:
             raise ValueError(f"unknown trace event {ev[0]!r}")
     return {"hits": cache.hits, "misses": cache.misses,
             "inserts": cache.inserts, "evictions": cache.evictions,
-            "dup_skips": cache.dup_skips, "pages": cache.pages}
+            "dup_skips": cache.dup_skips, "pages": cache.pages,
+            "aliases": cache.aliases}

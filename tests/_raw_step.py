@@ -1,0 +1,17 @@
+"""Raw-queue support-core step for tests.
+
+The PR-4 ``repro.core.support_core.support_core_step`` thin wrapper is
+gone; hand-built-queue tests drive the same path through the tenant-less
+``AllocService.step`` bridge.  Kept as one shared helper so every suite
+exercises the identical entry point.
+"""
+from repro.alloc import AllocService
+
+_SVC = AllocService()
+
+
+def support_core_step(state, queue, max_blocks_per_req=1, backend=None,
+                      policy=None):
+    """One raw-queue burst: ``(new_state, ResponseQueue, BurstStats)``."""
+    return _SVC.step(state, queue, max_blocks_per_req=max_blocks_per_req,
+                     backend=backend, policy=policy)

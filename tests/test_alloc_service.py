@@ -17,7 +17,7 @@ from repro.core.freelist import (FreeListState, init_freelist,
                                  validate_freelist)
 from repro.core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
                                 OP_NOP, OP_REFILL, make_queue)
-from repro.core.support_core import support_core_step
+from _raw_step import support_core_step
 
 #: kernel runs through the Pallas interpreter so the suite runs anywhere;
 #: on TPU CI the compiled "kernel" backend takes this slot.
@@ -121,7 +121,7 @@ def _run_differential_trace(rng, backend, n_steps=4, policy="freelist"):
 def test_builder_bit_identical_to_legacy_wrapper_seeded(backend):
     """Differential (always-on randomized sweep): the BurstBuilder/ticket
     path produces bit-identical states, responses, and stats to the
-    deprecated raw-queue ``support_core_step`` wrapper."""
+    raw-queue ``AllocService.step`` bridge."""
     rng = np.random.RandomState(42)
     trials = 4 if backend == "jnp" else 2     # interpreter is slow
     for _ in range(trials):

@@ -137,7 +137,7 @@ def test_refill_priority_between_malloc_and_free():
 from repro.alloc import AllocService  # noqa: E402
 from repro.core.freelist import validate_freelist  # noqa: E402
 from repro.core.packets import NO_BLOCK, OP_REFILL  # noqa: E402
-from repro.core.support_core import support_core_step  # noqa: E402
+from _raw_step import support_core_step  # noqa: E402
 
 
 def _one_tenant_service(capacity=4):

@@ -13,7 +13,9 @@ from repro.core.lane_stash import (autotune_stash, init_stash, stash_pop,
 from repro.core.packets import NO_BLOCK, OP_NOP, empty_queue
 from repro.core.paged_kv import (PagedKVConfig, admit_prefill, decode_append,
                                  init_paged_kv, live_pages, release_lanes,
-                                 support_core_step, validate_paged_kv)
+                                 validate_paged_kv)
+
+from _raw_step import support_core_step
 
 
 def make_cfg(**kw):
@@ -263,6 +265,7 @@ def test_emergency_malloc_beats_other_lanes_refill(rng):
         free_stack=st.alloc.free_stack.at[0, 1:4].set(drained),
         free_top=st.alloc.free_top.at[0].add(3),
         owner=st.alloc.owner.at[0, drained].set(-1),
+        refcount=st.alloc.refcount.at[0, drained].set(0),
         used=st.alloc.used.at[0].add(-3),
         free_count=st.alloc.free_count.at[0].add(3))
     stash = LaneStashState(

@@ -392,7 +392,11 @@ def test_shared_prefix_serving_exact_and_replayable(dense):
     assert rep == {"hits": s.cache_hits, "misses": s.cache_misses,
                    "inserts": s.cache_inserts, "evictions": s.cache_evictions,
                    "dup_skips": eng_on.cache.dup_skips,
-                   "pages": s.cache_pages}
+                   "pages": s.cache_pages,
+                   # 0 in copy mode; REPRO_PREFIX_ALIAS=alias (the CI
+                   # alias-parity leg) resolves the zero-copy hit path and
+                   # the replay must re-derive its pin count too
+                   "aliases": eng_on.cache.aliases}
 
 
 @pytest.mark.parametrize("eviction", ["2q", "arc"])
@@ -406,7 +410,7 @@ def test_engine_replay_parity_all_policies(dense, eviction):
                               eng.kvcfg.page_size)
     assert rep == {"hits": c.hits, "misses": c.misses, "inserts": c.inserts,
                    "evictions": c.evictions, "dup_skips": c.dup_skips,
-                   "pages": c.pages}
+                   "pages": c.pages, "aliases": c.aliases}
 
 
 @pytest.mark.skipif(not os.environ.get("REPRO_DEEP_FUZZ"),

@@ -11,7 +11,9 @@ from repro.core.freelist import FreeListState, init_freelist, validate_freelist
 from repro.core.hmq import schedule
 from repro.core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
                                 OP_NOP, OP_REFILL, ResponseQueue, make_queue)
-from repro.core.support_core import StepStats, support_core_step
+from repro.core.support_core import StepStats
+
+from _raw_step import support_core_step
 
 
 def test_basic_alloc_and_stats():
@@ -119,6 +121,7 @@ def dense_reference_step(state, queue, max_blocks_per_req=1):
     upd_idx_c = jnp.where(flat_take, flat_cls, C)
     upd_idx_b = jnp.where(flat_take, flat_blk, N)
     owner = state.owner.at[upd_idx_c, upd_idx_b].set(flat_lane, mode="drop")
+    refcount = state.refcount.at[upd_idx_c, upd_idx_b].set(1, mode="drop")
 
     taken_per_class = jnp.sum(granted_c, axis=0)
     top_after_alloc = state.free_top - taken_per_class
@@ -134,16 +137,22 @@ def dense_reference_step(state, queue, max_blocks_per_req=1):
     whole_lane = is_free[:, None, None] & (sched.arg[:, None, None] == FREE_ALL) \
         & (class_grid == req_cls) \
         & (owner[None, :, :] == sched.lane[:, None, None])
-    free_mask = jnp.any(single | whole_lane, axis=0)
-    free_mask = free_mask & (owner >= 0)
-
-    freed_per_class = jnp.sum(free_mask, axis=1).astype(jnp.int32)
-    dest = top_after_alloc[:, None] + jnp.cumsum(free_mask, axis=1) - free_mask
-    dest = jnp.where(free_mask, dest, N)
+    # refcount-gated return (DESIGN.md §12): single frees each drop one
+    # reference (duplicates accumulate), FREE_ALL at most one per block;
+    # the block only rejoins the stack at refcount 0.
+    free_cnt = (jnp.sum(single.astype(jnp.int32), axis=0)
+                + jnp.any(whole_lane, axis=0).astype(jnp.int32)) \
+        * (owner >= 0).astype(jnp.int32)
+    dec = refcount - free_cnt
+    ret_mask = (free_cnt > 0) & (dec <= 0)
+    refcount = jnp.maximum(dec, 0)
+    freed_per_class = jnp.sum(ret_mask, axis=1).astype(jnp.int32)
+    dest = top_after_alloc[:, None] + jnp.cumsum(ret_mask, axis=1) - ret_mask
+    dest = jnp.where(ret_mask, dest, N)
     class_rows = jnp.broadcast_to(jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
     new_stack = state.free_stack.at[class_rows.reshape(-1), dest.reshape(-1)].set(
         jnp.broadcast_to(blk_ids[0], (C, N)).reshape(-1), mode="drop")
-    owner = jnp.where(free_mask, -1, owner)
+    owner = jnp.where(ret_mask, -1, owner)
 
     new_top = top_after_alloc + freed_per_class
     used = used_after_alloc - freed_per_class
@@ -152,6 +161,7 @@ def dense_reference_step(state, queue, max_blocks_per_req=1):
         free_stack=new_stack,
         free_top=new_top,
         owner=owner,
+        refcount=refcount,
         capacity=state.capacity,
         alloc_count=state.alloc_count + taken_per_class,
         free_count=state.free_count + freed_per_class,

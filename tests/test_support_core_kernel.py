@@ -13,7 +13,9 @@ from _hypothesis_compat import given, needs_hypothesis, settings, st
 from repro.core.freelist import FreeListState, init_freelist, validate_freelist
 from repro.core.packets import (FREE_ALL, OP_FREE, OP_MALLOC, OP_NOP,
                                 OP_REFILL, make_queue)
-from repro.core.support_core import StepStats, support_core_step
+from repro.core.support_core import StepStats
+
+from _raw_step import support_core_step
 
 KERNEL = "kernel-interpret"
 
