@@ -24,7 +24,13 @@ when any gated metric regresses:
 * ``hit_admit_speedup`` — hit-admission latency ratio, gather-copy over
   alias splice: fail on a relative drop beyond 40% (it is wall-clock, so
   the tolerance is generous; a real regression — alias admissions doing
-  hidden copies — collapses it to ~1x).
+  hidden copies — collapses it to ~1x);
+* ``decode_compiles`` — XLA compilations of the decode step across the
+  whole N=4 multi-engine scenario: the shared tenant-agnostic executable
+  (DESIGN.md §13) pays exactly ONE, so ANY growth above the baseline's 1
+  fails (a second compile means the traced-class-id calling convention
+  leaked a shard-specific constant back into the jaxpr; the pre-§13
+  behavior was one compile per shard, i.e. 4).
 
 A gated key MISSING from the committed baseline (a freshly introduced
 metric whose baseline predates it) is a loud warning, not a failure —
@@ -70,6 +76,7 @@ GATES = (
     ("prefill_tokens_saved", "rel_drop", 0.15),
     ("cache_hit_copy_bytes", "abs_grow", 0.0),
     ("hit_admit_speedup", "rel_drop", 0.40),
+    ("decode_compiles", "abs_grow", 0.0),
 )
 
 

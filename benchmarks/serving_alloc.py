@@ -175,6 +175,10 @@ def _run_multi(cfg, params, n_engines: int = 2, quantum: int = 4) -> dict:
         "preemptions": st.preemptions,
         "cross_engine_burst_occupancy": st.cross_engine_burst_occupancy,
         "decode_steps": st.decode_steps,
+        # ONE tenant-agnostic decode executable for all N shards (§13):
+        # decode_compiles must stay 1 regardless of n_engines (was N)
+        "decode_compiles": st.decode_compiles,
+        "decode_compile_us": st.decode_compile_us,
         "wall_s": wall_s,
         "per_tenant_rollup": me.tenant_rollup(),
     }
@@ -315,7 +319,7 @@ def run() -> list[str]:
 
     # N engines on ONE shared AllocService with burst-window batching and
     # preemption (DESIGN.md §10) — reuses the mixtral params already built.
-    multi = _run_multi(cfg, params, n_engines=2)
+    multi = _run_multi(cfg, params, n_engines=4)
 
     # Prefix cache (DESIGN.md §11–12): shared-system-prompt churn with
     # demote-on-completion + prefill-skip admission, off/copy/alias checked
@@ -359,6 +363,9 @@ def run() -> list[str]:
         "engines": multi["engines"],
         "preemptions": multi["preemptions"],
         "cross_engine_burst_occupancy": multi["cross_engine_burst_occupancy"],
+        # --- one decode executable across all shards (DESIGN.md §13) ---
+        "decode_compiles": multi["decode_compiles"],
+        "decode_compile_wall_us": multi["decode_compile_us"],
         "multi_engine": multi,
         # --- prefix cache: prefill skip via surviving KV pages (§11) ---
         "cache_hit_rate": pc["cache_hit_rate"],
@@ -407,7 +414,9 @@ def run() -> list[str]:
                 f"{multi['windows']} windows "
                 f"({multi['window_commits']} merged commits, "
                 f"occupancy={multi['cross_engine_burst_occupancy']:.2f}) "
-                f"preemptions={multi['preemptions']}"),
+                f"preemptions={multi['preemptions']} "
+                f"decode_compiles={multi['decode_compiles']} "
+                f"compile_wall_ms={multi['decode_compile_us'] / 1e3:.0f}"),
         csv_row("serving/prefix_cache", pc["prefill_tokens_saved"],
                 f"prefill tokens saved over {pc['requests']} shared-prefix "
                 f"reqs, hit_rate={pc['cache_hit_rate']:.2f} "

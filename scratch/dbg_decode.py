@@ -28,7 +28,7 @@ print("valid[0,:9]:", np.asarray(valid[0, :9]))
 
 # now decode token 7 and compare against forward over toks[:8]
 eng.state = eng.state._replace(tokens=eng.state.tokens.at[0].set(int(toks[7])))
-st2, logits_d, _ = eng._decode(eng.params, eng.state)
+st2, logits_d, _ = eng._decode(eng.params, eng.state, eng._class_ids)
 ref = forward(params, cfg, jnp.asarray(toks[:8])[None], remat=False)
 print("logits err:", np.abs(np.asarray(logits_d[0]) - np.asarray(ref[0, -1])).max(),
       "scale:", np.abs(np.asarray(ref[0,-1])).max())

@@ -3,7 +3,8 @@ sys.path.insert(0, "/root/repo/src")
 import jax, jax.numpy as jnp
 import numpy as np
 from repro.core.paged_kv import (PagedKVConfig, init_paged_kv, admit_prefill,
-                                 decode_append, release_lanes, gather_kv, live_pages)
+                                 decode_append, release_lanes, gather_kv, live_pages,
+                                 paged_tenants)
 from repro.core.freelist import validate_freelist
 
 cfg = PagedKVConfig(num_kv_layers=2, kv_heads=2, head_dim=4, page_size=4,
@@ -21,7 +22,7 @@ k0 = rng.randn(2, 8, 2, 4).astype(np.float32); v0 = rng.randn(2, 8, 2, 4).astype
 st, stats = admit_prefill(cfg, st, jnp.int32(0), jnp.asarray(k0), jnp.asarray(v0), jnp.int32(5))
 dense_k[0, :, :5] = k0[:, :5]; dense_v[0, :, :5] = v0[:, :5]; lens[0] = 5
 validate_freelist(st.alloc)
-print("after prefill: live pages (expect 2):", live_pages(st), "seq_lens:", st.seq_lens)
+print("after prefill: live pages (expect 2):", live_pages(st, paged_tenants(cfg)), "seq_lens:", st.seq_lens)
 
 # prefill lane 2 with 4 tokens
 k2 = rng.randn(2, 8, 2, 4).astype(np.float32); v2 = rng.randn(2, 8, 2, 4).astype(np.float32)
@@ -36,7 +37,7 @@ for t in range(6):
         dense_k[lane, :, lens[lane]] = nk[lane]; dense_v[lane, :, lens[lane]] = nv[lane]
         lens[lane] += 1
 validate_freelist(st.alloc)
-print("after decode: seq_lens (expect [11 0 10]):", st.seq_lens, "live pages:", live_pages(st))
+print("after decode: seq_lens (expect [11 0 10]):", st.seq_lens, "live pages:", live_pages(st, paged_tenants(cfg)))
 
 # compare gather vs dense
 for layer in range(2):
@@ -52,7 +53,7 @@ print("gather matches dense reference")
 # release lane 0 -> pages freed next step usable
 st, _ = release_lanes(cfg, st, jnp.array([True, False, False]))
 validate_freelist(st.alloc)
-print("after release lane0: live pages (expect 3):", live_pages(st), "active:", st.active)
+print("after release lane0: live pages (expect 3):", live_pages(st, paged_tenants(cfg)), "active:", st.active)
 
 # --- SWA window recycling ---
 cfg2 = PagedKVConfig(num_kv_layers=1, kv_heads=1, head_dim=2, page_size=4,
@@ -64,7 +65,7 @@ peak_pages = []
 for t in range(24):
     nk = rng.randn(1, 1, 1, 2).astype(np.float32)
     st2, _ = decode_append(cfg2, st2, jnp.asarray(nk), jnp.asarray(nk), window=8)
-    peak_pages.append(int(live_pages(st2)))
+    peak_pages.append(int(live_pages(st2, paged_tenants(cfg2))))
     validate_freelist(st2.alloc)
 print("SWA live pages over time (bounded ~3):", peak_pages)
 assert max(peak_pages[6:]) <= 3, "window recycling failed to bound pages"

@@ -34,7 +34,8 @@ def check_arch(arch, n_prefill=7, n_decode=6, **admit_kw):
         # consumes toks[n_prefill + t] and predicts toks[n_prefill + t + 1]
         eng.state = eng.state._replace(
             tokens=eng.state.tokens.at[0].set(int(toks[n_prefill + t])))
-        eng.state, logits, stats = eng._decode(eng.params, eng.state)
+        eng.state, logits, stats = eng._decode(eng.params, eng.state,
+                                               eng._class_ids)
         upto = n_prefill + t + 1
         ref = forward(params, cfg, jnp.asarray(toks[:upto])[None], remat=False, **fkw)
         ref_last = np.asarray(ref[0, -1])

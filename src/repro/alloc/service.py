@@ -63,7 +63,12 @@ class TenantHandle(NamedTuple):
     """
 
     name: str
-    size_class: int
+    #: Size-class index.  A Python int on the host side; inside a
+    #: tenant-agnostic jitted step (DESIGN.md §13) handles carry TRACED
+    #: int32 scalars instead, so one executable serves every shard's
+    #: namespaced classes.  Everything downstream (builders, HMQ schedule,
+    #: policies, the fused kernel) treats it as data, never as a shape.
+    size_class: Union[int, jnp.ndarray]
     capacity: int
 
     @property
@@ -193,7 +198,11 @@ class BurstBuilder:
             args = jnp.where(mask, args, 0)
         self._ops.append(ops)
         self._lanes.append(lanes)
-        self._classes.append(jnp.full((n,), tenant.size_class, jnp.int32))
+        # broadcast, not fill: ``size_class`` may be a traced int32 scalar
+        # (the tenant-agnostic decode step, DESIGN.md §13) and must enter
+        # the queue as data rather than a trace-time constant
+        self._classes.append(jnp.broadcast_to(
+            jnp.asarray(tenant.size_class, jnp.int32), (n,)))
         self._args.append(args)
         ticket = Ticket(self._size, n)
         self._size += n

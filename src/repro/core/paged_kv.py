@@ -192,6 +192,34 @@ class PagedTenants(NamedTuple):
         return tuple(t for t in (self.kv, self.state, self.scratch)
                      if t is not None)
 
+    def class_id_array(self) -> jnp.ndarray:
+        """``[len(handles)]`` int32 — the namespaced size-class ids, in
+        handle order (kv, then state/scratch when configured).  The value a
+        shard passes into a tenant-agnostic decode step each call, so N
+        shards share ONE executable (DESIGN.md §13)."""
+        return jnp.asarray([t.size_class for t in self.handles], jnp.int32)
+
+    def with_class_ids(self, class_ids) -> "PagedTenants":
+        """This view with every handle's ``size_class`` replaced by the
+        matching element of ``class_ids`` (``[len(handles)]`` int32, handle
+        order — :meth:`class_id_array`'s layout).  Called inside a jitted
+        step with a traced operand, it yields handles whose class ids are
+        traced scalars: the burst builder then emits them as queue DATA
+        instead of baking one shard's constants into the executable.  The
+        service reference (host-side config: tenant table, policy, backend)
+        stays static — only the per-shard indices are traced."""
+        class_ids = jnp.asarray(class_ids, jnp.int32)
+        fields: dict = {"service": self.service}
+        idx = 0
+        for name in ("kv", "state", "scratch"):
+            t = getattr(self, name)
+            if t is not None:
+                fields[name] = t._replace(size_class=class_ids[idx])
+                idx += 1
+            else:
+                fields[name] = None
+        return PagedTenants(**fields)
+
 
 def _tenant_spec(cfg: PagedKVConfig) -> list[tuple[str, int]]:
     spec = [(KV_TENANT, cfg.num_pages)]
@@ -1163,11 +1191,16 @@ def gather_kv_window(
     return k, v, pos, valid
 
 
-def live_pages(state: PagedKVState, kv_class: int = KV_CLASS) -> jnp.ndarray:
+def live_pages(state: PagedKVState,
+               tenants: PagedTenants) -> jnp.ndarray:
     """Currently allocated KV pages (telemetry / blowup tracking).
-    ``kv_class`` selects the engine's namespaced class on a shared
-    multi-engine allocator state (default: the historical class 0)."""
-    return state.alloc.used[kv_class]
+
+    ``tenants`` is REQUIRED: it selects the engine's namespaced KV class on
+    a (possibly shared multi-engine) allocator state.  The old default to
+    the global ``KV_CLASS`` constant silently read engine-0's class on
+    namespaced shards — callers now thread their own handle set (the
+    single-engine default is ``paged_tenants(cfg)``)."""
+    return state.alloc.used[tenants.kv.size_class]
 
 
 def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):

@@ -44,12 +44,18 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from ...core.packets import FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL
 
 
 def _kernel(
-    # --- scheduled queue (in) ---
+    # --- scheduled queue (in): SCALAR-PREFETCH operands (DESIGN.md §13) —
+    # small int32 control words available in SMEM before the kernel body
+    # runs, the TPU analogue of the support-core reading its HMQ request
+    # ring ahead of touching metadata.  Crucially they are runtime DATA:
+    # namespaced size-class ids arrive here per launch (traced through the
+    # burst builder), so one compiled kernel serves every engine shard.
     op_ref,         # [Q] int32
     lane_ref,       # [Q] int32
     cls_ref,        # [Q] int32
@@ -216,6 +222,14 @@ def fused_step_kernel(
 ):
     """One fused launch for a whole scheduled HMQ burst.
 
+    The four queue vectors (op / lane / size_class / arg) ride as
+    SCALAR-PREFETCH operands (``pltpu.PrefetchScalarGridSpec``): prefetched
+    into SMEM before the body runs, and — being runtime operands rather
+    than compile-time constants — carrying whatever (possibly traced)
+    namespaced class ids the burst staged, so ONE compiled kernel serves
+    every engine shard (DESIGN.md §13).  Bit-identical to the previous
+    VMEM-operand layout in interpret mode (the differential suites).
+
     Returns ``(new_stack [C,N], new_top [C,1], new_owner [C,N],
     new_refcount [C,N], new_alloc [C,1], new_free [C,1], new_fail [C,1],
     new_used [C,1], new_peak [C,1], blocks [Q,R], ok [Q])``.
@@ -224,26 +238,31 @@ def fused_step_kernel(
     C, N = free_stack.shape
     R = max_per_req
     kernel = functools.partial(_kernel, num_classes=C, max_per_req=R)
-    q_spec = pl.BlockSpec((Q,), lambda i: (0,))
-    cn_spec = pl.BlockSpec((C, N), lambda i: (0, 0))
-    c1_spec = pl.BlockSpec((C, 1), lambda i: (0, 0))
+    # index maps receive (grid idx, *scalar_prefetch_refs); blocks ignore both
+    q_spec = pl.BlockSpec((Q,), lambda i, *_: (0,))
+    cn_spec = pl.BlockSpec((C, N), lambda i, *_: (0, 0))
+    c1_spec = pl.BlockSpec((C, 1), lambda i, *_: (0, 0))
     cn_shape = jax.ShapeDtypeStruct((C, N), jnp.int32)
     c1_shape = jax.ShapeDtypeStruct((C, 1), jnp.int32)
-    return pl.pallas_call(
-        kernel,
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,            # op, lane, size_class, arg
         grid=(1,),
-        in_specs=[q_spec, q_spec, q_spec, q_spec,
-                  cn_spec, c1_spec, cn_spec, cn_spec,
+        in_specs=[cn_spec, c1_spec, cn_spec, cn_spec,
                   c1_spec, c1_spec, c1_spec, c1_spec, c1_spec],
         out_specs=[cn_spec, c1_spec, cn_spec, cn_spec,
                    c1_spec, c1_spec, c1_spec, c1_spec, c1_spec,
-                   pl.BlockSpec((Q, R), lambda i: (0, 0)), q_spec],
+                   pl.BlockSpec((Q, R), lambda i, *_: (0, 0)), q_spec],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=[cn_shape, c1_shape, cn_shape, cn_shape,
                    c1_shape, c1_shape, c1_shape, c1_shape, c1_shape,
                    jax.ShapeDtypeStruct((Q, R), jnp.int32),
                    jax.ShapeDtypeStruct((Q,), jnp.int32)],
         interpret=interpret,
-    )(op, lane, size_class, arg,
+    )(op.astype(jnp.int32), lane.astype(jnp.int32),
+      size_class.astype(jnp.int32), arg.astype(jnp.int32),
       free_stack, free_top[:, None], owner, refcount,
       alloc_count[:, None], free_count[:, None], fail_count[:, None],
       used[:, None], peak_used[:, None])

@@ -102,7 +102,7 @@ def serve_loop(eng: ServingEngine, sched: Scheduler,
             print(f"step {step}: done={len(sched.finished)}/{len(requests)} "
                   f"waiting={len(sched.waiting)} "
                   f"live_pages={eng.live_pages} "
-                  f"peak={int(eng.state.paged.alloc.peak_used[0])}")
+                  f"peak={int(eng.state.paged.alloc.peak_used[eng.tenants.kv.size_class])}")
     if sched.waiting:
         print(f"WARNING: admission starved — {len(sched.waiting)} request(s) "
               f"not served (page budget {eng.free_pages} free - "
@@ -134,7 +134,11 @@ def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
           f"preemption={args.preemption} | "
           f"window_commits={st.window_commits} "
           f"cross_engine_burst_occupancy={st.cross_engine_burst_occupancy:.2f} "
-          f"preemptions={st.preemptions}")
+          f"preemptions={st.preemptions} | "
+          # one tenant-agnostic decode executable for all shards (§13):
+          # decode_compiles stays 1 however many engines are deployed
+          f"decode_compiles={st.decode_compiles} "
+          f"decode_compile_ms={st.decode_compile_us / 1e3:.0f}")
     for i, eng in enumerate(me.engines):
         s = eng.stats
         cache = (f" cache_hit_rate={s.cache_hit_rate:.2f} "
@@ -240,18 +244,21 @@ def main() -> None:
 
     a = eng.state.paged.alloc
     s = eng.stats
+    kv_cls = eng.tenants.kv.size_class
     if sched.failed:
         print(f"FAILED: {len(sched.failed)} request(s) rejected by the allocator")
     print(f"served {len(sched.finished)} requests in {steps} decode steps | "
           f"alloc_backend={eng.alloc_backend} alloc_policy={eng.alloc_policy} "
           f"stash={kvcfg.stash_size}/{kvcfg.stash_watermark}"
           f"/{kvcfg.stash_refill} | "
-          f"allocs={int(a.alloc_count[0])} frees={int(a.free_count[0])} "
-          f"fails={int(a.fail_count[0])} peak_pages={int(a.peak_used[0])} "
-          f"live={int(live_pages(eng.state.paged))} | "
+          f"allocs={int(a.alloc_count[kv_cls])} frees={int(a.free_count[kv_cls])} "
+          f"fails={int(a.fail_count[kv_cls])} peak_pages={int(a.peak_used[kv_cls])} "
+          f"live={int(live_pages(eng.state.paged, eng.tenants))} | "
           f"admit_bursts={s.hmq_admit_bursts} "
           f"({s.hmq_admit_bursts / max(s.admitted, 1):.2f}/seq) "
           f"prefill_compiles={s.prefill_compiles} "
+          f"decode_compiles={s.decode_compiles} "
+          f"decode_compile_ms={s.decode_compile_us / 1e3:.0f} "
           f"preemptions={s.preemptions} | "
           f"stash_hit_rate={s.stash_hit_rate:.2f} "
           f"decode_bursts/1k={s.hmq_bursts_per_1k_decode_steps:.0f} "

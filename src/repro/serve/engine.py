@@ -25,8 +25,9 @@ from ..core.paged_kv import PagedKVConfig
 from ..models import decode as dec
 from .scheduler import (SchedulerConfig, make_scheduler_config, pick_bucket,
                         release_packet_array)
-from .serve_step import (ServeState, init_serve_state, make_decode_step,
-                         make_family_prefill, recycle_window)
+from .serve_step import (CountingJit, ServeState, init_serve_state,
+                         make_decode_step, make_family_prefill,
+                         recycle_window)
 
 
 @dataclasses.dataclass
@@ -38,6 +39,12 @@ class EngineStats:
     alloc_failures: int = 0        # failed malloc packets (all families)
     hmq_admit_bursts: int = 0      # support-core steps issued for admission
     prefill_compiles: int = 0      # distinct prefill buckets compiled
+    # --- decode compile accounting (DESIGN.md §13) ---
+    # With traced class ids the decode executable is tenant-agnostic, so N
+    # shards sharing one jitted step report decode_compiles == 1 (each
+    # shard mirrors the SHARED executable's counter — not a per-shard sum).
+    decode_compiles: int = 0       # decode executables built (trace events)
+    decode_compile_us: float = 0.0  # trace+compile wall time of those builds
     # --- stash front-end telemetry (DESIGN.md §7) ---
     decode_bursts: int = 0         # decode steps that issued a support-core batch
     stash_hits: int = 0            # boundary pages served by the lane stash
@@ -194,7 +201,8 @@ class ServingEngine:
                  prefix_cache: bool = False,
                  eviction: Optional[str] = None,
                  cache_pages: Optional[int] = None,
-                 prefix_alias: Optional[str] = None):
+                 prefix_alias: Optional[str] = None,
+                 decode_fn=None):
         self.cfg = cfg
         self.kvcfg = kvcfg
         self.params = params
@@ -258,11 +266,20 @@ class ServingEngine:
             paged=pkv.init_paged_kv(kvcfg, policy=alloc_policy,
                                     alloc=alloc_state, tenants=self.tenants),
             tokens=jnp.zeros((kvcfg.max_lanes,), jnp.int32))
-        self._decode = jax.jit(make_decode_step(cfg, kvcfg,
-                                                alloc_backend=alloc_backend,
-                                                alloc_policy=alloc_policy,
-                                                tenants=self.tenants,
-                                                defer_refill=defer_refill))
+        # The decode step is TENANT-AGNOSTIC (DESIGN.md §13): this shard's
+        # namespaced class ids travel as a traced int32 operand per call,
+        # never as trace-time constants — so identical-config shards produce
+        # identical traces.  ``decode_fn`` installs a SHARED CountingJit
+        # (the multi-engine path: N shards, ONE executable, one compile);
+        # the default builds a private one (decode_compiles == 1 either way).
+        self._class_ids = self.tenants.class_id_array()
+        if decode_fn is not None:
+            self._decode = decode_fn
+        else:
+            self._decode = CountingJit(make_decode_step(
+                cfg, kvcfg, alloc_backend=alloc_backend,
+                alloc_policy=alloc_policy, tenants=self.tenants,
+                defer_refill=defer_refill, traced_classes=True))
         # recurrent admission seeds decode from the last prompt token, so the
         # vocab projection would be dead weight in the jitted prefill
         self._family_prefill = make_family_prefill(
@@ -707,10 +724,16 @@ class ServingEngine:
         drain (one merged commit per window — DESIGN.md §10)."""
         if self.defer_refill:
             self.state, logits, stats, pending = self._decode(
-                self.params, self.state)
+                self.params, self.state, self._class_ids)
             self.pending_ops.append(pending)
         else:
-            self.state, logits, stats = self._decode(self.params, self.state)
+            self.state, logits, stats = self._decode(self.params, self.state,
+                                                     self._class_ids)
+        # mirror the executable's compile accounting: with a shared
+        # multi-engine CountingJit every shard reports the SAME counter
+        # (1 executable for all of them), not a per-shard contribution
+        self.stats.decode_compiles = self._decode.compiles
+        self.stats.decode_compile_us = self._decode.compile_us
         self.stats.decode_steps += 1
         self.stats.alloc_failures += int(stats.failed)
         self.stats.decode_bursts += int(stats.bursts)
@@ -781,8 +804,7 @@ class ServingEngine:
 
     @property
     def live_pages(self) -> int:
-        return int(pkv.live_pages(self.state.paged,
-                                  kv_class=self.tenants.kv.size_class))
+        return int(pkv.live_pages(self.state.paged, self.tenants))
 
     @property
     def free_pages(self) -> int:

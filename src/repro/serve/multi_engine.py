@@ -62,6 +62,12 @@ class MultiEngineStats:
     window_slots_capacity: int = 0  # total slots across merged commits
     preemptions: int = 0           # lanes evicted across all shards
     decode_steps: int = 0          # engine-steps summed over shards
+    # --- decode compile accounting (DESIGN.md §13) ---
+    # DISTINCT decode executables built across the deployment: 1 with the
+    # shared tenant-agnostic step (however many shards), N when each shard
+    # is forced onto its own jit (the differential baseline).
+    decode_compiles: int = 0
+    decode_compile_us: float = 0.0  # trace+compile wall time, summed
 
     @property
     def cross_engine_burst_occupancy(self) -> float:
@@ -92,7 +98,8 @@ class MultiEngine:
                  prefix_cache: bool = False,
                  eviction: Optional[str] = None,
                  cache_pages: Optional[int] = None,
-                 prefix_alias: Optional[str] = None):
+                 prefix_alias: Optional[str] = None,
+                 shared_decode: bool = True):
         if n_engines < 1:
             raise ValueError("n_engines must be >= 1")
         if quantum < 1:
@@ -119,6 +126,22 @@ class MultiEngine:
                        for i in range(n_engines)]
         self.alloc = self.service.init_state()
 
+        # ONE decode executable for all N shards (DESIGN.md §13): the step
+        # is tenant-agnostic — each shard passes its namespaced class ids
+        # as a traced operand — so every shard can drive the SAME jitted
+        # callable and the deployment pays exactly one XLA compile (like
+        # the shared prefill cache below).  ``shared_decode=False`` forces
+        # the historical per-shard jit objects (N identical compiles) —
+        # the differential baseline the shared-executable tests diff
+        # against for bit-identical tokens.
+        shared_fn = None
+        if shared_decode:
+            from .serve_step import CountingJit, make_decode_step
+            shared_fn = CountingJit(make_decode_step(
+                cfg, kvcfg, alloc_backend=self.alloc_backend,
+                alloc_policy=self.alloc_policy, tenants=tenant_sets[0],
+                defer_refill=True, traced_classes=True))
+
         scfg = sched_cfg or make_scheduler_config(cfg, kvcfg)
         self.engines = [
             ServingEngine(cfg, kvcfg, params, dtype=dtype, sched_cfg=scfg,
@@ -131,7 +154,8 @@ class MultiEngine:
                           # cross-shard coordination (DESIGN.md §11)
                           prefix_cache=prefix_cache, eviction=eviction,
                           cache_pages=cache_pages,
-                          prefix_alias=prefix_alias)
+                          prefix_alias=prefix_alias,
+                          decode_fn=shared_fn)
             for ts in tenant_sets]
         # the prefill is allocator-free and identical across shards: share
         # the jit cache so N shards pay ONE compile per prefill bucket
@@ -272,9 +296,23 @@ class MultiEngine:
 
         self._flush_window(released, evicted)
         self.stats.windows += 1
+        self._sync_compile_stats()
         if validate:
             self.validate()
         return progressed
+
+    def _sync_compile_stats(self) -> None:
+        """Fold decode compile accounting into the cross-shard stats.
+
+        Counts DISTINCT executables: with the shared tenant-agnostic step
+        every shard holds the same CountingJit, so N shards contribute its
+        counter once (== 1); the forced per-shard mode sums N private
+        jits' counters (== N).  Same dedup for the compile wall time."""
+        distinct = {id(e._decode): e._decode for e in self.engines}
+        self.stats.decode_compiles = sum(
+            j.compiles for j in distinct.values())
+        self.stats.decode_compile_us = sum(
+            j.compile_us for j in distinct.values())
 
     def _flush_window(self, released: list[list[int]],
                       evicted: Optional[list[list[int]]] = None) -> None:

@@ -49,6 +49,10 @@ class Router:
             shard = self._cursor % len(loads)
             self._cursor += 1
             return shard
+        # Tie-break on the shard index so equal loads always resolve to the
+        # LOWEST-numbered shard: replaying the same arrival trace must route
+        # identically run to run (the differential tests depend on it), and
+        # a bare min() over a dict/generator would not promise stability.
         return min(range(len(loads)), key=lambda i: (loads[i], i))
 
 

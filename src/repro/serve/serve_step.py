@@ -7,6 +7,7 @@ all page mallocs (page-boundary lanes) and frees (slid-out SWA pages).
 """
 from __future__ import annotations
 
+import time
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -109,7 +110,8 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
                      hints=None, unroll: bool = False,
                      alloc_backend: Optional[str] = None,
                      alloc_policy: Optional[str] = None,
-                     tenants=None, defer_refill: bool = False):
+                     tenants=None, defer_refill: bool = False,
+                     traced_classes: bool = False):
     """Returns serve_step(params, state) -> (state, logits, DecodeStats).
 
     ``alloc_backend`` selects the support-core implementation for the
@@ -124,10 +126,19 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
     return a fourth :class:`~repro.core.paged_kv.PendingDecodeOps` value
     carrying the deferrable refill/flush traffic for the caller's burst
     window instead of committing it in-step (DESIGN.md §10).
+
+    ``traced_classes=True`` (static) returns the TENANT-AGNOSTIC form
+    ``serve_step(params, state, class_ids)`` (DESIGN.md §13): the shard's
+    namespaced size-class ids arrive per call as a traced int32 vector
+    (:meth:`~repro.core.paged_kv.PagedTenants.class_id_array` layout)
+    instead of baking into the trace as Python constants, so N engine
+    shards on one shared service can drive ONE jitted executable — the
+    only things still static are the tenant-set STRUCTURE (which handles
+    exist), the service's class count, and the backend/policy names.
     """
     window = recycle_window(cfg)
 
-    def _serve_step(params: dict, state: ServeState):
+    def _serve_step(params: dict, state: ServeState, step_tenants):
         hidden, new_kv, new_rec = decode_hidden(
             params, cfg, kvcfg, state.paged, state.rec, state.tokens,
             enc_out=state.enc_out, hints=hints, unroll=unroll)
@@ -141,7 +152,7 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
                 kvcfg, state.paged,
                 new_k.astype(kvcfg.dtype), new_v.astype(kvcfg.dtype),
                 window=window, backend=alloc_backend, policy=alloc_policy,
-                tenants=tenants, defer_refill=defer_refill)
+                tenants=step_tenants, defer_refill=defer_refill)
             if defer_refill:
                 paged, stats, pending = out
             else:
@@ -150,7 +161,7 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
             # attention-free (rwkv6): no pages; still advance lane clocks
             paged = state.paged._replace(
                 seq_lens=state.paged.seq_lens + state.paged.active.astype(jnp.int32))
-            stats = empty_decode_stats(kvcfg, tenants=tenants)
+            stats = empty_decode_stats(kvcfg, tenants=step_tenants)
             if defer_refill:
                 L = kvcfg.max_lanes
                 pending = PendingDecodeOps(
@@ -165,11 +176,61 @@ def make_decode_step(cfg: ArchConfig, kvcfg: PagedKVConfig,
             return new_state, logits, stats, pending
         return new_state, logits, stats
 
+    if traced_classes:
+        if tenants is None:
+            raise ValueError(
+                "traced_classes=True needs a tenants handle set (its "
+                "structure is static; only the class INDICES are traced)")
+
+        def serve_step(params: dict, state: ServeState, class_ids):
+            with use_hints(hints):
+                return _serve_step(params, state,
+                                   tenants.with_class_ids(class_ids))
+
+        return serve_step
+
     def serve_step(params: dict, state: ServeState):
         with use_hints(hints):
-            return _serve_step(params, state)
+            return _serve_step(params, state, tenants)
 
     return serve_step
+
+
+class CountingJit:
+    """``jax.jit`` wrapper that counts executable builds (trace events).
+
+    The compile-telemetry primitive behind ``decode_compiles`` (DESIGN.md
+    §13): a Python side-effect inside the wrapped function fires exactly
+    when jax (re)traces — i.e. when a new executable is built — so
+    ``compiles`` counts real compilations portably, without reaching into
+    jit-cache internals.  ``compile_us`` accumulates the wall time of those
+    tracing calls (trace + lowering + compile + the first execution —
+    the full cold-start cost a shard pays before its first token).
+
+    One shared instance across N engine shards is the shared-executable
+    proof: if every shard's call signature matches (which traced class ids
+    make true), ``compiles`` stays 1 however many shards step through it.
+    """
+
+    def __init__(self, fn):
+        self.compiles = 0
+        self.compile_us = 0.0
+        self._tracing = False
+
+        def _wrapped(*args):
+            self._tracing = True
+            return fn(*args)
+
+        self._jit = jax.jit(_wrapped)
+
+    def __call__(self, *args):
+        self._tracing = False
+        t0 = time.perf_counter()
+        out = self._jit(*args)
+        if self._tracing:
+            self.compiles += 1
+            self.compile_us += (time.perf_counter() - t0) * 1e6
+        return out
 
 
 class PrefillResult(NamedTuple):

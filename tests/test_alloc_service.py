@@ -248,6 +248,42 @@ def test_tenant_quota_hard_isolation():
     validate_freelist(state, tenant_names=svc.tenant_names())
 
 
+def test_rollup_report_aggregates_namespaces():
+    """Cross-engine rollup (DESIGN.md §10): two namespaced engine shards
+    under asymmetric load roll up to per-BASE-name totals that are exactly
+    the sum of the namespaced ``tenant_report`` rows."""
+    svc = AllocService(backend="jnp")
+    e0 = svc.register_tenants([("kv_pages", 8), ("state_slots", 4)],
+                              namespace="e0")
+    e1 = svc.register_tenants([("kv_pages", 6), ("state_slots", 4)],
+                              namespace="e1")
+    state = svc.init_state()
+
+    # asymmetric load: e0 takes 6 kv pages + 2 slots, e1 takes 2 kv pages,
+    # and e1 over-asks on slots so only IT records failures
+    b = svc.new_burst()
+    b.malloc(e0[0], jnp.arange(3, dtype=jnp.int32), n=2)
+    b.malloc(e0[1], jnp.arange(2, dtype=jnp.int32), n=1)
+    b.malloc(e1[0], jnp.arange(1, dtype=jnp.int32), n=2)
+    b.malloc(e1[1], jnp.arange(6, dtype=jnp.int32), n=1)   # wants 6 > 4
+    state, _ = svc.commit(state, b, max_blocks_per_req=2)
+
+    flat = svc.tenant_report(state)
+    roll = svc.rollup_report(state)
+    assert set(roll) == {"kv_pages", "state_slots"}
+    for base, rep in roll.items():
+        assert rep["engines"] == 2
+        for k in ("quota", "used", "peak_used", "alloc_count",
+                  "free_count", "fail_count"):
+            want = flat[f"e0/{base}"][k] + flat[f"e1/{base}"][k]
+            assert rep[k] == want, (base, k, rep[k], want)
+    # the asymmetry survives the rollup: totals, not copies of one shard
+    assert roll["kv_pages"]["quota"] == 14 and roll["kv_pages"]["used"] == 8
+    assert roll["state_slots"]["used"] == 6
+    assert roll["state_slots"]["fail_count"] == 2          # only e1 failed
+    assert flat["e0/state_slots"]["fail_count"] == 0
+
+
 def test_validate_freelist_reports_tenant_names():
     svc = _two_tenant_service()
     state = svc.init_state()

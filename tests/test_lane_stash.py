@@ -60,7 +60,7 @@ def test_admission_precharges_stash(rng):
     cfg = make_cfg()
     st, _ = admit(cfg, init_paged_kv(cfg), 0, 8, rng)
     # 2 KV pages in the table + stash_refill pre-charged in the stash
-    assert int(live_pages(st)) == 2 + cfg.stash_refill
+    assert int(live_pages(st, pkv.paged_tenants(cfg))) == 2 + cfg.stash_refill
     assert int(st.stash.depth[0]) == cfg.stash_refill
     assert int(st.stash.depth[1]) == 0
     validate_paged_kv(cfg, st)
@@ -159,7 +159,7 @@ def test_release_reclaims_stashed_pages(rng):
     st, _, _, _ = run_decode(cfg, st, 6, rng)
     assert int(st.stash.depth[0]) > 0           # stashed pages exist
     st, _ = release_lanes(cfg, st, jnp.array([True, False]))
-    assert int(live_pages(st)) == 0
+    assert int(live_pages(st, pkv.paged_tenants(cfg))) == 0
     assert int(st.stash.depth[0]) == 0
     assert (np.asarray(st.stash.pages[0]) == NO_BLOCK).all()
     a = st.alloc

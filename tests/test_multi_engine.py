@@ -72,6 +72,21 @@ def test_router_policies():
     assert ROUTER_POLICIES == ("round_robin", "least_loaded")
 
 
+def test_least_loaded_tie_break_is_stable_lowest_index():
+    """Equal loads must ALWAYS resolve to the lowest-numbered shard — the
+    replay-determinism contract the differential tests rely on."""
+    ll = Router("least_loaded")
+    assert ll.route([2, 2, 2, 2]) == 0           # full tie -> shard 0
+    assert ll.route([5, 2, 2, 7]) == 1           # interior tie -> first of them
+    assert ll.route([4, 9, 4]) == 0
+    assert ll.route([7, 3, 3, 3, 9]) == 1
+    # routing is stateless for least_loaded: repeating the same vector can
+    # never rotate through the tied shards
+    assert [ll.route([1, 1]) for _ in range(4)] == [0, 0, 0, 0]
+    # numpy loads (the shard_load path hands over python ints, but be safe)
+    assert ll.route(np.asarray([3, 1, 1])) == 1
+
+
 def test_shard_load_measure():
     scfg = SchedulerConfig(page_size=4, num_pages=16, max_lanes=2,
                            buckets=default_buckets(16))

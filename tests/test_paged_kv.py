@@ -8,7 +8,7 @@ import pytest
 from repro.core.freelist import validate_freelist
 from repro.core.paged_kv import (PagedKVConfig, admit_prefill, decode_append,
                                  gather_kv, init_paged_kv, live_pages,
-                                 release_lanes)
+                                 paged_tenants, release_lanes)
 
 
 @pytest.fixture
@@ -30,7 +30,7 @@ def test_prefill_decode_matches_dense(cfg, rng):
                           jnp.int32(5))
     dense_k[0, :, :5], dense_v[0, :, :5], lens[0] = k0[:, :5], v0[:, :5], 5
     validate_freelist(st.alloc)
-    assert int(live_pages(st)) == 2
+    assert int(live_pages(st, paged_tenants(cfg))) == 2
 
     k2 = rng.randn(2, 8, 2, 4).astype(np.float32)
     v2 = rng.randn(2, 8, 2, 4).astype(np.float32)
@@ -67,9 +67,9 @@ def test_release_recycles(cfg, rng):
     k = rng.randn(2, 8, 2, 4).astype(np.float32)
     st, _ = admit_prefill(cfg, st, jnp.int32(1), jnp.asarray(k), jnp.asarray(k),
                           jnp.int32(7))
-    assert int(live_pages(st)) == 2
+    assert int(live_pages(st, paged_tenants(cfg))) == 2
     st, _ = release_lanes(cfg, st, jnp.array([False, True, False]))
-    assert int(live_pages(st)) == 0
+    assert int(live_pages(st, paged_tenants(cfg))) == 0
     assert not bool(st.active[1])
     validate_freelist(st.alloc)
     a = st.alloc
@@ -88,7 +88,7 @@ def test_swa_window_recycling_bounds_pages(rng):
     for _ in range(24):
         nk = rng.randn(1, 1, 1, 2).astype(np.float32)
         st, _ = decode_append(cfg, st, jnp.asarray(nk), jnp.asarray(nk), window=8)
-        peaks.append(int(live_pages(st)))
+        peaks.append(int(live_pages(st, paged_tenants(cfg))))
         validate_freelist(st.alloc)
     assert max(peaks[6:]) <= 8 // 4 + 1  # window/page_size + 1 in steady state
 

@@ -101,7 +101,7 @@ def test_release_packets_matches_mask_release(kvcfg_state, rng):
     _assert_states_equal(via_mask, via_pkts)
     validate_freelist(via_pkts.alloc)
     # exactly lane 1's pages stay live
-    assert int(pkv.live_pages(via_pkts)) == 2
+    assert int(pkv.live_pages(via_pkts, pkv.paged_tenants(cfg))) == 2
     assert via_pkts.active.tolist() == [False, True, False]
     assert int(via_pkts.state_slot[1]) >= 0
     assert int(via_pkts.state_slot[0]) == int(via_pkts.state_slot[2]) == -1
@@ -236,7 +236,7 @@ def test_over_capacity_admission_fails_gracefully(kvcfg, rng):
         jnp.asarray(k), jnp.asarray([24, 8]))   # lane 0 oversized, lane 1 fine
     assert int(stats.failed) == 1
     assert st.active.tolist()[:2] == [False, True]
-    assert int(pkv.live_pages(st)) == 2         # only lane 1's pages
+    assert int(pkv.live_pages(st, pkv.paged_tenants(cfg))) == 2         # only lane 1's pages
     validate_freelist(st.alloc)
 
 

@@ -1,0 +1,100 @@
+"""One decode executable across all engine shards (DESIGN.md §13).
+
+The shared-executable acceptance proofs:
+
+* N=4 shards on one ``MultiEngine`` pay exactly ONE decode compile — the
+  decode step is tenant-agnostic (namespaced class ids ride in as traced
+  int32 scalars), so every shard reuses the same jitted executable;
+* forcing per-shard compilation (``shared_decode=False``) pays N compiles
+  and produces BIT-IDENTICAL tokens: threading class ids as traced values
+  changes compile accounting only, never the numerics;
+* both hold at quantum 1 and quantum 4 and under both the ``jnp`` and the
+  ``kernel-interpret`` allocator backends (the fused Pallas kernel takes
+  the class-id column via scalar prefetch);
+* compile wall-time telemetry (``decode_compile_us``) is populated and the
+  shared run never exceeds the forced run's trace+compile budget.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import init_params, make_paged_config
+from repro.serve.multi_engine import MultiEngine
+from repro.serve.scheduler import Request, make_scheduler_config
+
+ARCH = "deepseek-7b"    # dense: admission timing can't couple lane tokens
+N_SHARDS = 4
+MAX_NEW = 4
+
+BACKENDS = ("jnp", "kernel-interpret")
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config(ARCH)
+    params = init_params(cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+def _requests(cfg, seed, n=6):
+    rng = np.random.RandomState(seed)
+    plens = [8 + (i % 5) for i in range(n)]
+    return [Request(rid=i,
+                    tokens=rng.randint(0, cfg.vocab_size,
+                                       size=plens[i]).astype(np.int32),
+                    max_new_tokens=MAX_NEW)
+            for i in range(n)]
+
+
+def _serve(dense, *, quantum, backend, shared, seed=7):
+    cfg, params = dense
+    kvcfg = make_paged_config(cfg, seq_len=64, lanes=2, page_size=4,
+                              dtype=jnp.float32)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=32)
+    me = MultiEngine(cfg, kvcfg, params, n_engines=N_SHARDS,
+                     dtype=jnp.float32, sched_cfg=scfg, quantum=quantum,
+                     alloc_backend=backend, shared_decode=shared)
+    requests = _requests(cfg, seed)
+    me.serve(requests, max_new_tokens=MAX_NEW, validate=True)
+    assert not me.failed
+    tokens = {r.rid: list(r.output) for r in requests}
+    return me, tokens
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("quantum", [1, 4])
+def test_n4_shards_pay_one_decode_compile(dense, backend, quantum):
+    """The headline number: 4 shards, 1 decode compile (baseline: 4), and
+    the per-shard-compile differential is token-for-token identical."""
+    shared_me, shared_tok = _serve(dense, quantum=quantum, backend=backend,
+                                   shared=True)
+    assert shared_me.stats.decode_compiles == 1, (
+        f"{N_SHARDS} shards should share ONE decode executable, "
+        f"got {shared_me.stats.decode_compiles} compiles")
+    # every shard mirrors the SHARED executable's counter, not a local one
+    for eng in shared_me.engines:
+        assert eng.stats.decode_compiles == 1
+
+    forced_me, forced_tok = _serve(dense, quantum=quantum, backend=backend,
+                                   shared=False)
+    assert forced_me.stats.decode_compiles == N_SHARDS, (
+        "forced per-shard compilation must pay one compile per engine")
+    assert shared_tok == forced_tok, (
+        "traced class ids must be numerics-neutral: shared-executable "
+        "tokens diverged from the per-shard-compile run")
+
+    # wall-time telemetry is real and the shared run is never costlier
+    assert shared_me.stats.decode_compile_us > 0
+    assert forced_me.stats.decode_compile_us > 0
+    assert (shared_me.stats.decode_compile_us
+            <= forced_me.stats.decode_compile_us)
+
+
+def test_compile_counter_is_idempotent_across_windows(dense):
+    """Extra windows re-enter the executable without re-tracing: the counter
+    stays at 1 however long the serve runs."""
+    me, _ = _serve(dense, quantum=1, backend="jnp", shared=True)
+    assert me.stats.windows > 1          # multiple windows actually ran
+    assert me.stats.decode_compiles == 1
+    assert me.stats.decode_steps >= me.stats.windows
