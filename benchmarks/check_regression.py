@@ -30,7 +30,12 @@ when any gated metric regresses:
   (DESIGN.md §13) pays exactly ONE, so ANY growth above the baseline's 1
   fails (a second compile means the traced-class-id calling convention
   leaked a shard-specific constant back into the jaxpr; the pre-§13
-  behavior was one compile per shard, i.e. 4).
+  behavior was one compile per shard, i.e. 4);
+* ``p50_ttft_us`` / ``p99_ttft_us`` — open-loop time-to-first-token
+  percentiles under the seeded Poisson mix (DESIGN.md §14): fail on
+  relative growth beyond 50% (wall-clock on shared runners, so the
+  tolerance is generous; a real regression — admission stalling behind
+  allocator work, a lost prefill-compile share — multiplies the tail).
 
 A gated key MISSING from the committed baseline (a freshly introduced
 metric whose baseline predates it) is a loud warning, not a failure —
@@ -67,7 +72,9 @@ DEFAULT_BASELINE = Path(__file__).parent / "baseline" / "BENCH_serving.json"
 
 #: gated keys: (metric, kind, tolerance, skipped-warning list filled at
 #: check time).  kind "rel_drop" fails when fresh < baseline*(1-tol),
-#: "abs_drop" when fresh < baseline-tol, "abs_grow" when fresh > baseline+tol.
+#: "abs_drop" when fresh < baseline-tol, "abs_grow" when fresh > baseline+tol,
+#: "rel_grow" when fresh > baseline*(1+tol) (latency-style metrics where
+#: up is bad).
 GATES = (
     ("requests_per_s", "rel_drop", 0.15),
     ("stash_hit_rate", "abs_drop", 0.02),
@@ -77,6 +84,8 @@ GATES = (
     ("cache_hit_copy_bytes", "abs_grow", 0.0),
     ("hit_admit_speedup", "rel_drop", 0.40),
     ("decode_compiles", "abs_grow", 0.0),
+    ("p50_ttft_us", "rel_grow", 0.50),
+    ("p99_ttft_us", "rel_grow", 0.50),
 )
 
 
@@ -112,6 +121,9 @@ def check(fresh: dict, baseline: dict, rps_tol: float = 0.15,
         elif kind == "abs_grow" and f > b + tol:
             failures.append(f"{key} regressed {b:.3f} -> {f:.3f} "
                             f"(more than +{tol} growth)")
+        elif kind == "rel_grow" and f > b * (1.0 + tol):
+            failures.append(f"{key} regressed {b:.3f} -> {f:.3f} "
+                            f"(more than {tol:.0%} growth)")
     return failures
 
 

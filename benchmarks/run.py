@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows; run as
 ``PYTHONPATH=src python -m benchmarks.run [--only fig09]``.
 """
 import argparse
+import inspect
 import sys
 
 from . import (fig08_single_thread, fig09_multithread, fig10_l2_miss,
@@ -32,13 +33,20 @@ MODULES = {
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, help="comma-separated module keys")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="RNG seed threaded into seed-aware modules and "
+                         "recorded in their json output")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(MODULES)
     print("name,us_per_call,derived")
     failures = 0
     for key in keys:
         try:
-            for row in MODULES[key].run():
+            mod_run = MODULES[key].run
+            rows = mod_run(seed=args.seed) \
+                if "seed" in inspect.signature(mod_run).parameters \
+                else mod_run()
+            for row in rows:
                 print(row)
         except Exception as e:  # noqa: BLE001
             failures += 1

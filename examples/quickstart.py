@@ -160,3 +160,51 @@ print(f"  aliased_pages={s.aliased_pages} spliced by reference, "
       f"(copy mode would gather-copy every cached page)")
 assert s.aliased_pages > 0 and s.cache_hit_copy_bytes == 0
 assert zc.cache.pinned == 0      # every splice was released with its lane
+
+# --- 5. open-loop load + allocator-op trace record/replay (DESIGN.md §14) --
+
+# Open-loop traffic: requests arrive on a seeded Poisson schedule whether
+# or not the engines have finished the previous ones — the regime where
+# tail latency (p99 TTFT) means something.  While the run is live, a
+# TraceRecorder captures every merged allocator burst the support core
+# commits; afterwards the SAME op stream replays model-free through a
+# fresh AllocService and must land on EXACTLY the live per-tenant
+# counters.
+from repro.loadgen import (LoadgenSpec, build_workload, record_service,
+                           replay_sim_policies, run_open_loop)
+from repro.loadgen.trace import certify_complete, replay_trace, save_trace
+from repro.serve.multi_engine import MultiEngine
+
+# the stash keeps decode refills off the shared allocator, so the in-jit
+# emergency burst never goes live — what certify_complete() checks below
+kvcfg_lg = make_paged_config(cfg_d, seq_len=128, lanes=2, page_size=8,
+                             dtype=jnp.float32, stash_size=8,
+                             stash_watermark=2, stash_refill=4)
+scfg_lg = make_scheduler_config(cfg_d, kvcfg_lg, max_prompt_len=64)
+me = MultiEngine(cfg_d, kvcfg_lg, params_d, n_engines=2, dtype=jnp.float32,
+                 sched_cfg=scfg_lg, quantum=4)
+rec = record_service(me.service)               # attach the recorder seam
+spec = LoadgenSpec(n_requests=8, arrival="poisson", rate=0.2,
+                   prompt_min=6, prompt_cap=24, output_min=2, output_cap=6,
+                   priority_frac=0.25, seed=0)
+report = run_open_loop(me, build_workload(spec, cfg_d.vocab_size))
+me.service.recorder = None                     # detach before replaying
+trace = certify_complete(rec.finish(), me.engines)
+print(f"\nopen-loop poisson: {report.completed} done in {report.windows} "
+      f"windows, p50/p99 TTFT = {report.p50_ttft_us:.0f}/"
+      f"{report.p99_ttft_us:.0f}us, queue depth max {report.queue_depth_max}")
+print(f"trace: {trace.bursts} bursts ({trace.ops} ops, "
+      f"{trace.windows} windows), complete={trace.header['complete']}")
+
+# replay the tracefile through the live policy — counters must be EXACT —
+# and through the paper's sim policies for a what-if cycle estimate
+save_trace(trace, "/tmp/quickstart.alloctrace")
+res = replay_trace(trace)
+assert res.report == me.service.tenant_report(me.alloc)
+print(f"replay: {res.bursts} bursts in {res.wall_s:.3f}s "
+      f"({res.signatures} compiled signatures), counters EXACT")
+for name, row in replay_sim_policies(
+        trace, policies=("speedmalloc", "tcmalloc")).items():
+    print(f"  sim {name}: {row['mallocs']} mallocs, "
+          f"{row['shared_trips']} shared trips, "
+          f"est {row['est_cycles']:.0f} cycles")

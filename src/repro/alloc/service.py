@@ -273,6 +273,13 @@ class AllocService:
         self._policy_name = policy
         self._backend = backend
         self._tenants: dict[str, TenantHandle] = {}
+        #: Optional allocator-op trace recorder (``repro.loadgen.trace``).
+        #: When set, every eager commit / retag / refcount-bump is appended
+        #: to the recorder's event stream in state-mutation order; traced
+        #: (in-jit) commits are counted but not serialized — see
+        #: DESIGN.md §14 for why ``decode_bursts == 0`` certifies the
+        #: trace complete anyway.
+        self.recorder = None
 
     # ---------------- tenants ----------------
 
@@ -405,6 +412,8 @@ class AllocService:
         blocks = jnp.asarray(blocks, jnp.int32)
         if blocks.size == 0:
             return state
+        if self.recorder is not None:
+            self.recorder.on_retag(tenant.size_class, blocks, new_owner)
         owner = state.owner.at[tenant.size_class, blocks].set(
             jnp.int32(new_owner), mode="drop")
         return state._replace(owner=owner)
@@ -431,6 +440,8 @@ class AllocService:
         blocks = jnp.asarray(blocks, jnp.int32)
         if blocks.size == 0:
             return state
+        if self.recorder is not None:
+            self.recorder.on_bump(tenant.size_class, blocks, delta)
         refcount = state.refcount.at[tenant.size_class, blocks].add(
             jnp.int32(delta), mode="drop")
         return state._replace(refcount=refcount)
@@ -453,6 +464,8 @@ class AllocService:
         """
         queue = burst.build_queue() if isinstance(burst, BurstBuilder) \
             else burst
+        if self.recorder is not None:
+            self.recorder.on_commit(queue, max_blocks_per_req)
         if self._tenants and state.num_classes != self.num_classes:
             # Tenant-table growth after init_state (or a state from another
             # service) would silently mis-route classes; fail loudly instead.

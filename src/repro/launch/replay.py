@@ -1,0 +1,63 @@
+"""Trace replay launcher: ``python -m repro.launch.replay TRACE [...]``.
+
+Drives a recorded allocator-op tracefile (``launch.serve --loadgen ...
+--record-trace FILE``, or ``repro.loadgen.trace.save_trace``) through the
+model-free ``AllocService`` harness — no model forward, so million-request
+sweeps over policies/backends run in seconds — and optionally through the
+sim's pluggable policies (``--sim``), the ZODB "one tracefile, many
+simulators" idiom (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import argparse
+
+from ..alloc import ALLOC_POLICIES
+from ..core.support_core import ALLOC_BACKENDS
+from ..loadgen.trace import load_trace, replay_sim_policies, replay_trace
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trace", help="tracefile written by save_trace / "
+                                  "--record-trace")
+    ap.add_argument("--policy", default=None, choices=list(ALLOC_POLICIES),
+                    help="override the recorded allocator policy "
+                         "(what-if sweep)")
+    ap.add_argument("--backend", default=None, choices=list(ALLOC_BACKENDS),
+                    help="override the recorded backend")
+    ap.add_argument("--sim", default=None, metavar="POLICIES",
+                    help="ALSO replay through comma-separated sim policies "
+                         "(e.g. 'speedmalloc,tcmalloc,mimalloc')")
+    ap.add_argument("--threads", type=int, default=8,
+                    help="sim thread count for --sim lowering")
+    args = ap.parse_args()
+
+    trace = load_trace(args.trace)
+    h = trace.header
+    print(f"{args.trace}: v{h['version']} policy={h['policy']} "
+          f"backend={h['backend']} tenants={len(h['tenants'])} "
+          f"bursts={trace.bursts} ({trace.live_bursts} live, "
+          f"{trace.ops} ops) windows={trace.windows} "
+          f"complete={h['complete']}")
+    res = replay_trace(trace, policy=args.policy, backend=args.backend)
+    print(f"replayed {res.bursts} bursts ({res.live_bursts} live) in "
+          f"{res.wall_s:.2f}s ({res.signatures} compiled signature(s)) "
+          f"policy={args.policy or h['policy']} "
+          f"backend={args.backend or h['backend']}")
+    for name, rep in res.report.items():
+        print(f"  {name}: used={rep['used']}/{rep['quota']} "
+              f"peak={rep['peak_used']} allocs={rep['alloc_count']} "
+              f"frees={rep['free_count']} fails={rep['fail_count']}")
+    if args.sim:
+        rows = replay_sim_policies(trace, policies=args.sim.split(","),
+                                   threads=args.threads)
+        print(f"sim-policy sweep ({args.threads} threads):")
+        for name, r in rows.items():
+            print(f"  {name}: mallocs={r['mallocs']} frees={r['frees']} "
+                  f"fast_hits={r['fast_hits']} "
+                  f"shared_trips={r['shared_trips']} "
+                  f"est_cycles={r['est_cycles']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -15,6 +15,14 @@ sets on ONE shared AllocService, an async decode loop that merges every
 shard's deferrable allocator traffic into one commit per ``--quantum``-step
 burst window, and (with ``--preemption``) scheduler eviction of
 lowest-priority lanes under pool pressure.
+
+``--loadgen poisson|bursty|diurnal`` replaces the closed-loop drain with
+the OPEN-loop driver (DESIGN.md §14): a seeded arrival process with
+heavy-tailed lengths submits requests by virtual arrival time regardless
+of completion, and the run reports p50/p90/p99 time-to-first-token,
+per-token latency, and queue depth instead of just throughput.
+``--record-trace FILE`` additionally serializes the allocator-op stream to
+a versioned tracefile for model-free replay (``repro.loadgen.trace``).
 """
 from __future__ import annotations
 
@@ -108,6 +116,53 @@ def serve_loop(eng: ServingEngine, sched: Scheduler,
               f"not served (page budget {eng.free_pages} free - "
               f"{sched.scfg.page_reserve} reserve cannot fit the next one)")
     return step
+
+
+def serve_loadgen(cfg, kvcfg, params, scfg, args) -> None:
+    """Open-loop path of the launcher (DESIGN.md §14): seeded arrivals,
+    virtual-time submission, tail-latency report, optional trace record."""
+    from ..loadgen import LoadgenSpec, build_workload, run_open_loop
+    from ..loadgen.trace import record_service, save_trace
+
+    me = MultiEngine(cfg, kvcfg, params, n_engines=args.engines,
+                     dtype=jnp.float32, sched_cfg=scfg,
+                     quantum=args.quantum, preemption=args.preemption,
+                     router=args.router, alloc_backend=args.alloc_backend,
+                     alloc_policy=args.alloc_policy,
+                     prefix_cache=args.prefix_cache == "on",
+                     eviction=args.eviction,
+                     cache_pages=args.cache_pages,
+                     prefix_alias=args.prefix_alias)
+    rec = record_service(me.service) if args.record_trace else None
+    spec = LoadgenSpec(n_requests=args.requests, arrival=args.loadgen,
+                       rate=args.rate, priority_frac=args.priority_frac,
+                       shared_prefix_frac=args.shared_prefix_frac,
+                       output_cap=args.max_new_tokens, seed=args.seed)
+    timed = build_workload(spec, cfg.vocab_size)
+    report = run_open_loop(me, timed, max_windows=args.max_windows,
+                           verbose=True)
+    print(f"open-loop {spec.arrival} rate={spec.rate}/step seed={spec.seed}: "
+          f"completed={report.completed} failed={report.failed} "
+          f"stranded={report.stranded} in {report.windows} windows "
+          f"({report.wall_s:.1f}s)")
+    print(f"  TTFT p50={report.p50_ttft_us / 1e3:.1f}ms "
+          f"p90={report.p90_ttft_us / 1e3:.1f}ms "
+          f"p99={report.p99_ttft_us / 1e3:.1f}ms "
+          f"(virtual: p50={report.p50_ttft_steps:.1f} "
+          f"p99={report.p99_ttft_steps:.1f} steps)")
+    print(f"  per-token p50={report.p50_tpot_us / 1e3:.1f}ms "
+          f"p99={report.p99_tpot_us / 1e3:.1f}ms | "
+          f"queue depth mean={report.queue_depth_mean:.1f} "
+          f"max={report.queue_depth_max}")
+    if rec is not None:
+        me.service.recorder = None
+        trace = rec.finish(
+            complete=sum(e.stats.decode_bursts for e in me.engines) == 0)
+        save_trace(trace, args.record_trace)
+        print(f"  trace: {trace.bursts} bursts ({trace.live_bursts} live, "
+              f"{trace.ops} ops) {trace.windows} windows -> "
+              f"{args.record_trace} complete={trace.header['complete']} "
+              f"(replay: python -m repro.launch.replay {args.record_trace})")
 
 
 def serve_multi(cfg, kvcfg, params, scfg, requests, args) -> None:
@@ -213,6 +268,24 @@ def main() -> None:
                          "cached K/V into fresh lane pages, 'alias' splices "
                          "the cache pages into the lane's block table with a "
                          "refcount bump — zero copy (DESIGN.md §12)")
+    ap.add_argument("--loadgen", default="off",
+                    choices=["off", "poisson", "bursty", "diurnal"],
+                    help="open-loop arrival process (DESIGN.md §14); "
+                         "anything but 'off' drives the multi-engine loop "
+                         "by virtual arrival time and reports TTFT "
+                         "percentiles instead of closed-loop throughput")
+    ap.add_argument("--rate", type=float, default=0.15,
+                    help="open-loop mean arrivals per decode step")
+    ap.add_argument("--priority-frac", type=float, default=0.0,
+                    help="open-loop fraction of requests at priority 1")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="open-loop fraction of prompts opening with one "
+                         "common prefix (exercises --prefix-cache)")
+    ap.add_argument("--record-trace", default=None, metavar="FILE",
+                    help="serialize the allocator-op stream of the "
+                         "open-loop run to FILE for model-free replay")
+    ap.add_argument("--max-windows", type=int, default=None,
+                    help="open-loop window budget (smoke-run bound)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -223,6 +296,10 @@ def main() -> None:
                               stash_size=args.stash_size)
     params = init_params(cfg, dtype=jnp.float32)
     scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=128)
+    if args.loadgen != "off":
+        serve_loadgen(cfg, kvcfg, params, scfg, args)
+        return
+
     requests = synth_requests(cfg, args.requests, rng,
                               priority_every=args.priority_every)
 

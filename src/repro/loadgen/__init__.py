@@ -1,0 +1,35 @@
+"""`repro.loadgen` — open-loop traffic generation and allocator-op
+trace record/replay (DESIGN.md §14).
+
+Two coupled halves:
+
+* **Open-loop driver** (:mod:`.arrivals`, :mod:`.workload`,
+  :mod:`.driver`): seeded arrival processes (Poisson, bursty
+  Markov-modulated, diurnal ramp) composed with heavy-tailed
+  prompt/output-length samplers, shared-prefix and priority mixes; the
+  driver submits requests to a :class:`~repro.serve.multi_engine.MultiEngine`
+  by VIRTUAL arrival time regardless of completion, so queueing delay is
+  visible, and rolls per-request timestamps up into p50/p90/p99 TTFT,
+  per-token latency, and queue-depth-over-time.
+* **Trace record/replay** (:mod:`.trace`): a recorder seam on
+  ``AllocService.commit`` serializes each merged burst's logical op stream
+  to a versioned tracefile; the replayer drives the SAME tracefile through
+  a model-free ``AllocService`` harness (no model forward — million-request
+  allocator sweeps in seconds) or through the sim's pluggable policies.
+  Replayed per-tenant counters match the live engine EXACTLY.
+"""
+from .arrivals import (bounded_pareto_lengths, bursty_arrivals,
+                       diurnal_arrivals, poisson_arrivals)
+from .driver import OpenLoopReport, run_open_loop
+from .trace import (AllocTrace, TraceRecorder, load_trace, record_service,
+                    replay_sim_policies, replay_trace, save_trace,
+                    to_sim_trace)
+from .workload import LoadgenSpec, build_workload
+
+__all__ = [
+    "AllocTrace", "LoadgenSpec", "OpenLoopReport", "TraceRecorder",
+    "bounded_pareto_lengths", "build_workload", "bursty_arrivals",
+    "diurnal_arrivals", "load_trace", "poisson_arrivals", "record_service",
+    "replay_sim_policies", "replay_trace", "run_open_loop", "save_trace",
+    "to_sim_trace",
+]

@@ -1,0 +1,473 @@
+"""Allocator-op trace record/replay (DESIGN.md §14).
+
+The ZODB ``simul.py`` idiom: ONE tracefile, many pluggable consumers, one
+report format.  A :class:`TraceRecorder` hangs off ``AllocService.recorder``
+and serializes every EAGER state mutation in mutation order:
+
+* ``burst``  — one committed HMQ burst: the built request queue's four
+  int32 planes (op, lane, size_class, arg) plus ``max_blocks_per_req``
+  (grant semantics depend on it, so it is preserved per burst).
+* ``window`` — a burst-window boundary (``MultiEngine.step_window``),
+  so replay analysis can bucket traffic per window.
+* ``retag`` / ``bump`` — the control-plane ownership/refcount ops
+  (prefix-cache demotion and aliasing); they change which packets a later
+  FREE_ALL sweep matches and when refcounted frees hit zero, so replay is
+  only exact if they ride the stream in order.
+
+Traced (in-jit) commits cannot be serialized — their operands are tracer
+arrays with no values.  The recorder counts them (``traced_commits``)
+instead.  In the supported recording configuration (MultiEngine with
+``defer_refill=True``) the only in-jit commit is the gated emergency burst
+inside the decode step, which does ZERO state work while every shard's
+``decode_bursts == 0`` — exactly what :func:`certify_complete` checks, so a
+certified trace captures every state-changing allocator op.
+
+The replayer rebuilds the tenant table from the header, then drives the
+recorded bursts through a fresh ``AllocService`` with NO model forward.
+Queues are padded to the next power of two (NOP padding is
+behavior-neutral: scheduling sorts NOPs last and counters count non-NOP
+packets only), so a whole serving run compiles only a handful of
+``(Q, max_blocks_per_req)`` support-core signatures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+TRACE_MAGIC = b"REPROALLOCTRACE"
+TRACE_VERSION = 1
+
+# Event kind tags in the serialized stream.
+K_BURST = 1
+K_WINDOW = 2
+K_RETAG = 3
+K_BUMP = 4
+
+
+@dataclasses.dataclass
+class AllocTrace:
+    """An in-memory allocator-op trace: versioned header + event stream.
+
+    ``header`` keys: ``version``, ``policy``, ``backend`` (the service's
+    resolved defaults at record time), ``tenants`` (``[[name, capacity],
+    ...]`` in size-class order — the replayer re-registers them verbatim),
+    ``traced_commits``, ``complete``.
+
+    ``events`` entries (kind-tagged tuples):
+
+    * ``("burst", R, op, lane, size_class, arg)`` — four ``[Q]`` int32
+      arrays, R = max_blocks_per_req
+    * ``("window",)``
+    * ``("retag", size_class, blocks, new_owner)``
+    * ``("bump", size_class, blocks, delta)``
+    """
+
+    header: dict
+    events: list
+
+    @property
+    def bursts(self) -> int:
+        return sum(1 for ev in self.events if ev[0] == "burst")
+
+    @property
+    def live_bursts(self) -> int:
+        """Bursts carrying at least one non-NOP packet."""
+        return sum(1 for ev in self.events
+                   if ev[0] == "burst" and bool(np.any(ev[2] != 0)))
+
+    @property
+    def windows(self) -> int:
+        return sum(1 for ev in self.events if ev[0] == "window")
+
+    @property
+    def ops(self) -> int:
+        """Total live (non-NOP) packets across every recorded burst."""
+        return sum(int(np.sum(ev[2] != 0)) for ev in self.events
+                   if ev[0] == "burst")
+
+
+def _is_traced(x) -> bool:
+    import jax
+    return isinstance(x, jax.core.Tracer)
+
+
+class TraceRecorder:
+    """Appends every eager allocator op on one ``AllocService`` to an
+    event list, in state-mutation order.  Attach via
+    :func:`record_service`; detach by resetting ``service.recorder``."""
+
+    def __init__(self, service):
+        self.service = service
+        self.events: list = []
+        self.traced_commits = 0
+
+    # -- AllocService hooks (see service.py seams) --
+
+    def on_commit(self, queue, max_blocks_per_req: int) -> None:
+        if _is_traced(queue.op):
+            # In-jit commit: operands are tracers, nothing to serialize.
+            # With defer_refill + an adequate stash this is the gated
+            # all-NOP emergency burst (zero state work); certify_complete
+            # proves it stayed that way.
+            self.traced_commits += 1
+            return
+        self.events.append((
+            "burst", int(max_blocks_per_req),
+            np.asarray(queue.op, np.int32).copy(),
+            np.asarray(queue.lane, np.int32).copy(),
+            np.asarray(queue.size_class, np.int32).copy(),
+            np.asarray(queue.arg, np.int32).copy(),
+        ))
+
+    def on_retag(self, size_class, blocks, new_owner) -> None:
+        if _is_traced(blocks) or _is_traced(size_class):
+            self.traced_commits += 1
+            return
+        self.events.append(("retag", int(size_class),
+                            np.asarray(blocks, np.int32).copy(),
+                            int(new_owner)))
+
+    def on_bump(self, size_class, blocks, delta) -> None:
+        if _is_traced(blocks) or _is_traced(size_class):
+            self.traced_commits += 1
+            return
+        self.events.append(("bump", int(size_class),
+                            np.asarray(blocks, np.int32).copy(),
+                            int(delta)))
+
+    def mark_window(self) -> None:
+        """Burst-window boundary (called by ``MultiEngine.step_window``)."""
+        self.events.append(("window",))
+
+    # -- finishing --
+
+    def finish(self, complete: Optional[bool] = None) -> AllocTrace:
+        """Snapshot the recorded stream into an :class:`AllocTrace`.
+
+        ``complete`` marks whether the stream provably captured every
+        state-changing op (see :func:`certify_complete`); ``None`` means
+        "not certified".
+        """
+        svc = self.service
+        header = {
+            "version": TRACE_VERSION,
+            "policy": svc.resolve_policy().name,
+            "backend": svc.resolve_backend(policy=svc.resolve_policy()),
+            "tenants": [[t.name, int(t.capacity)] for t in svc.tenants],
+            "traced_commits": self.traced_commits,
+            "complete": complete,
+        }
+        return AllocTrace(header=header, events=list(self.events))
+
+
+def record_service(service) -> TraceRecorder:
+    """Attach a fresh recorder to ``service`` and return it."""
+    rec = TraceRecorder(service)
+    service.recorder = rec
+    return rec
+
+
+def certify_complete(trace: AllocTrace, engines: Sequence) -> AllocTrace:
+    """Mark ``trace`` complete iff no shard issued a LIVE in-jit burst.
+
+    The only unserializable commit is the gated emergency burst inside the
+    decode step; ``EngineStats.decode_bursts`` counts exactly the LIVE ones
+    (a gated all-NOP burst does zero state work).  Raises if any shard
+    escalated to the support core mid-decode — such a run's trace would
+    silently drop allocator work.
+    """
+    leaked = sum(int(e.stats.decode_bursts) for e in engines)
+    if leaked:
+        raise ValueError(
+            f"trace incomplete: {leaked} live in-jit decode burst(s) were "
+            f"not serializable; record with defer_refill=True and a stash "
+            f"deep enough that decode never escalates mid-step")
+    trace.header["complete"] = True
+    return trace
+
+
+# ---------------- tracefile serialization ----------------
+
+def save_trace(trace: AllocTrace, path) -> None:
+    """Write the versioned binary tracefile (format: DESIGN.md §14)."""
+    header = json.dumps(trace.header).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(TRACE_MAGIC)
+        f.write(struct.pack("<BI", TRACE_VERSION, len(header)))
+        f.write(header)
+        for ev in trace.events:
+            kind = ev[0]
+            if kind == "burst":
+                _, r, op, lane, cls, arg = ev
+                f.write(struct.pack("<BII", K_BURST, op.shape[0], r))
+                for plane in (op, lane, cls, arg):
+                    f.write(np.asarray(plane, "<i4").tobytes())
+            elif kind == "window":
+                f.write(struct.pack("<B", K_WINDOW))
+            elif kind == "retag":
+                _, cls, blocks, new_owner = ev
+                f.write(struct.pack("<BiIi", K_RETAG, cls,
+                                    blocks.shape[0], new_owner))
+                f.write(np.asarray(blocks, "<i4").tobytes())
+            elif kind == "bump":
+                _, cls, blocks, delta = ev
+                f.write(struct.pack("<BiIi", K_BUMP, cls,
+                                    blocks.shape[0], delta))
+                f.write(np.asarray(blocks, "<i4").tobytes())
+            else:
+                raise ValueError(f"unknown event kind {kind!r}")
+
+
+def load_trace(path) -> AllocTrace:
+    """Read a tracefile written by :func:`save_trace` (version-checked)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    if data[:len(TRACE_MAGIC)] != TRACE_MAGIC:
+        raise ValueError(f"{path}: not a repro allocator tracefile")
+    off = len(TRACE_MAGIC)
+    version, hlen = struct.unpack_from("<BI", data, off)
+    off += struct.calcsize("<BI")
+    if version != TRACE_VERSION:
+        raise ValueError(f"{path}: tracefile version {version} "
+                         f"unsupported (expected {TRACE_VERSION})")
+    header = json.loads(data[off:off + hlen].decode("utf-8"))
+    off += hlen
+    events: list = []
+    n = len(data)
+    while off < n:
+        kind = data[off]
+        off += 1
+        if kind == K_BURST:
+            q, r = struct.unpack_from("<II", data, off)
+            off += struct.calcsize("<II")
+            planes = []
+            for _ in range(4):
+                planes.append(np.frombuffer(data, "<i4", q, off)
+                              .astype(np.int32))
+                off += 4 * q
+            events.append(("burst", r, *planes))
+        elif kind == K_WINDOW:
+            events.append(("window",))
+        elif kind in (K_RETAG, K_BUMP):
+            cls, nb, x = struct.unpack_from("<iIi", data, off)
+            off += struct.calcsize("<iIi")
+            blocks = np.frombuffer(data, "<i4", nb, off).astype(np.int32)
+            off += 4 * nb
+            events.append(("retag" if kind == K_RETAG else "bump",
+                           cls, blocks, x))
+        else:
+            raise ValueError(f"{path}: corrupt event kind {kind} at "
+                             f"byte {off - 1}")
+    return AllocTrace(header=header, events=events)
+
+
+# ---------------- model-free AllocService replay ----------------
+
+@dataclasses.dataclass
+class ReplayResult:
+    """Outcome of one model-free replay: final state + counters."""
+
+    state: object                 # final FreeListState
+    report: dict                  # svc.tenant_report(state)
+    bursts: int                   # bursts committed
+    live_bursts: int              # of those, carrying >=1 non-NOP packet
+    windows: int
+    ops: int                      # live packets replayed
+    wall_s: float
+    signatures: int               # distinct (Q, R) executables compiled
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+#: jitted commit executables, keyed by (policy, backend, tenant spec) then
+#: (padded Q, max_blocks_per_req).  Module-level so replaying many traces
+#: (or one trace many times — the sweep case) compiles each signature ONCE
+#: per process: after the first replay, a whole re-replay is pure dispatch.
+_JIT_CACHE: dict = {}
+
+
+def replay_trace(trace: AllocTrace, policy: Optional[str] = None,
+                 backend: Optional[str] = None,
+                 unify_capacity: bool = True) -> ReplayResult:
+    """Drive a recorded trace through a fresh model-free ``AllocService``.
+
+    Rebuilds the tenant table from the header, then commits every recorded
+    burst (same queue contents, same ``max_blocks_per_req``) with NO model
+    forward — the million-request sweep path.  ``policy`` / ``backend``
+    override the recorded defaults for what-if sweeps (freelist vs bitmap,
+    jnp vs kernel); with neither overridden, the final per-tenant
+    alloc/free/fail counters are EXACTLY the live engine's.
+
+    Queues are padded with NOPs (behavior-neutral: scheduling sorts NOPs
+    last, counters count non-NOP packets only) — by default to ONE unified
+    power-of-two capacity across the whole trace (``unify_capacity``), so
+    the run compiles one support-core signature per distinct
+    ``max_blocks_per_req``; each signature is jitted once and cached.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..alloc.service import AllocService
+    from ..core.packets import RequestQueue
+
+    svc = AllocService(policy=policy or trace.header["policy"],
+                       backend=backend or trace.header["backend"])
+    for name, capacity in trace.header["tenants"]:
+        svc.register_tenant(name, capacity)
+    state = svc.init_state()
+
+    q_unified = _next_pow2(max(
+        [ev[2].shape[0] for ev in trace.events if ev[0] == "burst"] or [1]))
+
+    # the executable depends only on (policy, backend, tenant spec, Q, R):
+    # cache it module-wide so repeated replays are dispatch-only.  The
+    # cached closure keeps the svc it was first traced against alive; any
+    # identically-configured svc's states are interchangeable with it.
+    cache_key = (svc.resolve_policy().name, svc.resolve_backend(),
+                 tuple((n, int(c)) for n, c in trace.header["tenants"]))
+    steps = _JIT_CACHE.setdefault(cache_key, {})
+    used: set = set()
+
+    def step_for(q_pad: int, r: int):
+        used.add((q_pad, r))
+        fn = steps.get((q_pad, r))
+        if fn is None:
+            def run(state, queue, _r=r):
+                return svc.commit(state, queue, max_blocks_per_req=_r,
+                                  gated=True)
+            fn = jax.jit(run)
+            steps[(q_pad, r)] = fn
+        return fn
+
+    t0 = time.perf_counter()
+    bursts = live_bursts = windows = ops = 0
+    for ev in trace.events:
+        kind = ev[0]
+        if kind == "burst":
+            _, r, op, lane, cls, arg = ev
+            q0 = op.shape[0]
+            q_target = q_unified if unify_capacity \
+                else _next_pow2(max(q0, 1))
+            pad = q_target - q0
+            if pad:
+                op, lane, cls, arg = (np.pad(p, (0, pad))
+                                      for p in (op, lane, cls, arg))
+            queue = RequestQueue(op=jnp.asarray(op), lane=jnp.asarray(lane),
+                                 size_class=jnp.asarray(cls),
+                                 arg=jnp.asarray(arg))
+            state, _res = step_for(op.shape[0], r)(state, queue)
+            bursts += 1
+            live = int(np.sum(ev[2] != 0))
+            live_bursts += live > 0
+            ops += live
+        elif kind == "window":
+            windows += 1
+        elif kind == "retag":
+            _, cls, blocks, new_owner = ev
+            state = svc.retag_blocks(state, svc.tenants[cls], blocks,
+                                     new_owner)
+        elif kind == "bump":
+            _, cls, blocks, delta = ev
+            state = svc.bump_refcounts(state, svc.tenants[cls], blocks,
+                                       delta)
+    state = jax.block_until_ready(state)
+    wall = time.perf_counter() - t0
+    return ReplayResult(state=state, report=svc.tenant_report(state),
+                        bursts=bursts, live_bursts=live_bursts,
+                        windows=windows, ops=ops, wall_s=wall,
+                        signatures=len(used))
+
+
+# ---------------- sim-policy replay ----------------
+
+def to_sim_trace(trace: AllocTrace, threads: int = 8) -> dict:
+    """Lower a recorded op stream into the sim's logical-trace format.
+
+    A modeling bridge, not a bit-level one: the sim replays single-sized
+    malloc/free events per thread, so a malloc/refill granting ``n``
+    blocks becomes ``n`` op-1 events, a single free one op-2 event, and a
+    FREE_ALL expands to the lane's tracked holdings at that point.  Lanes
+    map onto ``threads`` sim threads round-robin; size classes fold mod
+    the sim's ``NUM_CLASSES``.  The result feeds
+    ``sim.engine.run_trace_counts`` for cross-policy sweeps
+    (:func:`replay_sim_policies`).
+    """
+    from ..core.packets import FREE_ALL, OP_FREE, OP_MALLOC, OP_REFILL
+    from ..sim.workloads import NUM_CLASSES
+
+    thread_l: list = []
+    op_l: list = []
+    cls_l: list = []
+    holdings: dict = {}
+    for ev in trace.events:
+        if ev[0] != "burst":
+            continue
+        _, _r, op, lane, cls, arg = ev
+        for o, ln, c, a in zip(op.tolist(), lane.tolist(), cls.tolist(),
+                               arg.tolist()):
+            if o not in (OP_MALLOC, OP_REFILL, OP_FREE):
+                continue
+            th = ln % threads if ln >= 0 else 0
+            sc = c % NUM_CLASSES
+            key = (c, ln)
+            if o in (OP_MALLOC, OP_REFILL):
+                n = max(int(a), 1)
+                holdings[key] = holdings.get(key, 0) + n
+                thread_l.extend([th] * n)
+                op_l.extend([1] * n)
+                cls_l.extend([sc] * n)
+            else:
+                n = holdings.pop(key, 0) if a == FREE_ALL else 1
+                if a != FREE_ALL:
+                    holdings[key] = max(holdings.get(key, 0) - 1, 0)
+                thread_l.extend([th] * n)
+                op_l.extend([2] * n)
+                cls_l.extend([sc] * n)
+    n = len(op_l)
+    return {
+        "thread": np.asarray(thread_l, np.int32),
+        "op": np.asarray(op_l, np.int32),
+        "size_class": np.asarray(cls_l, np.int32),
+        "foreign": np.zeros(n, np.int32),
+    }
+
+
+def replay_sim_policies(trace: AllocTrace,
+                        policies: Sequence[str] = ("speedmalloc",
+                                                   "speedmalloc-stash"),
+                        threads: int = 8) -> dict[str, dict]:
+    """Replay one trace through named sim policies (``ALL_POLICIES``).
+
+    Returns per-policy counter dicts plus an estimated cycle cost from the
+    calibrated cost model — the "same tracefile, many simulators, one
+    report" sweep of the ZODB idiom.
+    """
+    from ..sim.costmodel import replay_cycles
+    from ..sim.engine import run_trace_counts
+    from ..sim.policies import ALL_POLICIES
+
+    sim_trace = to_sim_trace(trace, threads=threads)
+    out: dict[str, dict] = {}
+    for name in policies:
+        cnt = run_trace_counts(ALL_POLICIES[name], sim_trace, threads)
+        out[name] = {
+            "mallocs": int(cnt.mallocs),
+            "frees": int(cnt.frees),
+            "fast_hits": int(cnt.fast_hits),
+            "accel_hits": int(cnt.accel_hits),
+            "shared_trips": int(cnt.shared_trips),
+            "mmaps": int(cnt.mmaps),
+            "peak_bytes": int(cnt.peak_bytes),
+            "est_cycles": float(replay_cycles(cnt, threads)),
+        }
+    return out

@@ -38,6 +38,7 @@ class EngineStats:
     preemptions: int = 0           # running lanes evicted by the scheduler
     alloc_failures: int = 0        # failed malloc packets (all families)
     hmq_admit_bursts: int = 0      # support-core steps issued for admission
+    hmq_release_bursts: int = 0    # eager release/eviction bursts issued
     prefill_compiles: int = 0      # distinct prefill buckets compiled
     # --- decode compile accounting (DESIGN.md §13) ---
     # With traced class ids the decode executable is tenant-agnostic, so N
@@ -385,6 +386,7 @@ class ServingEngine:
                 self.kvcfg, self.state.paged, jnp.asarray(pkts),
                 backend=self.alloc_backend, policy=self.alloc_policy,
                 tenants=self.tenants, extra_free=blocks)
+            self.stats.hmq_release_bursts += 1
             self._note_burst(stats.per_tenant, stats.queue_live,
                              stats.queue_capacity)
             self.state = self.state._replace(paged=paged)
@@ -786,6 +788,7 @@ class ServingEngine:
                                            policy=self.alloc_policy,
                                            tenants=self.tenants,
                                            extra_free=extra)
+        self.stats.hmq_release_bursts += 1
         self._note_burst(stats.per_tenant, stats.queue_live,
                          stats.queue_capacity)
         self.state = self.state._replace(paged=paged)

@@ -295,6 +295,10 @@ class MultiEngine:
                     sched.complete(finished)
 
         self._flush_window(released, evicted)
+        if self.service.recorder is not None:
+            # window boundary marker in the allocator-op trace — replay
+            # analysis buckets traffic per burst window (DESIGN.md §14)
+            self.service.recorder.mark_window()
         self.stats.windows += 1
         self._sync_compile_stats()
         if validate:

@@ -1,0 +1,392 @@
+"""`repro.loadgen` — arrival statistics, tracefile round-trip, and the
+record→replay differential (DESIGN.md §14).
+
+The load-bearing assertions:
+
+* seeded statistical sanity of the arrival processes (Poisson
+  interarrival mean/CV, heavy-tail cap, bursty regime alternation);
+* the allocator-op trace replayed through the model-free ``AllocService``
+  harness reproduces the live run's per-tenant
+  alloc/free/fail/used/peak counters EXACTLY — first at the service
+  level (random op streams, hypothesis), then against a real
+  multi-engine serving run, cross-validating burst counts the way
+  ``test_sim.py`` does for the sim's shared-trip counts.
+
+``REPRO_DEEP_FUZZ=1`` (the nightly CI job) adds a longer bursty churn
+sweep with preemption through the full record→replay differential.
+"""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.loadgen import (LoadgenSpec, bounded_pareto_lengths,
+                           bursty_arrivals, build_workload, diurnal_arrivals,
+                           poisson_arrivals, run_open_loop)
+from repro.loadgen.trace import (AllocTrace, certify_complete, load_trace,
+                                 record_service, replay_sim_policies,
+                                 replay_trace, save_trace, to_sim_trace)
+from repro.models import init_params, make_paged_config
+from repro.serve.multi_engine import MultiEngine
+from repro.serve.scheduler import make_scheduler_config
+
+from _hypothesis_compat import given, needs_hypothesis, settings, st
+
+ARCH = "deepseek-7b"   # dense + full attention: the cheapest real engine
+
+
+@pytest.fixture(scope="module")
+def dense():
+    cfg = smoke_config(ARCH)
+    params = init_params(cfg, dtype=jnp.float32)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# arrival processes: seeded statistical sanity
+# ---------------------------------------------------------------------------
+
+def test_poisson_interarrival_mean_and_cv():
+    rate = 0.25
+    times = poisson_arrivals(4000, rate, np.random.RandomState(7))
+    gaps = np.diff(np.concatenate([[0.0], times]))
+    assert abs(gaps.mean() - 1.0 / rate) / (1.0 / rate) < 0.1
+    cv = gaps.std() / gaps.mean()          # exponential: CV == 1
+    assert abs(cv - 1.0) < 0.1
+    assert np.all(np.diff(times) >= 0)     # arrival times are sorted
+
+
+def test_poisson_seeded_deterministic():
+    a = poisson_arrivals(64, 0.5, np.random.RandomState(3))
+    b = poisson_arrivals(64, 0.5, np.random.RandomState(3))
+    c = poisson_arrivals(64, 0.5, np.random.RandomState(4))
+    np.testing.assert_array_equal(a, b)
+    assert not np.array_equal(a, c)
+
+
+def test_bounded_pareto_respects_cap():
+    lens = bounded_pareto_lengths(4000, 1.5, lo=8, hi=48,
+                                  rng=np.random.RandomState(11))
+    assert lens.min() >= 8
+    assert lens.max() <= 48                # the hard cap, always
+    assert lens.max() == 48                # heavy tail actually reaches it
+    assert lens.mean() > 8.5               # and it is not all floor either
+
+
+def test_bursty_alternates_regimes():
+    times, regimes = bursty_arrivals(2000, rate_lo=0.1, rate_hi=1.0,
+                                     dwell=20.0,
+                                     rng=np.random.RandomState(5))
+    assert set(np.unique(regimes)) == {0, 1}
+    switches = int(np.sum(np.diff(regimes) != 0))
+    assert switches >= 10                  # actually alternates...
+    assert switches < len(regimes) // 2    # ...in dwelling runs, not noise
+    gaps = np.diff(np.concatenate([[0.0], times]))
+    # burst-regime interarrivals must be clearly shorter than quiet ones
+    assert gaps[regimes == 1].mean() < 0.5 * gaps[regimes == 0].mean()
+
+
+def test_diurnal_ramp_modulates_rate():
+    period = 200.0
+    times = diurnal_arrivals(4000, base_rate=0.5, amplitude=0.8,
+                             period=period,
+                             rng=np.random.RandomState(9))
+    phase = np.mod(times, period)
+    peak = np.sum(phase < period / 2)      # sin > 0: high-rate half
+    trough = np.sum(phase >= period / 2)
+    assert peak > 1.5 * trough
+
+
+def test_build_workload_deterministic_and_mixes():
+    spec = LoadgenSpec(n_requests=64, arrival="poisson", rate=0.3,
+                       shared_prefix_frac=0.5, shared_prefix_tokens=8,
+                       prompt_min=10, prompt_cap=32, priority_frac=0.3,
+                       seed=21)
+    a = build_workload(spec, vocab_size=1000)
+    b = build_workload(spec, vocab_size=1000)
+    assert [t for t, _ in a] == [t for t, _ in b]
+    for (_, ra), (_, rb) in zip(a, b):
+        np.testing.assert_array_equal(ra.tokens, rb.tokens)
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert ra.priority == rb.priority
+    # the mixes actually materialize
+    assert 0 < sum(r.priority for _, r in a) < len(a)
+    prefix = next(r.tokens[:8] for _, r in a
+                  if any(np.array_equal(r.tokens[:8], q.tokens[:8])
+                         and r.rid != q.rid for _, q in a))
+    sharing = sum(np.array_equal(r.tokens[:8], prefix) for _, r in a)
+    assert sharing >= 2
+    # a different seed reshuffles everything
+    c = build_workload(LoadgenSpec(n_requests=64, seed=22), vocab_size=1000)
+    assert [t for t, _ in a] != [t for t, _ in c]
+
+
+# ---------------------------------------------------------------------------
+# tracefile format + model-free replay: service-level differential
+# ---------------------------------------------------------------------------
+
+def _service(policy="freelist", backend="jnp"):
+    from repro.alloc.service import AllocService
+    svc = AllocService(policy=policy, backend=backend)
+    svc.register_tenant("kv_pages", capacity=32)
+    svc.register_tenant("state_slots", capacity=8)
+    return svc
+
+
+def _drive_random_ops(svc, state, rng, n_bursts: int):
+    """A seeded random op stream through the recorder seam: mallocs,
+    refills, frees, FREE_ALLs, plus control-plane retags/bumps."""
+    tenants = svc.tenants
+    for i in range(n_bursts):
+        b = svc.new_burst()
+        for _ in range(rng.randint(1, 5)):
+            t = tenants[rng.randint(len(tenants))]
+            lane = int(rng.randint(0, 4))
+            kind = rng.randint(4)
+            if kind == 0:
+                b.malloc(t, lane, int(rng.randint(1, 3)))
+            elif kind == 1:
+                b.refill(t, lane, int(rng.randint(1, 4)))
+            elif kind == 2:
+                b.free(t, lane, int(rng.randint(0, 32)))
+            else:
+                b.free_all(t, lane)
+        state, _ = svc.commit(state, b,
+                              max_blocks_per_req=int(rng.randint(1, 4)),
+                              gated=bool(rng.randint(2)))
+        if rng.randint(3) == 0:
+            t = tenants[rng.randint(len(tenants))]
+            blocks = rng.randint(0, 32, size=rng.randint(1, 4))
+            if rng.randint(2):
+                state = svc.retag_blocks(state, t, blocks,
+                                         new_owner=int(rng.randint(0, 4)))
+            else:
+                state = svc.bump_refcounts(state, t, blocks, delta=1)
+        if svc.recorder is not None and rng.randint(4) == 0:
+            svc.recorder.mark_window()
+    return state
+
+
+def test_tracefile_roundtrip(tmp_path):
+    svc = _service()
+    rec = record_service(svc)
+    state = _drive_random_ops(svc, svc.init_state(), np.random.RandomState(0),
+                              n_bursts=6)
+    trace = rec.finish(complete=True)
+    path = tmp_path / "ops.alloctrace"
+    save_trace(trace, path)
+    loaded = load_trace(path)
+    assert loaded.header == trace.header
+    assert loaded.header["version"] == 1
+    assert loaded.header["tenants"] == [["kv_pages", 32], ["state_slots", 8]]
+    assert len(loaded.events) == len(trace.events)
+    for ev, lv in zip(trace.events, loaded.events):
+        assert ev[0] == lv[0]
+        for x, y in zip(ev[1:], lv[1:]):
+            if isinstance(x, np.ndarray):
+                np.testing.assert_array_equal(x, y)
+            else:
+                assert x == y
+    assert loaded.bursts == 6 and loaded.windows == trace.windows
+    # a corrupt magic is rejected loudly
+    bad = tmp_path / "bad.alloctrace"
+    bad.write_bytes(b"NOTATRACE" + b"\x00" * 16)
+    with pytest.raises(ValueError, match="not a repro allocator tracefile"):
+        load_trace(bad)
+    del state
+
+
+def _assert_replay_exact(svc, state, trace):
+    live = svc.tenant_report(state)
+    res = replay_trace(trace)
+    assert res.report == live     # EXACT per-tenant counter equality:
+    #                               used/peak_used/alloc/free/fail_count
+    # replaying the same trace again is deterministic
+    res2 = replay_trace(trace)
+    assert res2.report == res.report
+    return res
+
+
+def test_replay_matches_service_counters_seeded():
+    svc = _service()
+    rec = record_service(svc)
+    state = _drive_random_ops(svc, svc.init_state(),
+                              np.random.RandomState(42), n_bursts=10)
+    svc.recorder = None
+    res = _assert_replay_exact(svc, state, rec.finish())
+    assert res.bursts == 10
+    assert res.live_bursts == 10   # every random burst staged >= 1 real op
+
+
+@needs_hypothesis
+@given(seed=st.integers(0, 2**16), n_bursts=st.integers(1, 8),
+       policy=st.sampled_from(["freelist", "bitmap"]))
+@settings(max_examples=15, deadline=None)
+def test_replay_matches_service_counters_hypothesis(seed, n_bursts, policy):
+    svc = _service(policy=policy)
+    rec = record_service(svc)
+    state = _drive_random_ops(svc, svc.init_state(),
+                              np.random.RandomState(seed), n_bursts=n_bursts)
+    svc.recorder = None
+    _assert_replay_exact(svc, state, rec.finish())
+
+
+def test_replay_policy_override_sweeps():
+    """The what-if sweep path: one trace, another policy/backend — runs and
+    reports, without claiming counter equality (grant ORDER may differ)."""
+    svc = _service(policy="freelist")
+    rec = record_service(svc)
+    state = _drive_random_ops(svc, svc.init_state(),
+                              np.random.RandomState(1), n_bursts=6)
+    svc.recorder = None
+    trace = rec.finish()
+    res = replay_trace(trace, policy="bitmap")
+    assert set(res.report) == set(svc.tenant_report(state))
+    res2 = replay_trace(trace, backend="kernel-interpret")
+    assert res2.report == svc.tenant_report(state)  # backends bit-identical
+    del res
+
+
+def test_sim_policy_replay_from_trace():
+    svc = _service()
+    rec = record_service(svc)
+    _drive_random_ops(svc, svc.init_state(), np.random.RandomState(2),
+                      n_bursts=8)
+    svc.recorder = None
+    trace = rec.finish()
+    sim_trace = to_sim_trace(trace, threads=4)
+    n = len(sim_trace["op"])
+    assert n > 0
+    assert set(np.unique(sim_trace["op"])) <= {1, 2}
+    assert sim_trace["thread"].max() < 4
+    rows = replay_sim_policies(trace, policies=("speedmalloc", "tcmalloc"),
+                               threads=4)
+    assert set(rows) == {"speedmalloc", "tcmalloc"}
+    for r in rows.values():
+        assert r["mallocs"] + r["frees"] == n
+        assert r["est_cycles"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the live-engine differential: replay == engine, exactly
+# ---------------------------------------------------------------------------
+
+def _kvcfg(cfg):
+    return make_paged_config(cfg, seq_len=64, lanes=2, page_size=4,
+                             dtype=jnp.float32, stash_size=8,
+                             stash_watermark=2, stash_refill=4)
+
+
+def _record_live_run(cfg, params, spec, n_engines=2, quantum=4):
+    kvcfg = _kvcfg(cfg)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=32)
+    me = MultiEngine(cfg, kvcfg, params, n_engines=n_engines,
+                     dtype=jnp.float32, sched_cfg=scfg, quantum=quantum,
+                     preemption=True)
+    rec = record_service(me.service)
+    report = run_open_loop(me, build_workload(spec, cfg.vocab_size))
+    me.service.recorder = None
+    trace = certify_complete(rec.finish(), me.engines)
+    return me, trace, report
+
+
+def _assert_live_replay_exact(me, trace):
+    """The acceptance differential: per-tenant counters AND burst counts."""
+    live = me.service.tenant_report(me.alloc)
+    res = replay_trace(trace)
+    assert res.report == live
+    # burst-count cross-validation (the test_sim idiom, but EXACT): every
+    # live burst the engines issued is in the trace — admission bursts +
+    # eager release/eviction bursts + live merged window commits
+    live_bursts = (sum(e.stats.hmq_admit_bursts for e in me.engines)
+                   + sum(e.stats.hmq_release_bursts for e in me.engines)
+                   + me.stats.window_commits)
+    assert res.live_bursts == live_bursts
+    assert trace.header["complete"] is True
+    return res
+
+
+def test_live_engine_record_replay_counters_exact(dense):
+    cfg, params = dense
+    spec = LoadgenSpec(n_requests=6, arrival="poisson", rate=0.2,
+                       prompt_min=6, prompt_cap=20, output_min=2,
+                       output_cap=6, priority_frac=0.25, seed=0)
+    me, trace, report = _record_live_run(cfg, params, spec)
+    assert report.completed == 6 and report.failed == 0
+    res = _assert_live_replay_exact(me, trace)
+    # the trace is not trivial: admissions allocated real pages
+    kv = [v for k, v in res.report.items() if k.endswith("kv_pages")]
+    assert sum(r["alloc_count"] for r in kv) > 0
+    assert sum(r["free_count"] for r in kv) > 0
+    # ... and everything allocated was freed back (all requests completed)
+    assert all(r["used"] == 0 for r in res.report.values())
+
+
+def test_open_loop_driver_reports_tail_latency(dense):
+    cfg, params = dense
+    spec = LoadgenSpec(n_requests=5, arrival="poisson", rate=0.3,
+                       prompt_min=6, prompt_cap=16, output_min=2,
+                       output_cap=5, seed=3)
+    kvcfg = _kvcfg(cfg)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=32)
+    me = MultiEngine(cfg, kvcfg, params, n_engines=1, dtype=jnp.float32,
+                     sched_cfg=scfg, quantum=2, preemption=False)
+    report = run_open_loop(me, build_workload(spec, cfg.vocab_size))
+    assert report.completed == 5
+    assert report.stranded == 0
+    assert report.p50_ttft_us > 0
+    assert report.p99_ttft_us >= report.p90_ttft_us >= report.p50_ttft_us
+    assert report.p99_ttft_steps >= report.p50_ttft_steps >= 0
+    assert report.queue_depth_max >= 1
+    assert report.windows > 0
+    m = report.as_metrics()
+    assert m["completed"] == 5 and "p99_ttft_us" in m
+
+
+@needs_hypothesis
+@given(seed=st.integers(0, 2**10), n_requests=st.integers(2, 5),
+       arrival=st.sampled_from(["poisson", "bursty"]))
+@settings(max_examples=3, deadline=None)
+def test_live_replay_differential_hypothesis(dense, seed, n_requests,
+                                             arrival):
+    """Small random workloads: replayed counters equal the live engine's
+    EXACTLY, whatever the arrival pattern, priorities, or preemptions."""
+    cfg, params = dense
+    spec = LoadgenSpec(n_requests=n_requests, arrival=arrival, rate=0.3,
+                       prompt_min=5, prompt_cap=16, output_min=2,
+                       output_cap=5, priority_frac=0.3, seed=seed)
+    me, trace, _report = _record_live_run(cfg, params, spec)
+    _assert_live_replay_exact(me, trace)
+
+
+@pytest.mark.skipif(not os.environ.get("REPRO_DEEP_FUZZ"),
+                    reason="nightly deep-fuzz only (REPRO_DEEP_FUZZ=1)")
+def test_loadgen_churn_sweep_deep(dense):
+    """Nightly: a longer bursty churn with preemption pressure through the
+    full record→replay differential, plus tracefile round-trip."""
+    cfg, params = dense
+    for seed in range(3):
+        spec = LoadgenSpec(n_requests=10, arrival="bursty", rate=0.2,
+                           burst_factor=6.0, burst_dwell=16.0,
+                           prompt_min=5, prompt_cap=24, output_min=2,
+                           output_cap=8, priority_frac=0.4, seed=seed)
+        me, trace, _report = _record_live_run(cfg, params, spec,
+                                              n_engines=2, quantum=2)
+        _assert_live_replay_exact(me, trace)
+
+
+def test_traced_commits_counted_not_serialized(dense):
+    """The in-jit gated decode burst is counted, never serialized — and in
+    the supported defer-refill configuration it stays all-NOP, so the
+    trace is certified complete."""
+    cfg, params = dense
+    spec = LoadgenSpec(n_requests=3, arrival="poisson", rate=0.5,
+                       prompt_min=5, prompt_cap=12, output_min=2,
+                       output_cap=4, seed=1)
+    me, trace, _report = _record_live_run(cfg, params, spec, n_engines=1)
+    assert sum(e.stats.decode_bursts for e in me.engines) == 0
+    assert trace.header["complete"] is True
+    for ev in trace.events:
+        assert ev[0] in ("burst", "window", "retag", "bump")
