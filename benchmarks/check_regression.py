@@ -35,7 +35,14 @@ when any gated metric regresses:
   percentiles under the seeded Poisson mix (DESIGN.md §14): fail on
   relative growth beyond 50% (wall-clock on shared runners, so the
   tolerance is generous; a real regression — admission stalling behind
-  allocator work, a lost prefill-compile share — multiplies the tail).
+  allocator work, a lost prefill-compile share — multiplies the tail);
+* ``mean_run_len_buddy`` — admitted KV pages per contiguous extent under
+  the buddy policy's mixed-length scenario (DESIGN.md §15): fail on a
+  relative drop beyond 25% (the run-grant path degrading to singles
+  collapses it to ~1.0);
+* ``external_frag_buddy`` — end-state external fragmentation of the same
+  scenario: fail on absolute growth beyond 0.25 (deterministic seeded
+  churn, so real placement regressions dominate noise).
 
 A gated key MISSING from the committed baseline (a freshly introduced
 metric whose baseline predates it) is a loud warning, not a failure —
@@ -86,6 +93,8 @@ GATES = (
     ("decode_compiles", "abs_grow", 0.0),
     ("p50_ttft_us", "rel_grow", 0.50),
     ("p99_ttft_us", "rel_grow", 0.50),
+    ("mean_run_len_buddy", "rel_drop", 0.25),
+    ("external_frag_buddy", "abs_grow", 0.25),
 )
 
 

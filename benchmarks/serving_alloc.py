@@ -38,6 +38,13 @@ records the allocator-op trace and replays it through the model-free
 engine's EXACTLY (asserted in tests/test_loadgen.py; logged here), and the
 replay wall-clock speedup over the live run is part of the json.
 
+Fragmentation scenario (DESIGN.md §15): alternating 1-page and 6-page
+prompts churn through the serving loop once per allocator policy; the json
+gains ``mean_run_len_buddy`` (admitted pages per contiguous extent — the
+run-grant win, gated against the baseline) vs ``mean_run_len_freelist``,
+end-state ``external_frag_buddy`` (gated), the buddy split/merge counters,
+and what one between-window compaction pass moves.
+
 Every scenario draws from ``numpy.random.RandomState`` seeded by the
 ``run(seed=...)`` argument (recorded in the json), so gate comparisons
 against ``benchmarks/baseline/`` are reproducible run-to-run.
@@ -331,6 +338,69 @@ def _run_prefix_cache(cfg, params, seed: int = 0) -> dict:
     }
 
 
+def _run_fragmentation(cfg, params, seed: int = 0) -> dict:
+    """Mixed short/long churn under buddy vs freelist (DESIGN.md §15).
+
+    Alternating 1-page and multi-page prompts through the full serving
+    loop, per policy: the buddy policy serves each admission's
+    OP_MALLOC_RUN as one contiguous extent (``mean_run_len`` > 1), the
+    free-list baseline hands out whatever the LIFO stack pops
+    (``mean_run_len`` ~= 1).  Grant/fail decisions are identical by
+    construction (the differential suites assert it); this scenario
+    measures what the PLACEMENT buys: admitted-extent stats, end-state
+    external fragmentation, buddy split/merge counters, and what one
+    between-window compaction pass reclaims on top.
+    """
+    from repro.serve.engine import AdmissionItem
+
+    out = {}
+    for policy in ("freelist", "buddy"):
+        rng = np.random.RandomState(seed)
+        kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                                  dtype=jnp.float32, **STASH)
+        scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
+        eng = ServingEngine(cfg, kvcfg, params, dtype=jnp.float32,
+                            sched_cfg=scfg, alloc_policy=policy)
+
+        def mk(lane, n_tokens):
+            return AdmissionItem(lane=lane, tokens=rng.randint(
+                0, cfg.vocab_size, size=n_tokens).astype(np.int32))
+
+        def kv_frag():
+            return next(rep for name, rep
+                        in eng.fragmentation_report().items()
+                        if name.endswith("kv_pages"))
+
+        # round 1: alternating 6-page and 1-page prompts on 4 lanes, then
+        # release the two LONG lanes — holes open up below the survivors
+        eng.admit_many([mk(0, 48), mk(1, 8), mk(2, 48), mk(3, 8)])
+        eng.release([0, 2], completed=True)
+        # round 2: refill the freed lanes (one long, one short) — the buddy
+        # places the long above the torn holes, freelist wherever the
+        # stack points; snapshot fragmentation with lanes STILL LIVE
+        eng.admit_many([mk(0, 48), mk(2, 8)])
+        live = kv_frag()
+        moved = eng.compact()
+        after = kv_frag()
+        out[policy] = {
+            "admitted": eng.stats.admitted,
+            "mean_run_len": eng.stats.mean_run_len,
+            "contiguous_extents": eng.stats.contiguous_extents,
+            "extent_pages": eng.stats.extent_pages,
+            "external_frag": live["external_frag"],
+            "free_extents": live["free_extents"],
+            "largest_free_run": live["largest_free_run"],
+            "largest_aligned_run": live["largest_aligned_run"],
+            "split_count": live["split_count"],
+            "merge_count": live["merge_count"],
+            "compaction_moves": moved,
+            "external_frag_after_compact": after["external_frag"],
+            "free_extents_after_compact": after["free_extents"],
+            "largest_free_run_after_compact": after["largest_free_run"],
+        }
+    return out
+
+
 def _run_once(cfg, params, stash: bool, seed: int = 0) -> dict:
     rng = np.random.RandomState(seed)
     kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
@@ -411,6 +481,9 @@ def run(seed: int = 0) -> list[str]:
     # — reuses the full-attention params; 2 shards, Poisson arrivals.
     lg = _run_loadgen(cfg_full, params_full, seed=seed)
 
+    # Buddy contiguity + fragmentation under mixed-length churn (§15).
+    frag = _run_fragmentation(cfg, params, seed=seed)
+
     s, a = after["stats"], after["alloc"]
     s0 = before["stats"]
     bursts_per_seq = s.hmq_admit_bursts / max(s.admitted, 1)
@@ -477,6 +550,14 @@ def run(seed: int = 0) -> list[str]:
         "allocs": int(a.alloc_count[0]),
         "frees": int(a.free_count[0]),
         "peak_pages": int(a.peak_used[0]),
+        # --- buddy contiguity + fragmentation (DESIGN.md §15) ---
+        "mean_run_len_buddy": frag["buddy"]["mean_run_len"],
+        "mean_run_len_freelist": frag["freelist"]["mean_run_len"],
+        "external_frag_buddy": frag["buddy"]["external_frag"],
+        "buddy_split_count": frag["buddy"]["split_count"],
+        "buddy_merge_count": frag["buddy"]["merge_count"],
+        "compaction_moves": frag["buddy"]["compaction_moves"],
+        "fragmentation": frag,
     }
     rr = lg["record_replay"]
     BENCH_JSON.write_text(json.dumps(metrics, indent=2) + "\n")
@@ -530,6 +611,15 @@ def run(seed: int = 0) -> list[str]:
                 f"(poisson seed={seed}): p50={lg['p50_ttft_us']:.0f}us "
                 f"tpot p50={lg['p50_tpot_us']:.0f}us "
                 f"depth_max={lg['queue_depth_max']}"),
+        csv_row("serving/fragmentation", frag["buddy"]["mean_run_len"],
+                f"mean_run_len under buddy (freelist: "
+                f"{frag['freelist']['mean_run_len']:.2f}) "
+                f"external_frag={frag['buddy']['external_frag']:.2f} "
+                f"splits={frag['buddy']['split_count']} "
+                f"merges={frag['buddy']['merge_count']} "
+                f"compaction_moves={frag['buddy']['compaction_moves']} "
+                f"free_extents={frag['buddy']['free_extents']}->"
+                f"{frag['buddy']['free_extents_after_compact']}"),
         csv_row("serving/trace_replay", rr["replay_speedup"],
                 f"x faster than live ({rr['live_bursts']} live bursts, "
                 f"{rr['trace_ops']} ops, {rr['replay_signatures']} "

@@ -7,7 +7,13 @@
    support-core),
 4. hold a multi-turn conversation with the prefix cache on: each turn's
    KV pages survive completion, so the next turn's growing history hits
-   the cache and skips most of its prefill.
+   the cache and skips most of its prefill,
+5. drive open-loop Poisson load, record the allocator-op trace, and
+   replay it model-free (exact counters) + through the paper's sim
+   policies,
+6. admit a mixed short/long workload under the buddy policy: contiguous
+   multi-page run grants (mean_run_len > 1), fragmentation telemetry,
+   and the between-window compaction pass.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -208,3 +214,35 @@ for name, row in replay_sim_policies(
     print(f"  sim {name}: {row['mallocs']} mallocs, "
           f"{row['shared_trips']} shared trips, "
           f"est {row['est_cycles']:.0f} cycles")
+
+# --- 6. buddy policy: contiguous runs + fragmentation telemetry (§15) ------
+
+# A mixed short/long workload under the buddy central design: admission
+# requests each sequence's whole predicted page count as ONE contiguous
+# run (OP_MALLOC_RUN), so a long prompt's pages land side by side instead
+# of wherever the free stack points.  Same client code — the policy is
+# just REPRO_ALLOC_POLICY=buddy or the alloc_policy kwarg.
+from repro.serve.engine import AdmissionItem
+
+bud = ServingEngine(cfg_d, kvcfg_lg, params_d, dtype=jnp.float32,
+                    sched_cfg=scfg_lg, alloc_policy="buddy")
+fl = ServingEngine(cfg_d, kvcfg_lg, params_d, dtype=jnp.float32,
+                   sched_cfg=scfg_lg, alloc_policy="freelist")
+rng_b = np.random.RandomState(3)
+mixed = [(0, 40), (1, 8)]                       # 5-page long + 1-page short
+for eng_b in (bud, fl):
+    eng_b.admit_many([AdmissionItem(lane=l, tokens=rng_b.randint(
+        0, cfg_d.vocab_size, n).astype(np.int32)) for l, n in mixed])
+print(f"\nbuddy policy, mixed short/long admission:")
+print(f"  mean_run_len: buddy={bud.stats.mean_run_len:.2f} "
+      f"freelist={fl.stats.mean_run_len:.2f} "
+      f"(pages per contiguous extent; 1.0 == every page an island)")
+for name, rep in bud.fragmentation_report().items():
+    print(f"  {name}: free={rep['free']} in {rep['free_extents']} extent(s), "
+          f"largest_run={rep['largest_free_run']} "
+          f"external_frag={rep['external_frag']:.2f} "
+          f"splits={rep['split_count']} merges={rep['merge_count']}")
+moved = bud.compact()                           # between-window compaction
+print(f"  compaction pass: {moved} page(s) migrated "
+      f"(coalesces torn holes; a no-op when free space is already one run)")
+assert bud.stats.mean_run_len > 1.0 >= fl.stats.mean_run_len * 0.999

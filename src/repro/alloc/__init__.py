@@ -2,8 +2,8 @@
 SpeedMalloc support-core (DESIGN.md §9).
 
 - :mod:`repro.alloc.service`  -- AllocService / BurstBuilder / tickets / tenants
-- :mod:`repro.alloc.policies` -- AllocatorPolicy protocol + free-list and
-  bitmap central designs (``REPRO_ALLOC_POLICY``)
+- :mod:`repro.alloc.policies` -- AllocatorPolicy protocol + free-list,
+  bitmap, and buddy central designs (``REPRO_ALLOC_POLICY``)
 - :mod:`repro.alloc.eviction` -- EvictionPolicy protocol + LRU/2Q/ARC menu
   for the KV prefix cache (``REPRO_KV_EVICTION``)
 """
@@ -11,14 +11,15 @@ from .eviction import (EVICTION_POLICIES, ARCEviction, EvictionPolicy,
                        LRUEviction, TwoQEviction, get_eviction,
                        register_eviction)
 from .policies import (ALLOC_POLICIES, AllocatorPolicy, BitmapPolicy,
-                       FreeListPolicy, get_policy, register_policy)
+                       BuddyPolicy, FreeListPolicy, get_policy,
+                       register_policy)
 from .service import (NAMESPACE_SEP, AllocService, BurstBuilder, BurstResult,
                       BurstStats, TenantHandle, TenantStats, Ticket,
                       empty_burst_stats)
 
 __all__ = [
-    "ALLOC_POLICIES", "AllocatorPolicy", "BitmapPolicy", "FreeListPolicy",
-    "get_policy", "register_policy",
+    "ALLOC_POLICIES", "AllocatorPolicy", "BitmapPolicy", "BuddyPolicy",
+    "FreeListPolicy", "get_policy", "register_policy",
     "EVICTION_POLICIES", "EvictionPolicy", "LRUEviction", "TwoQEviction",
     "ARCEviction", "get_eviction", "register_eviction",
     "NAMESPACE_SEP", "AllocService", "BurstBuilder", "BurstResult",

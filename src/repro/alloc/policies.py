@@ -10,7 +10,7 @@ of grants and frees transforms the segregated metadata.  HMQ scheduling,
 response routing, gating, ticket resolution, and telemetry all live in the
 service and are policy-independent.
 
-Two implementations prove the seam is real:
+Three implementations prove the seam is real:
 
 * :class:`FreeListPolicy` — the paper design: per-class LIFO free stacks
   (§5.1, Fig. 6), batched with prefix sums.  This is the PR-3 scheduled-step
@@ -26,6 +26,14 @@ Two implementations prove the seam is real:
   only on per-class availability — but a different block-id discipline, so
   any client code that secretly assumed LIFO ids breaks loudly under the
   ``policy-parity`` CI leg.
+* :class:`BuddyPolicy` — power-of-two buddy placement (DESIGN.md §15, after
+  the non-blocking buddy-system design of Marotta et al.): a granted
+  request is placed on the lowest-addressed aligned power-of-two run that
+  is entirely free (taking a prefix of a larger run IS the split), falling
+  back to first-fit singles on shortfall, with cumulative split/merge
+  telemetry carried in ``FreeListState.split_count`` / ``merge_count``.
+  ``OP_MALLOC_RUN`` packets are how clients ask for contiguity; grant/fail
+  semantics remain identical to the other two policies.
 
 Policies must preserve the shared burst contract::
 
@@ -45,13 +53,15 @@ from typing import Protocol, Sequence, runtime_checkable
 
 import jax.numpy as jnp
 
+import jax
+
 from ..core.freelist import FreeListState, init_freelist
-from ..core.packets import (NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
-                            RequestQueue)
+from ..core.packets import (NO_BLOCK, OP_FREE, OP_MALLOC, OP_MALLOC_RUN,
+                            OP_REFILL, RequestQueue)
 from ..core.support_core import deferred_free_counts, grant_scan
 
 #: Valid values for the ``policy`` argument / ``REPRO_ALLOC_POLICY`` knob.
-ALLOC_POLICIES = ("freelist", "bitmap")
+ALLOC_POLICIES = ("freelist", "bitmap", "buddy")
 
 
 @runtime_checkable
@@ -65,6 +75,12 @@ class AllocatorPolicy(Protocol):
 
     name: str
     backends: tuple[str, ...]
+    #: Whether the policy places ``OP_MALLOC_RUN`` packets as contiguous
+    #: aligned runs.  Builders consult this to decide whether to emit the
+    #: hint opcode at all (every policy ACCEPTS it — it just degrades to a
+    #: plain malloc where unsupported, e.g. replaying a buddy-recorded
+    #: trace under ``--policy freelist``).
+    supports_runs: bool
 
     def init(self, capacities: Sequence[int]) -> FreeListState:
         """Fresh metadata for the given per-class (per-tenant) capacities."""
@@ -85,15 +101,17 @@ class AllocatorPolicy(Protocol):
 class FreeListPolicy:
     """Per-class LIFO free stacks (the paper's design, §5.1).
 
-    The scheduled-step body formerly hard-wired into
-    ``core.support_core.support_core_step`` — now one policy among several.
-    Backend ``jnp`` is the plain phase pipeline; ``kernel`` /
+    The scheduled-step body every ``AllocService.commit`` burst ran before
+    the policy seam existed — now one policy among several.  Backend
+    ``jnp`` is the plain phase pipeline
+    (``core.support_core._step_scheduled_jnp``); ``kernel`` /
     ``kernel-interpret`` run the whole burst as ONE fused VPU-only Pallas
     launch with the metadata VMEM-resident (DESIGN.md §8).
     """
 
     name = "freelist"
     backends = ("jnp", "kernel", "kernel-interpret")
+    supports_runs = False
 
     def init(self, capacities: Sequence[int]) -> FreeListState:
         return init_freelist(capacities)
@@ -124,6 +142,7 @@ class BitmapPolicy:
 
     name = "bitmap"
     backends = ("jnp",)
+    supports_runs = False
 
     def init(self, capacities: Sequence[int]) -> FreeListState:
         # Ascending stack == the bitmap's first-fit order from step one.
@@ -136,7 +155,8 @@ class BitmapPolicy:
         C, N = state.num_classes, state.max_capacity
         Q, R = sched.capacity, max_blocks_per_req
 
-        is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+        is_malloc = ((sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+                     | (sched.op == OP_MALLOC_RUN))
         is_free = sched.op == OP_FREE
         want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)
         want = jnp.where(want <= R, want, 0)
@@ -218,6 +238,195 @@ class BitmapPolicy:
                 fail[:, None] * onehot, axis=0),
             used=used_after_alloc - freed_per_class,
             peak_used=peak,
+            split_count=state.split_count,   # first fit never splits runs
+            merge_count=state.merge_count,
+        )
+        return new_state, blocks, ok.astype(jnp.int32)
+
+
+def _pow2_ceil(n: jnp.ndarray) -> jnp.ndarray:
+    """Elementwise next power of two >= n (n >= 1; exact for int32 range:
+    float32 log2 of 2^k is exact, and non-powers land strictly between)."""
+    return jnp.left_shift(
+        1, jnp.ceil(jnp.log2(jnp.maximum(n, 1).astype(jnp.float32)))
+        .astype(jnp.int32))
+
+
+def _aligned_free_runs(free_bm: jnp.ndarray, size: int) -> jnp.ndarray:
+    """[C, N // size] bool: size-aligned runs of ``size`` that are all free.
+
+    ``free_bm`` must be [C, P] with P a multiple of ``size`` (pad with
+    False); static ``size`` so the reshape stays shape-stable under jit.
+    """
+    C = free_bm.shape[0]
+    return free_bm.reshape(C, -1, size).all(axis=2)
+
+
+class BuddyPolicy:
+    """Power-of-two buddy placement over the owner bitmap (jnp only).
+
+    Per tenant (size class) the pool slice is treated as an implicit buddy
+    tree: level ``k`` nodes are the ``2**k``-aligned runs of ``2**k``
+    blocks.  A granted request of ``n`` blocks takes the first ``n`` ids of
+    the LOWEST-addressed fully-free aligned run of ``2**ceil(log2(n))``
+    blocks — taking a prefix of a larger free node IS the split (the
+    untouched tail is the still-free sibling chain) — and falls back to
+    first-fit singles when fragmentation leaves no such run (the grant
+    never fails for lack of CONTIGUITY, only for lack of availability, so
+    grant/fail sets stay identical to freelist/bitmap: the shared
+    ``grant_scan`` decides them from per-class availability alone).
+    ``OP_MALLOC_RUN`` and ``OP_MALLOC``/``OP_REFILL`` place identically —
+    the opcode is a client-intent marker, not a different allocator.
+
+    Merging is implicit in the bitmap representation (two free buddies ARE
+    their free parent) and COUNTED explicitly: per burst, ``split_count``
+    accumulates the aligned runs that were fully free before the malloc
+    phase but broken after it, and ``merge_count`` the runs made newly
+    fully free by the free phase — the split/merge work a pointer-based
+    buddy tree would have performed, summed over all levels
+    (DESIGN.md §15).  The free stack is rebuilt ascending like the bitmap
+    policy's: it is a cache of the bitmap, not the source of truth.
+    """
+
+    name = "buddy"
+    backends = ("jnp",)
+    supports_runs = True
+
+    def init(self, capacities: Sequence[int]) -> FreeListState:
+        # Ascending stack: id order is the buddy tree's address order.
+        return init_freelist(capacities)
+
+    def step_scheduled(self, state, sched, max_blocks_per_req, backend):
+        if backend != "jnp":
+            raise ValueError(
+                f"policy 'buddy' has no {backend!r} backend (jnp only)")
+        C, N = state.num_classes, state.max_capacity
+        Q, R = sched.capacity, max_blocks_per_req
+
+        is_malloc = ((sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+                     | (sched.op == OP_MALLOC_RUN))
+        is_free = sched.op == OP_FREE
+        want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)
+        want = jnp.where(want <= R, want, 0)
+        cls = jnp.clip(sched.size_class, 0, C - 1)
+        onehot = (jnp.arange(C, dtype=jnp.int32)[None, :] == cls[:, None])
+
+        blk_ids = jnp.arange(N, dtype=jnp.int32)
+        real = blk_ids[None, :] < state.capacity[:, None]               # [C, N]
+        free_bm0 = (state.owner < 0) & real
+
+        # ---- grant/fail: the SHARED availability recurrence ----
+        ok, _ = grant_scan(state.free_top, want, onehot, is_malloc)
+        fail = is_malloc & ~ok
+        granted = jnp.where(ok, want, 0)
+        run_len = jnp.where(granted > 0, _pow2_ceil(granted), 0)        # [Q]
+
+        # ---- placement: sequential scan carrying the free bitmap ----
+        # Each granted request takes the lowest-addressed run_len-aligned
+        # fully-free run (prefix of length `granted`), else the lowest
+        # free singles.  grant_scan guarantees the singles exist, so a
+        # grant always places fully; only WHERE differs from bitmap.
+        j = jnp.arange(R, dtype=jnp.int32)
+
+        def place(free_bm, xs):
+            n_i, run_i, cls_i = xs
+            row = free_bm[cls_i]                                        # [N]
+            counts = jnp.cumsum(row.astype(jnp.int32))
+            prefix = jnp.concatenate(
+                [jnp.zeros((1,), jnp.int32), counts])                   # [N+1]
+            # aligned candidate starts with a fully-free run of run_i
+            span = prefix[jnp.minimum(blk_ids + run_i, N)] - prefix[blk_ids]
+            cand = ((run_i > 0)
+                    & (blk_ids % jnp.maximum(run_i, 1) == 0)
+                    & (blk_ids + run_i <= N)
+                    & (span == run_i))
+            start = jnp.min(jnp.where(cand, blk_ids, N))
+            run_blocks = jnp.where(j < n_i, start + j, NO_BLOCK)
+            # fallback: lowest n_i free ids (address-ordered first fit)
+            rank = counts - row                                         # [N]
+            nth = jnp.full((N,), NO_BLOCK, jnp.int32).at[
+                jnp.where(row, rank, N)].set(blk_ids, mode="drop")
+            single_blocks = jnp.where(j < n_i, nth[jnp.minimum(j, N - 1)],
+                                      NO_BLOCK)
+            blocks_i = jnp.where((start < N) & (n_i > 0),
+                                 run_blocks, single_blocks)
+            blocks_i = jnp.where(j < n_i, blocks_i, NO_BLOCK)
+            taken = jnp.where(blocks_i != NO_BLOCK, blocks_i, N)
+            new_row = row.at[taken].set(False, mode="drop")
+            return free_bm.at[cls_i].set(new_row), blocks_i
+
+        free_bm_mid, blocks = jax.lax.scan(
+            place, free_bm0, (granted, run_len, cls))                    # [Q, R]
+        take = blocks != NO_BLOCK
+
+        flat_cls = jnp.broadcast_to(cls[:, None], (Q, R)).reshape(-1)
+        flat_take = take.reshape(-1)
+        upd_idx_c = jnp.where(flat_take, flat_cls, C)
+        upd_idx_b = jnp.where(flat_take, blocks.reshape(-1), N)
+        owner = state.owner.at[upd_idx_c, upd_idx_b].set(
+            jnp.broadcast_to(sched.lane[:, None], (Q, R)).reshape(-1),
+            mode="drop")
+        refcount = state.refcount.at[upd_idx_c, upd_idx_b].set(
+            1, mode="drop")
+
+        taken_per_class = jnp.sum(granted[:, None] * onehot, axis=0)
+        top_after_alloc = state.free_top - taken_per_class
+        used_after_alloc = state.used + taken_per_class
+        peak = jnp.maximum(state.peak_used, used_after_alloc)
+
+        # ---- free phase: SHARED deferred counts, refcount-gated ----
+        free_cnt = deferred_free_counts(sched, owner, cls, onehot, is_free)
+        dec = refcount - free_cnt
+        ret_mask = (free_cnt > 0) & (dec <= 0)
+        refcount = jnp.maximum(dec, 0)
+        freed_per_class = jnp.sum(ret_mask, axis=1).astype(jnp.int32)
+        owner = jnp.where(ret_mask, -1, owner)
+        final_free = (owner < 0) & real
+
+        # ---- split/merge telemetry over all buddy levels ----
+        # pad to a power of two so level-k reshapes tile exactly
+        P = 1
+        while P < N:
+            P *= 2
+        pad = jnp.zeros((C, P - N), bool)
+        bm0, bm_mid, bm_fin = (jnp.concatenate([b, pad], axis=1)
+                               for b in (free_bm0, free_bm_mid, final_free))
+        splits = jnp.zeros((C,), jnp.int32)
+        merges = jnp.zeros((C,), jnp.int32)
+        size = 2
+        while size <= P:
+            was0 = _aligned_free_runs(bm0, size)
+            mid = _aligned_free_runs(bm_mid, size)
+            fin = _aligned_free_runs(bm_fin, size)
+            splits = splits + jnp.sum(was0 & ~mid, axis=1).astype(jnp.int32)
+            merges = merges + jnp.sum(~mid & fin, axis=1).astype(jnp.int32)
+            size *= 2
+
+        # ---- rebuild the stack ascending from the post-free bitmap ----
+        class_rows = jnp.broadcast_to(
+            jnp.arange(C, dtype=jnp.int32)[:, None], (C, N))
+        final_rank = (jnp.cumsum(final_free, axis=1, dtype=jnp.int32)
+                      - final_free)
+        new_stack = jnp.full((C, N), NO_BLOCK, jnp.int32).at[
+            class_rows.reshape(-1),
+            jnp.where(final_free, final_rank, N).reshape(-1)].set(
+            jnp.broadcast_to(blk_ids[None, :], (C, N)).reshape(-1),
+            mode="drop")
+
+        new_state = FreeListState(
+            free_stack=new_stack,
+            free_top=top_after_alloc + freed_per_class,
+            owner=owner,
+            refcount=refcount,
+            capacity=state.capacity,
+            alloc_count=state.alloc_count + taken_per_class,
+            free_count=state.free_count + freed_per_class,
+            fail_count=state.fail_count + jnp.sum(
+                fail[:, None] * onehot, axis=0),
+            used=used_after_alloc - freed_per_class,
+            peak_used=peak,
+            split_count=state.split_count + splits,
+            merge_count=state.merge_count + merges,
         )
         return new_state, blocks, ok.astype(jnp.int32)
 
@@ -225,6 +434,7 @@ class BitmapPolicy:
 _POLICIES: dict[str, AllocatorPolicy] = {
     "freelist": FreeListPolicy(),
     "bitmap": BitmapPolicy(),
+    "buddy": BuddyPolicy(),
 }
 
 

@@ -41,8 +41,9 @@ from jax import lax
 
 from ..core.freelist import FreeListState
 from ..core.hmq import schedule
-from ..core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_NOP,
-                            OP_REFILL, RequestQueue, ResponseQueue)
+from ..core.packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC,
+                            OP_MALLOC_RUN, OP_NOP, OP_REFILL, RequestQueue,
+                            ResponseQueue)
 from ..core.support_core import ALLOC_BACKENDS, StepStats
 from .policies import AllocatorPolicy, get_policy
 
@@ -217,6 +218,20 @@ class BurstBuilder:
         """Speculative bulk malloc at refill priority — scheduled after
         every plain malloc, so it can never starve an on-path allocation."""
         return self._append(OP_REFILL, tenant, lane, n, where)
+
+    def malloc_run(self, tenant: TenantHandle, lane, n=1, where=None
+                   ) -> Ticket:
+        """Malloc with a CONTIGUITY hint: same grant/fail semantics and
+        priority as :meth:`malloc`, but a run-aware policy (``buddy``,
+        DESIGN.md §15) places the ``n`` blocks as one aligned
+        power-of-two run when the free map has one.  When the service's
+        resolved policy has no run support the packet is emitted as a
+        plain ``OP_MALLOC`` — the hint lowers at staging time, so the
+        fused free-list kernel never sees an opcode it does not know."""
+        policy = self._service.resolve_policy()
+        op = OP_MALLOC_RUN if getattr(policy, "supports_runs", False) \
+            else OP_MALLOC
+        return self._append(op, tenant, lane, n, where)
 
     def free(self, tenant: TenantHandle, lane, block, where=None) -> Ticket:
         """Return single block ids (deferred: allocatable next burst).
@@ -528,7 +543,8 @@ class AllocService:
         sched, unperm = schedule(queue)
         new_state, blocks, ok = policy.step_scheduled(state, sched, R, backend)
 
-        is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+        is_malloc = ((sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+                     | (sched.op == OP_MALLOC_RUN))
         is_free = sched.op == OP_FREE
         status_sched = jnp.where(is_malloc, ok,
                                  (sched.op != OP_NOP).astype(jnp.int32))
@@ -626,6 +642,20 @@ class AllocService:
                       "free_count", "fail_count"):
                 d[k] += rep[k]
         return out
+
+    def fragmentation_report(self, state: FreeListState,
+                             tenants: Optional[Sequence[TenantHandle]] = None,
+                             ) -> dict[str, dict]:
+        """Host-side per-tenant external-fragmentation snapshot
+        (DESIGN.md §15): free pages, largest contiguous / aligned free
+        run, ``external_frag`` in [0, 1], and the cumulative buddy
+        split/merge counters.  Same subset convention as
+        :meth:`tenant_report`; not jittable."""
+        from ..core.freelist import fragmentation_report
+        full = fragmentation_report(state, tenant_names=self.tenant_names())
+        names = [t.name for t in (self.tenants if tenants is None
+                                  else tenants)]
+        return {n: full[n] for n in names}
 
     def tenant_names(self) -> tuple[str, ...]:
         return tuple(self._tenants)

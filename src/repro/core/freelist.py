@@ -50,6 +50,12 @@ class FreeListState(NamedTuple):
     used: jnp.ndarray         # [C] int32 — currently allocated blocks
     peak_used: jnp.ndarray    # [C] int32 — high-water mark (paper Fig. 12: deferred
     #                                        free slightly raises this — measured post-alloc)
+    split_count: jnp.ndarray  # [C] int32 — cumulative buddy-node splits (a free
+    #                           aligned power-of-two run broken by an allocation;
+    #                           stays 0 under the freelist/bitmap policies)
+    merge_count: jnp.ndarray  # [C] int32 — cumulative buddy-pair merges (an
+    #                           aligned power-of-two run becoming fully free when
+    #                           this burst's frees rejoin both halves; 0 likewise)
 
     @property
     def num_classes(self) -> int:
@@ -122,12 +128,75 @@ def init_freelist(capacities: Sequence[int]) -> FreeListState:
         fail_count=zeros,
         used=zeros,
         peak_used=zeros,
+        split_count=zeros,
+        merge_count=zeros,
     )
 
 
 def num_free(state: FreeListState) -> jnp.ndarray:
     """Free blocks per class, shape [C]."""
     return state.free_top
+
+
+def fragmentation_report(state: FreeListState,
+                         tenant_names: Sequence[str] | None = None,
+                         ) -> dict[str, dict]:
+    """Host-side external-fragmentation snapshot per class (DESIGN.md §15).
+
+    For each size class the free set is read off the owner bitmap
+    (``owner < 0`` over real ids) and summarized as:
+
+    * ``free`` — free blocks (== ``free_top`` by I3);
+    * ``free_extents`` — number of maximal consecutive free-id runs (1 ==
+      all free space contiguous; the between-window compaction pass
+      exists to drive this down);
+    * ``largest_free_run`` — longest run of CONSECUTIVE free block ids, the
+      biggest contiguous extent a run-grant could hand out right now;
+    * ``largest_aligned_run`` — largest power-of-two run that is free AND
+      aligned to its own size (what a strict buddy tree could grant);
+    * ``external_frag`` — ``1 - largest_free_run / free`` (0 when nothing
+      is free): 0 means all free space is one extent, values near 1 mean
+      the free space is shattered into single pages;
+    * ``split_count`` / ``merge_count`` — the cumulative buddy telemetry
+      carried in the state (always 0 under freelist/bitmap).
+
+    Not jittable — telemetry and tests only, like ``debug_summary``.
+    """
+    owner = np.asarray(state.owner)
+    caps = np.asarray(state.capacity)
+    splits = np.asarray(state.split_count)
+    merges = np.asarray(state.merge_count)
+    out = {}
+    for c in range(state.num_classes):
+        name = tenant_names[c] if tenant_names and c < len(tenant_names) \
+            else f"class{c}"
+        free = owner[c, :caps[c]] < 0
+        n_free = int(free.sum())
+        # longest run of consecutive free ids + how many runs there are
+        longest = run = extents = 0
+        for f in free:
+            if f and run == 0:
+                extents += 1
+            run = run + 1 if f else 0
+            longest = max(longest, run)
+        # largest self-aligned power-of-two free run
+        aligned = 0
+        size = 1
+        while size <= caps[c]:
+            starts = np.arange(0, caps[c] - size + 1, size)
+            if any(free[s:s + size].all() for s in starts):
+                aligned = size
+            size *= 2
+        out[name] = {
+            "free": n_free,
+            "free_extents": extents,
+            "largest_free_run": longest,
+            "largest_aligned_run": aligned,
+            "external_frag": (1.0 - longest / n_free) if n_free else 0.0,
+            "split_count": int(splits[c]),
+            "merge_count": int(merges[c]),
+        }
+    return out
 
 
 class FreelistInvariantError(AssertionError):

@@ -24,7 +24,8 @@ from __future__ import annotations
 import jax.numpy as jnp
 from jax import lax
 
-from .packets import OP_FREE, OP_MALLOC, OP_NOP, OP_REFILL, RequestQueue
+from .packets import (OP_FREE, OP_MALLOC, OP_MALLOC_RUN, OP_NOP, OP_REFILL,
+                      RequestQueue)
 
 
 def round_robin_rank(lane: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
@@ -117,7 +118,10 @@ def queue_occupancy(queue: RequestQueue) -> dict[str, jnp.ndarray]:
     valid = queue.op != OP_NOP
     return {
         "total": jnp.sum(valid).astype(jnp.int32),
-        "malloc": jnp.sum(queue.op == OP_MALLOC).astype(jnp.int32),
+        # OP_MALLOC_RUN is a malloc with a contiguity hint: same priority
+        # class, counted with the plain mallocs here
+        "malloc": jnp.sum((queue.op == OP_MALLOC)
+                          | (queue.op == OP_MALLOC_RUN)).astype(jnp.int32),
         "refill": jnp.sum(queue.op == OP_REFILL).astype(jnp.int32),
         "free": jnp.sum(queue.op == OP_FREE).astype(jnp.int32),
     }

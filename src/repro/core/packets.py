@@ -21,6 +21,16 @@ Opcodes
 ``OP_FREE``   free blocks: ``arg >= 0`` frees the single block id ``arg``;
               ``arg == FREE_ALL`` frees every block owned by ``lane`` in
               ``size_class`` (sequence-completion path in paged KV)
+``OP_MALLOC_RUN``
+              malloc with a *contiguity hint*: identical grant/fail
+              semantics to ``OP_MALLOC`` (same malloc priority in the HMQ
+              schedule — any valid non-free/non-refill op rides the malloc
+              round-robin), but a run-aware policy (``buddy``,
+              DESIGN.md §15) places the ``count`` blocks as one
+              lowest-addressed aligned power-of-two run when the free map
+              has one, falling back to first-fit singles on shortfall.
+              Policies without run support treat it exactly as
+              ``OP_MALLOC`` — the hint degrades, never fails.
 """
 from __future__ import annotations
 
@@ -32,6 +42,7 @@ OP_NOP = 0
 OP_MALLOC = 1
 OP_FREE = 2
 OP_REFILL = 3
+OP_MALLOC_RUN = 4
 
 #: ``arg`` sentinel for OP_FREE meaning "free all blocks owned by lane".
 FREE_ALL = -1

@@ -381,8 +381,16 @@ def admit_prefill_many(
     tenants = tenants if tenants is not None else paged_tenants(cfg)
     svc = tenants.service
     burst = svc.new_burst()
-    t_kv = burst.malloc(tenants.kv, lanes,
-                        n=jnp.where(fits, n_pages, forced_fail))
+    # The KV pages are requested with the CONTIGUITY hint: under a
+    # run-aware policy (buddy, DESIGN.md §15) each lane's predicted page
+    # count lands as one aligned extent when the free map has one, so the
+    # block-table row reads as few long runs instead of scattered singles;
+    # under freelist/bitmap the hint lowers to a plain OP_MALLOC at staging
+    # time.  Grant/fail semantics are identical either way — a shortfall
+    # falls back to singles, never to a failure the other policies would
+    # not also report — so tokens stay bit-identical across policies.
+    t_kv = burst.malloc_run(tenants.kv, lanes,
+                            n=jnp.where(fits, n_pages, forced_fail))
     t_state = burst.malloc(tenants.state, lanes,
                            n=jnp.where(fits, jnp.int32(1), forced_fail)) \
         if cfg.state_slots else None
@@ -1210,6 +1218,163 @@ def kv_pages_in_use(cfg: PagedKVConfig, state: PagedKVState):
     in_use = np.zeros((cfg.num_pages,), bool)
     in_use[tbl[tbl != NO_BLOCK]] = True
     return in_use
+
+
+def extent_stats(block_tables, lanes=None) -> tuple[int, int]:
+    """Host-side ``(contiguous_extents, pages)`` over block-table rows.
+
+    An extent is a maximal run of CONSECUTIVE page ids inside one lane's
+    table prefix (``NO_BLOCK`` entries end the row).  ``pages / extents``
+    is the mean run length — 1.0 when every page is an island (the
+    freelist/bitmap steady state under churn), larger when a run-aware
+    policy (buddy, DESIGN.md §15) granted admission contiguous runs.
+    ``lanes`` restricts the count to a subset of rows (e.g. just-admitted
+    lanes).  Telemetry only; not jittable.
+    """
+    import numpy as np
+    tbl = np.asarray(block_tables)
+    if lanes is not None:
+        tbl = tbl[np.asarray(lanes)]
+    extents = pages = 0
+    for row in tbl:
+        held = row[row != NO_BLOCK]
+        if held.size == 0:
+            continue
+        pages += int(held.size)
+        extents += 1 + int(np.count_nonzero(np.diff(held) != 1))
+    return extents, pages
+
+
+def compact_kv(
+    cfg: PagedKVConfig,
+    state: PagedKVState,
+    tenants: Optional[PagedTenants] = None,
+    max_moves: Optional[int] = None,
+) -> tuple[PagedKVState, int]:
+    """Between-burst-window KV compaction pass (DESIGN.md §15).
+
+    Repacks sole-owner lane pages (device ``refcount == 1`` and
+    ``owner == lane`` — never aliased prefix pages, never
+    :data:`CACHE_OWNER` cache residents, never stash pages, which live
+    outside the block tables) toward one end of the page address space,
+    sliding past immovable residents: the movable pages take the lowest
+    (or highest) cells of the combined movable+free id set, so the torn
+    holes between them coalesce into one extent.  Both directions are
+    planned host-side and the pass keeps whichever scores better on
+    (largest free run, fewest free extents) — buddy packs low so its
+    survivors repack low, the freelist's LIFO stack pops high ids so its
+    survivors repack high — and it is a no-op when neither plan beats
+    the current state.
+
+    Each move copies the page's K/V payload, rewrites the one block-table
+    slot naming it, and migrates the page's allocator metadata (moves may
+    CHAIN — a vacated cell can be another move's destination; the
+    functional ``.at[dst].set(pages[src])`` gathers from the pre-pass
+    arrays, so chains are safe).  ``free_top``/``used`` and every counter
+    are unchanged, so I1–I6 hold verbatim afterwards
+    (:func:`validate_paged_kv` is the test oracle).  The free stack is
+    rebuilt in ascending id order, matching the buddy policy's
+    address-ordered convention.
+
+    Host-side planning + one device gather/scatter for the payload; call
+    it BETWEEN burst windows (it reads and rebuilds allocator rows that a
+    concurrent burst would race).  Returns ``(new_state, pages_moved)``;
+    ``max_moves`` caps the migration for incremental passes (the kept
+    moves are the ones nearest the packing end, which stay chain-safe
+    under truncation).
+    """
+    tenants = tenants if tenants is not None else paged_tenants(cfg)
+    cls = tenants.kv.size_class
+    alloc = state.alloc
+    owner = np.asarray(alloc.owner[cls])
+    refc = np.asarray(alloc.refcount[cls])
+    top = int(np.asarray(alloc.free_top)[cls])
+    tbl = np.asarray(state.block_tables)
+    free_ids = sorted(int(b) for b in np.asarray(alloc.free_stack[cls])[:top])
+    if not free_ids:
+        return state, 0
+
+    movable: dict[int, tuple[int, int]] = {}       # id -> (lane, slot)
+    for lane in range(tbl.shape[0]):
+        for slot, b in enumerate(tbl[lane]):
+            b = int(b)
+            if b != NO_BLOCK and owner[b] == lane and refc[b] == 1:
+                movable[b] = (lane, slot)
+    if not movable:
+        return state, 0
+
+    def run_score(ids) -> tuple[int, int]:
+        """(largest free run, -number of free extents): bigger is better."""
+        best = run = extents = 0
+        prev = None
+        for f in sorted(ids):
+            if prev is None or f != prev + 1:
+                extents += 1
+                run = 0
+            run += 1
+            best = max(best, run)
+            prev = f
+        return best, -extents
+
+    movable_ids = sorted(movable)
+    cells = sorted(set(movable_ids) | set(free_ids))
+    M = len(movable_ids)
+    cap = M if max_moves is None else min(max_moves, M)
+
+    def plan(direction: str):
+        targets = cells[:M] if direction == "low" else cells[-M:]
+        pairs = [(s, d) for s, d in zip(movable_ids, targets) if s != d]
+        if direction == "high":
+            pairs.reverse()            # keep the moves nearest the top end
+        pairs = pairs[:cap]
+        after = (set(free_ids) | {s for s, _ in pairs}) \
+            - {d for _, d in pairs}
+        return pairs, run_score(after), after
+
+    lo_pairs, lo_score, lo_after = plan("low")
+    hi_pairs, hi_score, hi_after = plan("high")
+    pairs, score, free_after = (lo_pairs, lo_score, lo_after) \
+        if lo_score >= hi_score else (hi_pairs, hi_score, hi_after)
+    if score <= run_score(free_ids) or not pairs:
+        return state, 0
+
+    src_np = np.asarray([s for s, _ in pairs], np.int32)
+    dst_np = np.asarray([d for _, d in pairs], np.int32)
+    src_ids = jnp.asarray(src_np)
+    dst_ids = jnp.asarray(dst_np)
+
+    # payload: KV-class block ids ARE page ids (registration order, §10);
+    # the RHS gathers from the PRE-pass arrays, so chained moves are safe
+    k_pages = state.k_pages.at[dst_ids].set(state.k_pages[src_ids])
+    v_pages = state.v_pages.at[dst_ids].set(state.v_pages[src_ids])
+
+    lanes_np = np.asarray([movable[s][0] for s, _ in pairs])
+    slots_np = np.asarray([movable[s][1] for s, _ in pairs])
+    tbl2 = tbl.copy()
+    tbl2[lanes_np, slots_np] = dst_np
+
+    # metadata: dst inherits the page's identity from the PRE-pass arrays;
+    # only cells vacated and not refilled become free
+    own2, ref2 = owner.copy(), refc.copy()
+    own2[dst_np] = owner[src_np]
+    ref2[dst_np] = refc[src_np]
+    vacated = np.asarray(sorted(set(src_np.tolist())
+                                - set(dst_np.tolist())), np.int32)
+    own2[vacated] = -1
+    ref2[vacated] = 0
+
+    row = np.asarray(alloc.free_stack[cls]).copy()
+    free_sorted = sorted(free_after)
+    row[: len(free_sorted)] = np.asarray(free_sorted, np.int32)
+
+    alloc = alloc._replace(
+        free_stack=alloc.free_stack.at[cls].set(jnp.asarray(row)),
+        owner=alloc.owner.at[cls].set(jnp.asarray(own2)),
+        refcount=alloc.refcount.at[cls].set(jnp.asarray(ref2)),
+    )
+    state = state._replace(alloc=alloc, block_tables=jnp.asarray(tbl2),
+                           k_pages=k_pages, v_pages=v_pages)
+    return state, len(pairs)
 
 
 def validate_paged_kv(cfg: PagedKVConfig, state: PagedKVState,

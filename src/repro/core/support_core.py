@@ -75,8 +75,8 @@ import jax
 import jax.numpy as jnp
 
 from .freelist import FreeListState
-from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_REFILL,
-                      RequestQueue)
+from .packets import (FREE_ALL, NO_BLOCK, OP_FREE, OP_MALLOC, OP_MALLOC_RUN,
+                      OP_REFILL, RequestQueue)
 
 #: Valid values for the ``backend`` argument / ``REPRO_ALLOC_BACKEND`` knob.
 ALLOC_BACKENDS = ("jnp", "kernel", "kernel-interpret")
@@ -197,7 +197,10 @@ def _step_scheduled_jnp(
 
     # OP_REFILL is a malloc with refill priority: identical grant semantics,
     # but `schedule` already placed every refill after every plain malloc.
-    is_malloc = (sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+    # OP_MALLOC_RUN is a malloc with a contiguity hint only a run-aware
+    # policy acts on; grant semantics here are identical to OP_MALLOC.
+    is_malloc = ((sched.op == OP_MALLOC) | (sched.op == OP_REFILL)
+                 | (sched.op == OP_MALLOC_RUN))
     is_free = sched.op == OP_FREE
     want = jnp.where(is_malloc, jnp.maximum(sched.arg, 0), 0)          # [Q]
     want = jnp.where(want <= R, want, 0)                                # overwide -> fail
@@ -277,5 +280,7 @@ def _step_scheduled_jnp(
         fail_count=state.fail_count + jnp.sum(fail[:, None] * onehot, 0),
         used=used,
         peak_used=peak,
+        split_count=state.split_count,   # free-list never splits/merges runs
+        merge_count=state.merge_count,
     )
     return new_state, blocks, ok.astype(jnp.int32)

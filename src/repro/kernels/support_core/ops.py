@@ -52,5 +52,9 @@ def support_core_burst(
         fail_count=new_fail[:, 0],
         used=new_used[:, 0],
         peak_used=new_peak[:, 0],
+        # the fused free-list kernel never splits/merges runs; the buddy
+        # telemetry counters pass through untouched (jnp-only policy)
+        split_count=state.split_count,
+        merge_count=state.merge_count,
     )
     return new_state, blocks, ok

@@ -154,6 +154,15 @@ def serve_loadgen(cfg, kvcfg, params, scfg, args) -> None:
           f"p99={report.p99_tpot_us / 1e3:.1f}ms | "
           f"queue depth mean={report.queue_depth_mean:.1f} "
           f"max={report.queue_depth_max}")
+    for i, e in enumerate(me.engines):
+        kv_frag = next((rep for name, rep in e.fragmentation_report().items()
+                        if name.endswith("kv_pages")), None)
+        if kv_frag is None:
+            continue
+        print(f"  e{i}: mean_run_len={e.stats.mean_run_len:.2f} "
+              f"external_frag={kv_frag['external_frag']:.2f} "
+              f"largest_free_run={kv_frag['largest_free_run']} "
+              f"splits={kv_frag['split_count']} merges={kv_frag['merge_count']}")
     if rec is not None:
         me.service.recorder = None
         trace = rec.finish(
@@ -349,6 +358,20 @@ def main() -> None:
               f"aliased_pages={s.aliased_pages} "
               f"hit_copy_bytes={s.cache_hit_copy_bytes} "
               f"hit_admit_us={s.hit_admit_us:.0f}")
+    # contiguity + fragmentation: what the policy's placement actually did
+    # to the address space (DESIGN.md §15)
+    frag = eng.fragmentation_report()
+    kv_frag = next((rep for name, rep in frag.items()
+                    if name.endswith("kv_pages")), None)
+    if kv_frag is not None:
+        print(f"contiguity: mean_run_len={s.mean_run_len:.2f} "
+              f"extents={s.contiguous_extents} "
+              f"external_frag={kv_frag['external_frag']:.2f} "
+              f"largest_free_run={kv_frag['largest_free_run']} "
+              f"splits={kv_frag['split_count']} "
+              f"merges={kv_frag['merge_count']} "
+              f"compactions={s.compactions} "
+              f"compaction_moves={s.compaction_moves}")
     # per-tenant view: the multi-tenant support-core claim, measured
     print(f"burst_occupancy={s.burst_occupancy:.2f} | tenants:")
     for name, rep in eng.tenant_report().items():

@@ -32,7 +32,11 @@ before -> after for every flag.
   REPRO_ALLOC_POLICY=       'freelist' (baseline: the paper's per-class LIFO
                             free stacks) | 'bitmap' — address-ordered
                             first-fit AllocatorPolicy (DESIGN.md §9; jnp
-                            backend only, the policy-parity CI leg)
+                            backend only, the policy-parity CI leg) |
+                            'buddy' — power-of-two buddy placement with
+                            contiguous multi-page run grants
+                            (OP_MALLOC_RUN) and split/merge telemetry
+                            (DESIGN.md §15; jnp backend only)
   REPRO_PREFIX_ALIAS=       'copy' (baseline: prefix-cache hits gather the
                             cached K/V into freshly allocated lane pages) |
                             'alias' — hits splice the cache-owned page ids
@@ -53,7 +57,7 @@ class PerfFlags:
     moe_local_dispatch: bool = False
     pool_layout: str = "pages"        # pages | layers | pages_hd
     alloc_backend: str = "jnp"        # jnp | kernel | kernel-interpret
-    alloc_policy: str = "freelist"    # freelist | bitmap
+    alloc_policy: str = "freelist"    # freelist | bitmap | buddy
     prefix_alias: str = "copy"        # copy | alias
 
     @classmethod

@@ -73,6 +73,16 @@ class EngineStats:
     #                                pages at hit admission (0 in alias mode)
     cache_hit_admits: int = 0      # admission batches containing >= 1 hit
     cache_hit_admit_us: float = 0.0  # wall time spent in those batches
+    # --- contiguity + fragmentation telemetry (DESIGN.md §15) ---
+    # Folded at admission over just-admitted lanes' block-table rows: an
+    # extent is a maximal run of CONSECUTIVE page ids, so
+    # extent_pages / contiguous_extents is the mean granted run length —
+    # 1.0 under freelist/bitmap churn, > 1 when the buddy policy serves
+    # admission's OP_MALLOC_RUN packets contiguously.
+    contiguous_extents: int = 0    # maximal consecutive-id runs admitted
+    extent_pages: int = 0          # pages covered by those runs
+    compactions: int = 0           # between-window compaction passes run
+    compaction_moves: int = 0      # pages migrated by those passes
 
     @property
     def hit_admit_us(self) -> float:
@@ -89,6 +99,14 @@ class EngineStats:
         prefix (tracked in BENCH_serving.json; 0.0 with the cache off)."""
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+    @property
+    def mean_run_len(self) -> float:
+        """Mean contiguous-run length of admitted KV pages (pages per
+        extent; 1.0 == every page an island — BENCH_serving.json)."""
+        if not self.contiguous_extents:
+            return 0.0
+        return self.extent_pages / self.contiguous_extents
 
     @property
     def stash_hit_rate(self) -> float:
@@ -321,6 +339,30 @@ class ServingEngine:
         service the other shards' tenants never leak into the report."""
         return self.service.tenant_report(self.state.paged.alloc,
                                           tenants=self.tenants.handles)
+
+    def fragmentation_report(self) -> dict[str, dict]:
+        """Per-tenant external-fragmentation snapshot of the live allocator
+        state (free pages, largest contiguous/aligned free run,
+        ``external_frag``, buddy split/merge counters — DESIGN.md §15).
+        Same tenant-subset convention as :meth:`tenant_report`."""
+        return self.service.fragmentation_report(self.state.paged.alloc,
+                                                 tenants=self.tenants.handles)
+
+    def compact(self, max_moves: Optional[int] = None) -> int:
+        """Run one between-burst-window KV compaction pass
+        (:func:`repro.core.paged_kv.compact_kv`): migrate sole-owner lane
+        pages into lower free holes so the free tail becomes contiguous
+        again.  Aliased prefix pages, cache residents, and stash pages
+        never move.  Call it between windows — never mid-burst.  Returns
+        the number of pages migrated."""
+        paged, moved = pkv.compact_kv(self.kvcfg, self.state.paged,
+                                      tenants=self.tenants,
+                                      max_moves=max_moves)
+        if moved:
+            self.state = self.state._replace(paged=paged)
+        self.stats.compactions += 1
+        self.stats.compaction_moves += moved
+        return moved
 
     # ---------------- prefix cache (DESIGN.md §11) ----------------
 
@@ -649,6 +691,14 @@ class ServingEngine:
             tokens=self.state.tokens.at[lanes_arr].set(next_tokens))
         ok = np.asarray(paged.active)[np.asarray(lanes_arr)]
         failed = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if not o]
+        if kv_chunks:
+            # contiguity telemetry over the lanes this batch installed: how
+            # well the policy served admission's run-grants (DESIGN.md §15)
+            ok_lanes = [int(l) for l, o in zip(np.asarray(lanes_arr), ok) if o]
+            if ok_lanes:
+                ext, pgs = pkv.extent_stats(paged.block_tables, ok_lanes)
+                self.stats.contiguous_extents += ext
+                self.stats.extent_pages += pgs
         if lane_prefix:
             # pin the spliced entries for every lane that actually admitted
             # (the device refcount bump was gated on the same success mask)

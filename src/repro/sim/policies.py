@@ -156,6 +156,20 @@ def speedmalloc_stash(stash_cap: int = 8, refill_batch: int = 4,
 #: default stash variant (matches the serving default: S=8, refill 4)
 SPEEDMALLOC_STASH = speedmalloc_stash(8, 4, name="speedmalloc-stash")
 
+#: SpeedMalloc with a buddy-system central design (DESIGN.md §15): the
+#: support-core walks a per-class buddy tree instead of popping a free
+#: list — splits on the way down, buddy-probe + merge on the way up.
+#: Grant/fail decisions are availability-only and therefore IDENTICAL to
+#: the free-list central (the serving stack's differential suites prove
+#: it); only the per-request service cycles differ, so this spec is
+#: SPEEDMALLOC with the tree-maintenance cost folded into the HMQ
+#: service times.
+SPEEDMALLOC_BUDDY = SPEEDMALLOC._replace(
+    name="speedmalloc-buddy",
+    service_malloc=18.0,       # + tree descent / split on demand
+    service_free=14.0,         # + buddy probe and merge cascade
+)
+
 #: IC-Malloc ablation variants for Fig. 17 (decoupled -> +signals -> +HMQ)
 IC_PLUS_SIGNALS = IC_MALLOC._replace(
     name="ic+signals", signal_cost=8.0, atomics_per_request=0.0,
@@ -165,7 +179,8 @@ SPEEDMALLOC_FULL = SPEEDMALLOC._replace(name="ic+signals+hmq")
 BASELINES = [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO]
 ALL_POLICIES = {p.name: p for p in
                 [JEMALLOC, TCMALLOC, MIMALLOC, MALLACC, MEMENTO,
-                 IC_MALLOC, SPEEDMALLOC, SPEEDMALLOC_STASH]}
+                 IC_MALLOC, SPEEDMALLOC, SPEEDMALLOC_STASH,
+                 SPEEDMALLOC_BUDDY]}
 
 
 # --------------------------------------------------------------------------

@@ -300,10 +300,15 @@ def test_validate_freelist_reports_tenant_names():
 # --------------------------------------------------------------------------
 
 def test_policy_registry():
-    assert set(ALLOC_POLICIES) == {"freelist", "bitmap"}
+    assert set(ALLOC_POLICIES) == {"freelist", "bitmap", "buddy"}
     assert get_policy("freelist").backends == ("jnp", "kernel",
                                                "kernel-interpret")
     assert get_policy("bitmap").backends == ("jnp",)
+    assert get_policy("buddy").backends == ("jnp",)
+    # only buddy places OP_MALLOC_RUN contiguity hints
+    assert get_policy("buddy").supports_runs
+    assert not get_policy("freelist").supports_runs
+    assert not get_policy("bitmap").supports_runs
     with pytest.raises(ValueError, match="unknown alloc policy"):
         get_policy("slab")
 

@@ -1,0 +1,329 @@
+"""Buddy policy + compaction (DESIGN.md §15): `OP_MALLOC_RUN` grants land
+as contiguous power-of-two-aligned runs (with a first-fit-singles fallback
+that never changes grant/fail), the split/merge telemetry counts the tree
+work a pointer-based buddy would do and recovers after free-all, hypothesis
+traces keep the invariants + report sanity, and the between-window
+compaction pass rewrites block tables without perturbing a single served
+value — directed and engine-level, stash pages in the pool throughout.
+
+Grant/fail parity with freelist/bitmap on logical client traces is covered
+by ``test_alloc_service.py::test_policy_suite_semantics`` (parametrized
+over all three policies); this file owns what is buddy-SPECIFIC."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, needs_hypothesis, settings, st
+
+import repro.core.paged_kv as pkv
+from repro.alloc import AllocService
+from repro.configs import smoke_config
+from repro.core.freelist import validate_freelist
+from repro.core.packets import NO_BLOCK
+from repro.models import init_params, make_paged_config
+from repro.serve.engine import AdmissionItem, ServingEngine
+from repro.serve.scheduler import make_scheduler_config
+
+
+def _granted(res, ticket) -> list[int]:
+    """The ticket's granted ids, NO_BLOCK padding stripped."""
+    return [int(x) for x in np.asarray(res.blocks_for(ticket))[0]
+            if x != NO_BLOCK]
+
+
+def _buddy_service(cap=32) -> AllocService:
+    svc = AllocService(policy="buddy", backend="jnp")
+    svc.register_tenant("kv_pages", capacity=cap)
+    return svc
+
+
+# --------------------------------------------------------------------------
+# directed placement
+# --------------------------------------------------------------------------
+
+def test_malloc_run_contiguous_and_aligned():
+    """A run grant takes the lowest-addressed fully-free aligned
+    2**ceil(log2(n)) run — taking its prefix IS the split."""
+    svc = _buddy_service(cap=32)
+    kv = svc.tenant("kv_pages")
+    state = svc.init_state()
+
+    b = svc.new_burst()
+    t0 = b.malloc_run(kv, 0, n=5)                    # rounds to an 8-run
+    state, res = svc.commit(state, b, max_blocks_per_req=8)
+    assert _granted(res, t0) == [0, 1, 2, 3, 4]
+
+    b = svc.new_burst()
+    t1 = b.malloc_run(kv, 1, n=3)                    # rounds to a 4-run
+    state, res = svc.commit(state, b, max_blocks_per_req=8)
+    got = _granted(res, t1)
+    # ids 5..7 are free but the 4-aligned run at 4 is torn (4 is used);
+    # the grant must skip to the run at 8 rather than scatter
+    assert got == [8, 9, 10]
+    assert got[0] % 4 == 0
+    validate_freelist(state)
+
+
+def test_malloc_run_falls_back_to_singles_not_failure():
+    """Contiguity is best-effort: when no aligned run survives, the grant
+    scatters over free singles — it NEVER fails for lack of contiguity."""
+    svc = _buddy_service(cap=8)
+    kv = svc.tenant("kv_pages")
+    state = svc.init_state()
+
+    b = svc.new_burst()
+    tickets = [b.malloc(kv, lane, n=1) for lane in range(8)]
+    state, res = svc.commit(state, b, max_blocks_per_req=4)
+    # free the odd ids: 4 free singles, zero aligned 4-runs (or 2-runs)
+    b = svc.new_burst()
+    for lane in (1, 3, 5, 7):
+        b.free_all(kv, lane)
+    state, _ = svc.commit(state, b)
+
+    b = svc.new_burst()
+    t = b.malloc_run(kv, 0, n=4)
+    state, res = svc.commit(state, b, max_blocks_per_req=4)
+    assert bool(np.asarray(res.ok_for(t))[0])
+    got = sorted(_granted(res, t))
+    # exactly the freed singles, address-ordered — availability decided
+    # the grant, fragmentation only decided the placement
+    assert got == [1, 3, 5, 7]
+    validate_freelist(state)
+
+
+def test_split_merge_counters_and_recovery():
+    """Splits tick when an aligned run is torn by a malloc, merges when the
+    free phase heals one; free-all restores the whole-pool aligned run."""
+    svc = _buddy_service(cap=16)
+    kv = svc.tenant("kv_pages")
+    state = svc.init_state()
+
+    b = svc.new_burst()
+    b.malloc_run(kv, 0, n=3)
+    state, _ = svc.commit(state, b, max_blocks_per_req=4)
+    rep = svc.fragmentation_report(state)["kv_pages"]
+    # a 3-grant (ids 0..2) out of a pristine 16-pool tears the 16/8/4
+    # nodes over id 0 plus BOTH 2-runs [0,1] and [2,3]: five splits
+    assert rep["split_count"] == 5
+    assert rep["merge_count"] == 0
+    assert rep["largest_aligned_run"] == 8
+    assert rep["free"] == 13
+
+    b = svc.new_burst()
+    b.free_all(kv, 0)
+    state, _ = svc.commit(state, b)
+    rep = svc.fragmentation_report(state)["kv_pages"]
+    # the free phase heals every torn node: merge work mirrors the splits
+    assert rep["merge_count"] == 5
+    assert rep["largest_aligned_run"] == 16
+    assert rep["largest_free_run"] == 16
+    assert rep["free_extents"] == 1
+    assert rep["external_frag"] == 0.0
+    validate_freelist(state)
+
+
+def test_buddy_rejects_kernel_backend():
+    svc = AllocService(policy="buddy", backend="kernel-interpret")
+    svc.register_tenant("kv_pages", capacity=8)
+    b = svc.new_burst()
+    b.malloc(svc.tenant("kv_pages"), 0, n=1)
+    with pytest.raises(ValueError, match="does not support backend"):
+        svc.commit(svc.init_state(), b)
+
+
+# --------------------------------------------------------------------------
+# hypothesis: invariants + telemetry sanity on random traces
+# --------------------------------------------------------------------------
+
+@needs_hypothesis
+@given(st.lists(st.tuples(st.sampled_from(["run", "malloc", "free_all"]),
+                          st.integers(0, 3),          # lane
+                          st.integers(1, 6)),         # n
+                min_size=1, max_size=24))
+@settings(deadline=None, max_examples=40)
+def test_buddy_trace_invariants(ops):
+    """Any op sequence: free-list invariants hold every burst, grants never
+    overlap live blocks, and the fragmentation report stays sane (counters
+    monotone, aligned run <= largest run <= free, frag in [0, 1])."""
+    svc = _buddy_service(cap=16)
+    kv = svc.tenant("kv_pages")
+    state = svc.init_state()
+    prev_splits = prev_merges = 0
+    for kind, lane, n in ops:
+        b = svc.new_burst()
+        if kind == "run":
+            t = b.malloc_run(kv, lane, n=n)
+        elif kind == "malloc":
+            t = b.malloc(kv, lane, n=n)
+        else:
+            t = b.free_all(kv, lane)
+        state, res = svc.commit(state, b, max_blocks_per_req=6)
+        validate_freelist(state, tenant_names=svc.tenant_names())
+        if kind != "free_all" and bool(np.asarray(res.ok_for(t))[0]):
+            got = _granted(res, t)
+            assert len(got) == n
+            assert len(set(got)) == n                 # no overlap
+            owner = np.asarray(state.owner)[0]
+            assert all(owner[g] == lane for g in got)
+        rep = svc.fragmentation_report(state)["kv_pages"]
+        assert rep["largest_aligned_run"] <= rep["largest_free_run"] \
+            <= rep["free"]
+        assert 0.0 <= rep["external_frag"] <= 1.0
+        assert rep["split_count"] >= prev_splits
+        assert rep["merge_count"] >= prev_merges
+        prev_splits, prev_merges = rep["split_count"], rep["merge_count"]
+    # drain everything: a fully-free pool is ONE aligned run again
+    b = svc.new_burst()
+    for lane in range(4):
+        b.free_all(kv, lane)
+    state, _ = svc.commit(state, b)
+    rep = svc.fragmentation_report(state)["kv_pages"]
+    assert rep["free"] == 16
+    assert rep["largest_aligned_run"] == 16
+    assert rep["external_frag"] == 0.0
+
+
+# --------------------------------------------------------------------------
+# compaction: block-table rewrites must be invisible to served values
+# --------------------------------------------------------------------------
+
+def _kvcfg(stash: int = 4) -> pkv.PagedKVConfig:
+    return pkv.PagedKVConfig(num_kv_layers=2, kv_heads=2, head_dim=4,
+                             page_size=4, num_pages=32, max_lanes=4,
+                             max_pages_per_lane=6, dtype=jnp.float32,
+                             stash_size=stash, stash_watermark=1,
+                             stash_refill=2)
+
+
+def _admit(cfg, state, rng, lanes, lens, policy="buddy"):
+    B, T = len(lanes), max(lens)
+    k = rng.randn(B, cfg.num_kv_layers, T, cfg.kv_heads,
+                  cfg.head_dim).astype(np.float32)
+    v = rng.randn(*k.shape).astype(np.float32)
+    state, _ = pkv.admit_prefill_many(
+        cfg, state, jnp.asarray(lanes, jnp.int32), jnp.asarray(k),
+        jnp.asarray(v), jnp.asarray(lens, jnp.int32), policy=policy)
+    return state
+
+
+def _gather_all(cfg, state):
+    out = []
+    for layer in range(cfg.num_kv_layers):
+        k, v, valid = pkv.gather_kv(cfg, state, layer)
+        m = np.asarray(valid)[..., None, None]
+        out.append((np.asarray(k) * m, np.asarray(v) * m, np.asarray(valid)))
+    return out
+
+
+@pytest.mark.parametrize("policy", ["buddy", "freelist"])
+def test_compaction_gather_bit_identical(policy):
+    """Churn -> holes -> compact: pages migrate, the free space coalesces,
+    and every valid K/V value gathers bit-identically — with live stash
+    pages (immovable walls) in the pool, under both placement policies."""
+    cfg = _kvcfg()
+    rng = np.random.RandomState(0)
+    state = pkv.init_paged_kv(cfg)
+    state = _admit(cfg, state, rng, [0, 1, 2, 3], [20, 4, 20, 4],
+                   policy=policy)
+    mask = np.zeros((cfg.max_lanes,), bool)
+    mask[[0, 2]] = True
+    state, _ = pkv.release_lanes(cfg, state, jnp.asarray(mask),
+                                 policy=policy)
+    state = pkv.clear_released_lanes(state, jnp.asarray(mask))
+    state = _admit(cfg, state, rng, [0, 2], [20, 4], policy=policy)
+    pkv.validate_paged_kv(cfg, state)
+
+    before = _gather_all(cfg, state)
+    tbl_before = np.asarray(state.block_tables).copy()
+    state2, moved = pkv.compact_kv(cfg, state)
+    pkv.validate_paged_kv(cfg, state2)
+    after = _gather_all(cfg, state2)
+    for (kb, vb, mb), (ka, va, ma) in zip(before, after):
+        np.testing.assert_array_equal(mb, ma)
+        np.testing.assert_array_equal(kb, ka)
+        np.testing.assert_array_equal(vb, va)
+    if moved:
+        assert not np.array_equal(tbl_before, np.asarray(state2.block_tables))
+    # compaction must never WORSEN the free-space shape
+    from repro.core.freelist import fragmentation_report
+    rep_b = fragmentation_report(state.alloc)
+    rep_a = fragmentation_report(state2.alloc)
+    key = next(iter(rep_a))
+    assert rep_a[key]["largest_free_run"] >= rep_b[key]["largest_free_run"]
+    assert rep_a[key]["free"] == rep_b[key]["free"]
+
+
+def test_compaction_max_moves_truncation_safe():
+    """A truncated pass (max_moves) applies a chain-safe prefix: invariants
+    and gathered values hold at every cap."""
+    cfg = _kvcfg()
+    rng = np.random.RandomState(1)
+    base = pkv.init_paged_kv(cfg)
+    base = _admit(cfg, base, rng, [0, 1, 2, 3], [20, 4, 20, 4])
+    mask = np.zeros((cfg.max_lanes,), bool)
+    mask[[0, 2]] = True
+    base, _ = pkv.release_lanes(cfg, base, jnp.asarray(mask), policy="buddy")
+    base = pkv.clear_released_lanes(base, jnp.asarray(mask))
+    base = _admit(cfg, base, rng, [0, 2], [20, 4])
+    before = _gather_all(cfg, base)
+    _, full_moves = pkv.compact_kv(cfg, base)
+    for cap in range(full_moves + 1):
+        st, moved = pkv.compact_kv(cfg, base, max_moves=cap)
+        assert moved <= cap
+        pkv.validate_paged_kv(cfg, st)
+        for (kb, vb, mb), (ka, va, ma) in zip(before,
+                                              _gather_all(cfg, st)):
+            np.testing.assert_array_equal(mb, ma)
+            np.testing.assert_array_equal(kb, ka)
+            np.testing.assert_array_equal(vb, va)
+
+
+# --------------------------------------------------------------------------
+# engine level: decode straight through a mid-stream compaction
+# --------------------------------------------------------------------------
+
+def test_engine_compaction_decode_bit_identical():
+    """Two buddy engines, same churned workload; one compacts mid-decode.
+    Every subsequent token must match the never-compacted twin, the I5/I6
+    validator must pass on the rewritten tables, and admission contiguity
+    must show runs (mean_run_len > 1)."""
+    cfg = smoke_config("deepseek-7b")
+    params = init_params(cfg, dtype=jnp.float32)
+    kvcfg = make_paged_config(cfg, seq_len=128, lanes=4, page_size=8,
+                              dtype=jnp.float32, stash_size=4,
+                              stash_watermark=1, stash_refill=2)
+    scfg = make_scheduler_config(cfg, kvcfg, max_prompt_len=64)
+
+    def build():
+        return ServingEngine(cfg, kvcfg, params, dtype=jnp.float32,
+                             sched_cfg=scfg, alloc_policy="buddy")
+
+    rng = np.random.RandomState(5)
+    prompts = {l: rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+               for l, n in [(0, 48), (1, 8), (2, 48), (3, 8)]}
+    re_prompts = {l: rng.randint(0, cfg.vocab_size, n).astype(np.int32)
+                  for l, n in [(0, 48), (2, 8)]}
+
+    def churn(eng):
+        eng.admit_many([AdmissionItem(lane=l, tokens=t)
+                        for l, t in prompts.items()])
+        eng.release([0, 2], completed=True)
+        eng.admit_many([AdmissionItem(lane=l, tokens=t)
+                        for l, t in re_prompts.items()])
+
+    a, b = build(), build()
+    churn(a)
+    churn(b)
+    assert a.stats.mean_run_len > 1.0
+
+    toks_a = [np.asarray(a.step())]
+    toks_b = [np.asarray(b.step())]
+    moved = a.compact()                     # between-window, mid-stream
+    assert moved > 0
+    pkv.validate_paged_kv(a.kvcfg, a.state.paged, tenants=a.tenants)
+    assert a.stats.compactions == 1
+    assert a.stats.compaction_moves == moved
+    for _ in range(3):
+        toks_a.append(np.asarray(a.step()))
+        toks_b.append(np.asarray(b.step()))
+    np.testing.assert_array_equal(np.stack(toks_a), np.stack(toks_b))

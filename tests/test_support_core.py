@@ -168,6 +168,8 @@ def dense_reference_step(state, queue, max_blocks_per_req=1):
         fail_count=state.fail_count + jnp.sum(fail[:, None] * onehot, 0),
         used=used,
         peak_used=peak,
+        split_count=state.split_count,
+        merge_count=state.merge_count,
     )
     resp_blocks = blocks[unperm]
     status_sched = jnp.where(is_malloc, ok.astype(jnp.int32),

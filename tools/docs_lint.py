@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Docs lint (CI `docs-lint` leg — stdlib only, no deps installed).
+
+Checks the documentation front door stays navigable:
+
+* every RELATIVE markdown link in ``README.md`` points at a file that
+  exists in the repo (external http(s) links are not fetched);
+* every ``DESIGN.md#anchor`` fragment the README references names a
+  heading that actually exists, using GitHub's slug rules (lowercase,
+  drop everything but word chars / hyphens / spaces, spaces to hyphens —
+  the ``§`` in ``## §15 ...`` is dropped, so the slug starts ``15-``);
+* ``README.md`` indexes EVERY ``##``-level DESIGN.md section, so adding
+  §16 without touching the index fails loudly.
+
+Exit status 0 on success; prints each failure and exits 1 otherwise.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s#]*)(?:#([^)\s]+))?\)")
+HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*$", re.M)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, strip non-word (keeping hyphens
+    and spaces), spaces become hyphens.  Inline code backticks vanish
+    with the other punctuation."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h, flags=re.UNICODE)
+    return h.replace(" ", "-")
+
+
+def main() -> int:
+    readme = (ROOT / "README.md").read_text()
+    design = (ROOT / "DESIGN.md").read_text()
+    anchors = {github_slug(m.group(2)) for m in HEADING_RE.finditer(design)}
+    sections = [m.group(2) for m in HEADING_RE.finditer(design)
+                if m.group(1) == "##"]
+
+    failures: list[str] = []
+    for m in LINK_RE.finditer(readme):
+        path, frag = m.group(1), m.group(2)
+        if path.startswith(("http://", "https://", "mailto:")):
+            continue
+        if path and not (ROOT / path).exists():
+            failures.append(f"README.md: broken link target {path!r}")
+            continue
+        if frag and path in ("", "DESIGN.md") and frag not in anchors:
+            failures.append(
+                f"README.md: anchor #{frag} not found in "
+                f"{path or 'README.md'} (existing DESIGN anchors use "
+                f"GitHub slugs like {sorted(anchors)[:2]}...)")
+
+    for heading in sections:
+        slug = github_slug(heading)
+        if f"DESIGN.md#{slug}" not in readme:
+            failures.append(
+                f"README.md: DESIGN.md section {heading!r} is missing "
+                f"from the index (expected a DESIGN.md#{slug} link)")
+
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)
+    if failures:
+        print(f"docs lint FAILED ({len(failures)} problem(s))",
+              file=sys.stderr)
+        return 1
+    print(f"docs lint passed: {len(sections)} DESIGN sections indexed, "
+          f"all README links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
